@@ -1,0 +1,62 @@
+"""Shared benchmark helpers: grid runner + CSV emission."""
+from __future__ import annotations
+
+import csv
+import io
+import itertools
+import sys
+import time
+from typing import Dict, Iterable, List, Sequence
+
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.federated import SurrogateLearner, run_task
+
+CFG = get_config("paper-charlm")
+
+
+def run_point(run: RunConfig | None = None, **fed_kw) -> Dict[str, float]:
+    fed_kw.setdefault("aggregation_goal",
+                      max(1, int(fed_kw.get("concurrency", 100) * 0.8)))
+    fed = FederatedConfig(**fed_kw)
+    run = run or RunConfig(target_perplexity=175.0)
+    res = run_task(CFG, fed, run, SurrogateLearner(CFG, fed, run))
+    out = res.summary()
+    out.update(concurrency=fed.concurrency, mode=0.0 if fed.mode == "sync" else 1.0,
+               client_lr=fed.client_lr, server_lr=fed.server_lr,
+               local_epochs=fed.local_epochs, batch=fed.client_batch_size)
+    out["shares_client_compute"], out["shares_upload"], \
+        out["shares_download"], out["shares_server"] = (
+            res.carbon.shares()[k] for k in
+            ("client_compute", "upload", "download", "server"))
+    return out
+
+
+def grid(**axes: Sequence) -> Iterable[Dict]:
+    keys = list(axes)
+    for vals in itertools.product(*axes.values()):
+        yield dict(zip(keys, vals))
+
+
+def write_csv(rows: List[Dict], path: str | None = None) -> str:
+    if not rows:
+        return ""
+    keys = sorted({k for r in rows for k in r})
+    buf = io.StringIO()
+    w = csv.DictWriter(buf, fieldnames=keys)
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    text = buf.getvalue()
+    if path:
+        with open(path, "w") as f:
+            f.write(text)
+    return text
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

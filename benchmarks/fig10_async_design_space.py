@@ -1,0 +1,38 @@
+"""Paper Figure 10: asynchronous design space — carbon vs time-to-target
+scatter grouped by concurrency; same-concurrency points follow a linear
+trajectory whose slope grows with concurrency."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import grid, run_point, write_csv
+from repro.core.predictor import fit_linear
+
+
+def run(fast: bool = False):
+    concs = (100, 400) if fast else (100, 200, 400, 800)
+    lrs = (0.03, 0.1) if fast else (0.01, 0.03, 0.1, 0.3)
+    rows = []
+    for g in grid(concurrency=concs, client_lr=lrs, local_epochs=(1, 5)):
+        rows.append(run_point(mode="async", **g))
+    slopes = {}
+    for c in concs:
+        pts = [r for r in rows if r["concurrency"] == c
+               and r["duration_h"] > 0.1]
+        if len(pts) >= 3:
+            f = fit_linear([p["duration_h"] for p in pts],
+                           [p["carbon_total_kg"] for p in pts])
+            slopes[c] = f.slope
+    ordered = [slopes[c] for c in sorted(slopes)]
+    derived = {
+        "slope_increases_with_concurrency": float(
+            all(np.diff(ordered) > 0)) if len(ordered) > 1 else 0.0,
+        **{f"slope_conc_{c}": s for c, s in slopes.items()},
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/fig10_async_design_space.csv"))
+    print(d)

@@ -1,0 +1,38 @@
+"""Paper Figure 1 + §5.2: synchronous design space.
+
+Sweep (concurrency x client_lr x local_epochs); each point is a training run
+with carbon (Y) vs rounds-to-target (X), grouped by concurrency. Expected
+paper relationships: both rounds and concurrency positively correlate with
+carbon; fixing concurrency the relationship is near-linear.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import grid, run_point, write_csv
+from repro.core.predictor import fit_linear
+
+
+def run(fast: bool = False):
+    concs = (50, 200) if fast else (50, 100, 200, 400)
+    lrs = (0.03, 0.1) if fast else (0.01, 0.03, 0.1, 0.3)
+    rows = []
+    for g in grid(concurrency=concs, client_lr=lrs, local_epochs=(1, 3)):
+        rows.append(run_point(mode="sync", **g))
+    # per-concurrency linearity of carbon vs rounds
+    fits = {}
+    for c in concs:
+        pts = [r for r in rows if r["concurrency"] == c and r["rounds"] > 1]
+        if len(pts) >= 3:
+            f = fit_linear([p["rounds"] for p in pts],
+                           [p["carbon_total_kg"] for p in pts])
+            fits[c] = f.r2
+    derived = float(np.mean(list(fits.values()))) if fits else 0.0
+    return rows, {"per_concurrency_linearity_r2_mean": derived, **{
+        f"r2_conc_{c}": v for c, v in fits.items()}}
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/fig1_design_space.csv"))
+    print(d)

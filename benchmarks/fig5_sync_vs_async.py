@@ -1,0 +1,32 @@
+"""Paper Figure 5: carbon of SyncFL vs AsyncFL to a target perplexity at
+concurrency = aggregation goal = 1000 (both tuned). Expected: async reaches
+the target faster (wall-clock) but emits MORE carbon; component shares
+~46-50% client compute / 27-29% upload / 22-24% download / small server."""
+from __future__ import annotations
+
+from benchmarks.common import run_point, write_csv
+
+
+def run(fast: bool = False):
+    conc = 400 if fast else 1000
+    rows = [run_point(mode="sync", concurrency=conc, aggregation_goal=conc),
+            run_point(mode="async", concurrency=conc, aggregation_goal=conc)]
+    sync, asyn = rows
+    derived = {
+        "async_faster": float(asyn["duration_h"] < sync["duration_h"]),
+        "async_more_carbon": float(
+            asyn["carbon_total_kg"] > sync["carbon_total_kg"]),
+        "carbon_ratio_async_over_sync":
+            asyn["carbon_total_kg"] / max(sync["carbon_total_kg"], 1e-9),
+        "sync_client_compute_share": sync["shares_client_compute"],
+        "sync_upload_share": sync["shares_upload"],
+        "sync_download_share": sync["shares_download"],
+        "sync_server_share": sync["shares_server"],
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/fig5_sync_vs_async.csv"))
+    print(d)

@@ -1,0 +1,36 @@
+"""Paper Figure 6: fix the training TIME (4h / 10h), measure carbon and the
+perplexity reached. Expected: async advances further early (lower ppl at 4h)
+at higher carbon; by 10h sync catches up to a similar perplexity."""
+from __future__ import annotations
+
+from benchmarks.common import run_point, write_csv
+from repro.configs import RunConfig
+
+
+def run(fast: bool = False):
+    conc = 400 if fast else 1000
+    rows = []
+    for hours in (4.0, 10.0):
+        for mode in ("sync", "async"):
+            run_cfg = RunConfig(target_perplexity=1.0,  # unreachable
+                                max_hours=hours)
+            r = run_point(run=run_cfg, mode=mode, concurrency=conc,
+                          aggregation_goal=conc)
+            r["fixed_hours"] = hours
+            rows.append(r)
+    by = {(r["fixed_hours"], r["mode"]): r for r in rows}
+    derived = {
+        "async_lower_ppl_at_4h": float(
+            by[(4.0, 1.0)]["perplexity"] < by[(4.0, 0.0)]["perplexity"]),
+        "async_more_carbon_at_4h": float(
+            by[(4.0, 1.0)]["carbon_total_kg"] > by[(4.0, 0.0)]["carbon_total_kg"]),
+        "sync_catchup_ratio_10h":
+            by[(10.0, 0.0)]["perplexity"] / max(by[(10.0, 1.0)]["perplexity"], 1e-9),
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/fig6_fixed_time.csv"))
+    print(d)

@@ -1,0 +1,33 @@
+"""Paper Figure 7 + §5.3: concurrency drives carbon; time-to-target shows
+diminishing returns (paper: no speedup past ~800)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_point, write_csv
+
+
+def run(fast: bool = False):
+    concs = (50, 200, 800) if fast else (50, 100, 200, 300, 800, 1000, 1300)
+    rows = [run_point(mode="sync", concurrency=c) for c in concs]
+    carbons = [r["carbon_total_kg"] for r in rows]
+    times = [r["duration_h"] for r in rows]
+    # 10x concurrency -> how much resource vs speedup (paper: ~10x vs 1.5-2x)
+    lo = rows[0]
+    hi = next(r for r in rows if r["concurrency"] >= 10 * lo["concurrency"])
+    derived = {
+        "carbon_monotone_in_concurrency": float(
+            all(np.diff(carbons) > -1e-9)),
+        "speedup_10x_concurrency": lo["duration_h"] / hi["duration_h"],
+        "carbon_ratio_10x_concurrency":
+            hi["carbon_total_kg"] / lo["carbon_total_kg"],
+        "diminishing_returns": float(
+            (lo["duration_h"] / hi["duration_h"]) < 5.0),
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/fig7_concurrency.csv"))
+    print(d)

@@ -1,0 +1,38 @@
+"""Paper Figures 8-9 + §5.3: the carbon PREDICTOR.
+
+Sync: carbon ≈ a * (rounds x concurrency); async: carbon ≈ a * (hours x
+concurrency). Fit per-component linear models and report R² (the paper
+reports high goodness-of-fit for download / upload / client compute)."""
+from __future__ import annotations
+
+from benchmarks.common import grid, run_point, write_csv
+from repro.core.predictor import fit_linear
+
+
+def run(fast: bool = False):
+    concs = (50, 200, 400) if fast else (50, 100, 200, 400, 800)
+    lrs = (0.05, 0.1) if fast else (0.03, 0.05, 0.1, 0.2)
+    rows = []
+    for mode in ("sync", "async"):
+        for g in grid(concurrency=concs, client_lr=lrs):
+            r = run_point(mode=mode, **g)
+            rows.append(r)
+    derived = {}
+    for mode, mcode in (("sync", 0.0), ("async", 1.0)):
+        pts = [r for r in rows if r["mode"] == mcode and r["rounds"] > 1]
+        x = [p["concurrency"] * (p["rounds"] if mode == "sync"
+                                 else p["duration_h"]) for p in pts]
+        for comp in ("client_compute_kg", "upload_kg", "download_kg",
+                     "total_kg"):
+            f = fit_linear(x, [p[f"carbon_{comp}" if comp == "total_kg"
+                               else comp] for p in pts])
+            derived[f"{mode}_r2_{comp}"] = f.r2
+            if comp == "total_kg":
+                derived[f"{mode}_slope_kg"] = f.slope
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/fig8_fig9_regression.csv"))
+    print(d)

@@ -1,0 +1,70 @@
+"""Roofline/bench harness for the assigned architectures: reads the dry-run
+JSON artifacts (results/dryrun_*.json) and emits the per-(arch x shape x
+mesh) roofline table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import write_csv
+
+FILES = ("results/dryrun_single_pod.json", "results/dryrun_multi_pod.json")
+
+
+def load_rows() -> List[Dict]:
+    rows = []
+    for f in FILES:
+        if os.path.exists(f):
+            for r in json.load(open(f)):
+                if r.get("status") == "ok":
+                    rows.append({k: v for k, v in r.items()
+                                 if not isinstance(v, dict)})
+                else:
+                    rows.append({"arch": r["arch"], "shape": r["shape"],
+                                 "mesh": r.get("mesh", ""),
+                                 "status": r.get("status")})
+    return rows
+
+
+def run(fast: bool = False):
+    rows = load_rows()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    derived = {
+        "n_pairs_ok": float(len(ok)),
+        "n_rows": float(len(rows)),
+        **{f"dominant_{k}": float(v) for k, v in doms.items()},
+    }
+    return rows, derived
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    cols = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "useful_ratio", "peak_mem_gb")
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in sorted(rows, key=lambda r: (r.get("mesh", ""), r.get("arch", ""),
+                                         r.get("shape", ""))):
+        if r.get("status") != "ok":
+            out.append(f"| {r.get('arch')} | {r.get('shape')} | "
+                       f"{r.get('mesh')} | - | - | - | "
+                       f"{r.get('status')} | - | - |")
+            continue
+        vals = []
+        for c in cols:
+            v = r.get(c, "")
+            if isinstance(v, float):
+                v = f"{v:.4g}"
+            vals.append(str(v))
+        out.append("| " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/roofline.csv"))
+    print(markdown_table(rows))
+    print(d)

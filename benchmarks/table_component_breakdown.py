@@ -1,0 +1,35 @@
+"""Paper §1/§5.1 headline table: component shares of total carbon.
+
+Target (paper, measured at scale): client+comm = ~97%, client compute
+~46-50%, upload ~27-29%, download ~22-24%, server ~1-2%."""
+from __future__ import annotations
+
+from benchmarks.common import run_point, write_csv
+
+PAPER = {"client_compute": (0.46, 0.50), "upload": (0.27, 0.29),
+         "download": (0.22, 0.24), "server": (0.01, 0.02)}
+SLACK = 0.07   # simulated fleet tolerance
+
+
+def run(fast: bool = False):
+    conc = 400 if fast else 1000
+    rows = []
+    for mode in ("sync", "async"):
+        r = run_point(mode=mode, concurrency=conc, aggregation_goal=conc)
+        rows.append(r)
+    derived = {}
+    for r, mode in zip(rows, ("sync", "async")):
+        for comp, (lo, hi) in PAPER.items():
+            share = r[f"shares_{comp}"]
+            derived[f"{mode}_{comp}"] = round(share, 4)
+            derived[f"{mode}_{comp}_in_band"] = float(
+                lo - SLACK <= share <= hi + SLACK)
+        derived[f"{mode}_client_plus_comm"] = round(
+            1.0 - r["shares_server"], 4)
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/table_component_breakdown.csv"))
+    print(d)

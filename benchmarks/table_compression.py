@@ -1,0 +1,32 @@
+"""Paper §6 compression estimate: if comm is a fraction c of total, int8
+(4x) compression reduces total by 1/((1-c) + c/4) — the paper's example at
+c=0.6 gives 1.82x. We MEASURE the factor end-to-end through the runtime
+(bytes on the wire + on-device (de)quant overhead + unchanged convergence)."""
+from __future__ import annotations
+
+from benchmarks.common import run_point, write_csv
+
+
+def run(fast: bool = False):
+    conc = 200 if fast else 500
+    base = run_point(mode="sync", concurrency=conc)
+    comp = run_point(mode="sync", concurrency=conc, compression="int8")
+    c = base["shares_upload"] + base["shares_download"]
+    analytic = 1.0 / ((1.0 - c) + c / 4.0)
+    measured = base["carbon_total_kg"] / comp["carbon_total_kg"]
+    rows = [dict(base, variant="none"), dict(comp, variant="int8")]
+    derived = {
+        "comm_share": c,
+        "analytic_reduction": analytic,
+        "measured_reduction": measured,
+        "within_20pct_of_analytic": float(
+            0.8 < measured / analytic < 1.25),
+        "paper_example_at_c06": 1.0 / (0.4 + 0.6 / 4.0),
+    }
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/table_compression.csv"))
+    print(d)

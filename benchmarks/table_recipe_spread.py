@@ -1,0 +1,40 @@
+"""Paper headline: iso-accuracy configurations can differ in carbon by up to
+~200x. Sweep a wide config space, keep runs that reached the SAME target
+perplexity, report max/min carbon spread + the Green-FL recipe winner."""
+from __future__ import annotations
+
+from benchmarks.common import grid, run_point, write_csv
+
+
+def run(fast: bool = False):
+    if fast:
+        space = grid(concurrency=(50, 800), client_lr=(0.1, 0.01),
+                     local_epochs=(1, 10))
+    else:
+        space = grid(concurrency=(50, 100, 300, 800, 1300, 1500),
+                     client_lr=(0.003, 0.01, 0.1, 0.3),
+                     local_epochs=(1, 3, 10, 20),
+                     client_batch_size=(8, 16))
+    rows = []
+    for g in space:
+        rows.append(run_point(mode="sync", **g))
+    reached = [r for r in rows if r["reached_target"] > 0]
+    derived = {"n_reached": float(len(reached))}
+    if len(reached) >= 2:
+        kgs = sorted(r["carbon_total_kg"] for r in reached)
+        best = min(reached, key=lambda r: r["carbon_total_kg"])
+        derived.update(
+            spread_max_over_min=kgs[-1] / max(kgs[0], 1e-9),
+            greenest_kg=kgs[0], dirtiest_kg=kgs[-1],
+            greenest_concurrency=best["concurrency"],
+            greenest_epochs=best["local_epochs"],
+            recipe_low_concurrency=float(best["concurrency"] <= 300),
+            recipe_low_epochs=float(best["local_epochs"] <= 3),
+        )
+    return rows, derived
+
+
+if __name__ == "__main__":
+    rows, d = run()
+    print(write_csv(rows, "results/table_recipe_spread.csv"))
+    print(d)

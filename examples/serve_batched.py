@@ -1,0 +1,12 @@
+"""Serve a reduced model with batched requests through prefill + decode —
+the same step functions the decode_32k / long_500k dry-run shapes lower,
+across three architecture families (dense / SSM / hybrid).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve
+
+for arch in ("smollm-135m", "rwkv6-7b", "recurrentgemma-2b"):
+    print(f"\n=== {arch} ===")
+    serve.main(["--arch", arch, "--batch", "4", "--prompt-len", "12",
+                "--gen", "6"])

@@ -1,0 +1,20 @@
+"""Generate results/roofline_table.md from the three dry-run JSONs."""
+import json, sys
+sys.path.insert(0, "src")
+from benchmarks.roofline_report import markdown_table
+
+out = []
+for title, f in [("Single pod 16x16 (baseline)", "results/dryrun_single_pod.json"),
+                 ("Two pods 2x16x16 (baseline)", "results/dryrun_multi_pod.json"),
+                 ("Single pod 16x16 (OPTIMIZED serving: --variant flash_decode)",
+                  "results/dryrun_single_pod_optimized.json")]:
+    try:
+        rows = json.load(open(f))
+    except FileNotFoundError:
+        continue
+    clean = []
+    for r in rows:
+        clean.append({k: v for k, v in r.items() if not isinstance(v, dict)})
+    out.append(f"### {title}\n\n" + markdown_table(clean) + "\n")
+open("results/roofline_table.md", "w").write("\n".join(out))
+print("wrote results/roofline_table.md")

@@ -1,0 +1,2 @@
+"""repro: Green Federated Learning (Yousefpour et al., 2023) in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from repro.configs.base import (
+    FederatedConfig, ModelConfig, MoEConfig, RunConfig, ShapeConfig,
+    INPUT_SHAPES, reduced,
+)
+from repro.configs.registry import ALL_ARCHS, ASSIGNED_ARCHS, all_configs, get_config

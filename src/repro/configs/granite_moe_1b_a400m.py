@@ -1,0 +1,21 @@
+"""Granite-3.0-1B-A400M. [hf:ibm-granite/granite-3.0-1b-a400m-base]
+
+MoE decoder: 24L, d_model=1024, 16 heads (GQA kv=8), expert d_ff=512,
+vocab=49155, 32 experts top-8.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, MOE
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family=MOE,
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    moe=MoEConfig(num_experts=32, top_k=8),
+    max_context=4096,
+    tie_embeddings=True,
+    citation="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

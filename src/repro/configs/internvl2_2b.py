@@ -1,0 +1,21 @@
+"""InternVL2-2B language backbone (InternLM2-1.8B arch). [arXiv:2404.16821]
+
+VLM: InternViT vision frontend is a STUB (precomputed patch embeddings via
+input_specs); this config is the 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92553 decoder that consumes interleaved visual+text tokens.
+"""
+from repro.configs.base import ModelConfig, VLM
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family=VLM,
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    num_frontend_tokens=256,   # one ViT tile -> 256 visual tokens
+    max_context=32768,
+    citation="arXiv:2404.16821",
+)

@@ -1,0 +1,21 @@
+"""Mistral-Nemo-12B base. [hf:mistralai/Mistral-Nemo-Base-2407]
+
+Dense decoder, 40L, d_model=5120, 32 heads (GQA kv=8, head_dim=128),
+d_ff=14336, vocab=131072, 128k context.
+"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b",
+    family=DENSE,
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    max_context=131072,
+    rope_theta=1e6,
+    citation="hf:mistralai/Mistral-Nemo-Base-2407",
+)

@@ -1,0 +1,22 @@
+"""Mixtral 8x22B. [arXiv:2401.04088]
+
+MoE decoder, 56L, d_model=6144, 48 heads (GQA kv=8), d_ff=16384,
+vocab=32768, 8 experts top-2, sliding-window attention.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, MOE
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family=MOE,
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    moe=MoEConfig(num_experts=8, top_k=2),
+    sliding_window=4096,
+    max_context=65536,
+    rope_theta=1e6,
+    citation="arXiv:2401.04088",
+)

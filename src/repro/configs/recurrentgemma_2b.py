@@ -1,0 +1,25 @@
+"""RecurrentGemma-2B (Griffin). [arXiv:2402.19427]
+
+Hybrid: RG-LRU recurrent blocks + local (sliding-window 2048) attention in a
+2:1 pattern, 26L, d_model=2560, 10 heads (GQA kv=1), d_ff=7680, vocab=256000.
+Sub-quadratic: native long_500k citizen.
+"""
+from repro.configs.base import ModelConfig, HYBRID
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family=HYBRID,
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    sliding_window=2048,
+    block_pattern=("recurrent", "recurrent", "local_attn"),
+    lru_width=2560,
+    max_context=1 << 20,
+    tie_embeddings=True,
+    citation="arXiv:2402.19427",
+)

@@ -1,0 +1,23 @@
+"""SeamlessM4T-medium text backbone. [arXiv:2308.11596]
+
+Encoder-decoder: 12L encoder + 12L decoder, d_model=1024, 16 heads (MHA),
+d_ff=4096, vocab=256206. The speech frontend (mel + conformer feature
+extractor) is a STUB: input_specs provides precomputed frame embeddings.
+No long_500k decode (enc-dec speech-to-text has no 500k-token decode regime).
+"""
+from repro.configs.base import ModelConfig, AUDIO
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family=AUDIO,
+    num_layers=12,            # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    num_frontend_tokens=1024,  # precomputed audio frame embeddings
+    max_context=4096,
+    citation="arXiv:2308.11596",
+)

@@ -1,0 +1,19 @@
+"""StableLM-2-1.6B. [hf:stabilityai/stablelm-2-1_6b]
+
+Dense decoder: 24L, d_model=2048, 32 heads (kv=32, MHA), d_ff=5632,
+vocab=100352.
+"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family=DENSE,
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=5632,
+    vocab_size=100352,
+    max_context=4096,
+    citation="hf:stabilityai/stablelm-2-1_6b",
+)

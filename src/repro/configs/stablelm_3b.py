@@ -1,0 +1,19 @@
+"""StableLM-2 ~3B-class config. [hf:stabilityai/stablelm-2-1_6b family]
+
+Dense decoder: 32L, d_model=2560, 32 heads (kv=32, MHA), d_ff=6912,
+vocab=50304.
+"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="stablelm-3b",
+    family=DENSE,
+    num_layers=32,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=6912,
+    vocab_size=50304,
+    max_context=4096,
+    citation="hf:stabilityai/stablelm-2-1_6b",
+)

@@ -1,0 +1,92 @@
+"""Green-FL advisor (paper C4): pre-deployment configuration search.
+
+Given constraints (deadline, target quality), simulate candidate configs
+with the surrogate learner + carbon estimator, return the Pareto frontier
+and the greenest feasible config. Encodes the paper's recipe as the default
+candidate grid: LOW concurrency, local epochs 1-3, tuned FedAdam — and
+exposes WHY each config wins (predicted rounds x concurrency).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
+from repro.federated.runtime import TaskResult, run_task
+from repro.federated.surrogate import SurrogateLearner
+
+
+@dataclass(frozen=True)
+class Recommendation:
+    fed: FederatedConfig
+    carbon_kg: float
+    duration_h: float
+    reached_target: bool
+    rounds: int
+
+    def why(self) -> str:
+        return (f"concurrency={self.fed.concurrency} x rounds={self.rounds} "
+                f"-> {self.carbon_kg:.2f} kgCO2e in {self.duration_h:.1f} h "
+                f"(E={self.fed.local_epochs}, lr_c={self.fed.client_lr}, "
+                f"lr_s={self.fed.server_lr}, {self.fed.mode})")
+
+
+DEFAULT_GRID = dict(
+    mode=("sync", "async"),
+    concurrency=(50, 100, 200, 400, 800),
+    local_epochs=(1, 3),
+    client_lr=(0.05, 0.1, 0.2),
+    compression=("none", "int8"),
+)
+
+
+class GreenAdvisor:
+    def __init__(self, model_cfg: ModelConfig, run: Optional[RunConfig] = None,
+                 seq_len: int = 64):
+        self.cfg = model_cfg
+        self.run = run or RunConfig()
+        self.seq_len = seq_len
+        self._cache: Dict[FederatedConfig, Recommendation] = {}
+
+    def evaluate(self, fed: FederatedConfig) -> Recommendation:
+        if fed in self._cache:
+            return self._cache[fed]
+        learner = SurrogateLearner(self.cfg, fed, self.run)
+        res = run_task(self.cfg, fed, self.run, learner,
+                       seq_len=self.seq_len)
+        rec = Recommendation(fed, res.carbon.total_kg, res.duration_h,
+                             res.reached_target, res.rounds)
+        self._cache[fed] = rec
+        return rec
+
+    def search(self, grid: Optional[Dict[str, Sequence]] = None,
+               max_hours: Optional[float] = None) -> List[Recommendation]:
+        grid = grid or DEFAULT_GRID
+        recs = []
+        keys = list(grid)
+        for vals in itertools.product(*grid.values()):
+            kw = dict(zip(keys, vals))
+            kw.setdefault("aggregation_goal",
+                          max(1, int(kw.get("concurrency", 100) * 0.8)))
+            fed = FederatedConfig(**kw)
+            recs.append(self.evaluate(fed))
+        feasible = [r for r in recs if r.reached_target and
+                    (max_hours is None or r.duration_h <= max_hours)]
+        feasible.sort(key=lambda r: r.carbon_kg)
+        return feasible or sorted(recs, key=lambda r: r.carbon_kg)
+
+    def recommend(self, **kw) -> Recommendation:
+        return self.search(**kw)[0]
+
+    @staticmethod
+    def pareto(recs: List[Recommendation]) -> List[Recommendation]:
+        """(duration, carbon) Pareto frontier among target-reaching configs."""
+        pts = sorted((r for r in recs if r.reached_target),
+                     key=lambda r: (r.duration_h, r.carbon_kg))
+        front, best = [], float("inf")
+        for r in pts:
+            if r.carbon_kg < best:
+                front.append(r)
+                best = r.carbon_kg
+        return front

@@ -1,0 +1,49 @@
+"""Carbon intensity model (paper §4.1 "Accounting for geography" + §4.2).
+
+Country-level carbon intensities (gCO2e/kWh, Our World in Data, 2020-2021
+reported years) map session energy to CO2e by the client's connecting
+country. Server energy uses the weighted average intensity of datacenter
+locations (weights = number of datacenters per country), times PUE 1.09.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping
+
+# gCO2e per kWh (OWID "carbon intensity of electricity", most recent year)
+CARBON_INTENSITY: Dict[str, float] = {
+    "WORLD": 475.0,
+    "US": 379.0, "IN": 708.0, "BR": 102.0, "ID": 717.0, "MX": 431.0,
+    "DE": 385.0, "GB": 257.0, "FR": 68.0, "JP": 479.0, "PH": 610.0,
+    "VN": 542.0, "TR": 464.0, "TH": 501.0, "EG": 469.0, "PK": 344.0,
+    "NG": 404.0, "BD": 574.0, "IT": 372.0, "ES": 193.0, "PL": 751.0,
+    "CA": 125.0, "AU": 531.0, "SE": 45.0, "NO": 26.0, "IE": 348.0,
+    "DK": 181.0, "SG": 489.0, "OTHER": 475.0,
+}
+
+PUE = 1.09  # paper §4.2 (Meta datacenters)
+
+# datacenter fleet: country -> number of datacenters (weights for the
+# weighted-average intensity model of §4.2)
+DATACENTER_LOCATIONS: Dict[str, int] = {
+    "US": 14, "IE": 1, "DK": 1, "SE": 1, "SG": 1,
+}
+
+
+def intensity(country: str) -> float:
+    return CARBON_INTENSITY.get(country, CARBON_INTENSITY["WORLD"])
+
+
+def datacenter_intensity() -> float:
+    total = sum(DATACENTER_LOCATIONS.values())
+    return sum(intensity(c) * n for c, n in DATACENTER_LOCATIONS.items()) / total
+
+
+def co2e_kg(energy_j: float, intensity_g_per_kwh: float) -> float:
+    """Joules -> kg CO2e at the given intensity."""
+    kwh = energy_j / 3.6e6
+    return kwh * intensity_g_per_kwh / 1000.0
+
+
+def mix_intensity(country_mix: Mapping[str, float]) -> float:
+    return sum(intensity(c) * w for c, w in country_mix.items()) / \
+        max(sum(country_mix.values()), 1e-12)

@@ -1,0 +1,83 @@
+"""TaskLog -> carbon footprint, per component (the paper's Figure 5 bars).
+
+Components:
+  client_compute  — CPU energy on phones, at the client country's intensity
+  upload          — device Wi-Fi tx + uplink network-infrastructure path
+  download        — device Wi-Fi rx + downlink network-infrastructure path
+  server          — Aggregator+Selector x PUE, at the DC-weighted intensity
+
+Network-infrastructure energy is attributed at the client country intensity
+(the access/metro portion dominates the per-bit energy and sits near the
+client). Dropped / timed-out sessions are charged for whatever they burned.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core import carbon
+from repro.core.energy import client_session_energy, server_energy_j
+from repro.core.network import DEFAULT_NETWORK, NetworkEnergyModel
+from repro.core.profiles import FLEET, DeviceProfile
+from repro.core.telemetry import ClientSession, TaskLog
+
+
+@dataclass(frozen=True)
+class CarbonBreakdown:
+    client_compute_kg: float
+    upload_kg: float
+    download_kg: float
+    server_kg: float
+
+    @property
+    def total_kg(self) -> float:
+        return (self.client_compute_kg + self.upload_kg + self.download_kg
+                + self.server_kg)
+
+    def shares(self) -> Dict[str, float]:
+        t = max(self.total_kg, 1e-18)
+        return {
+            "client_compute": self.client_compute_kg / t,
+            "upload": self.upload_kg / t,
+            "download": self.download_kg / t,
+            "server": self.server_kg / t,
+        }
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "client_compute_kg": self.client_compute_kg,
+            "upload_kg": self.upload_kg,
+            "download_kg": self.download_kg,
+            "server_kg": self.server_kg,
+            "total_kg": self.total_kg,
+        }
+
+
+@dataclass
+class CarbonEstimator:
+    network: NetworkEnergyModel = field(default_factory=lambda: DEFAULT_NETWORK)
+    profiles: Dict[str, DeviceProfile] = field(
+        default_factory=lambda: {p.name: p for p in FLEET})
+
+    def session_carbon(self, s: ClientSession) -> Dict[str, float]:
+        prof = self.profiles[s.device]
+        e = client_session_energy(prof, s.compute_s, s.download_s, s.upload_s)
+        ci = carbon.intensity(s.country)
+        net_up_j = self.network.transfer_energy_j(s.bytes_up)
+        net_down_j = self.network.transfer_energy_j(s.bytes_down)
+        return {
+            "client_compute_kg": carbon.co2e_kg(e.compute_j, ci),
+            "upload_kg": carbon.co2e_kg(e.upload_j + net_up_j, ci),
+            "download_kg": carbon.co2e_kg(e.download_j + net_down_j, ci),
+        }
+
+    def estimate(self, log: TaskLog) -> CarbonBreakdown:
+        cc = up = dn = 0.0
+        for s in log.sessions:
+            d = self.session_carbon(s)
+            cc += d["client_compute_kg"]
+            up += d["upload_kg"]
+            dn += d["download_kg"]
+        srv = carbon.co2e_kg(server_energy_j(log.duration_s),
+                             carbon.datacenter_intensity())
+        return CarbonBreakdown(cc, up, dn, srv)

@@ -1,0 +1,80 @@
+"""The client-runtime "logger" (paper §4.1) as a data model.
+
+Each FL session produces a ``ClientSession`` record with exactly the vitals
+the paper's production logger captures: device model, connecting country,
+download/compute/upload durations, bytes moved, and the outcome (completed,
+dropped mid-round, or timed out at 4 minutes). Dropped/timed-out clients
+still burned energy — the estimator charges them (paper: "our methodology
+also accounts for the clients that drop out or time out").
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ClientSession:
+    client_id: int
+    round_idx: int               # sync round (async: server version at start)
+    device: str                  # DeviceProfile.name
+    country: str
+    download_s: float
+    compute_s: float
+    upload_s: float
+    bytes_down: float
+    bytes_up: float
+    start_t: float               # task clock, seconds
+    end_t: float
+    outcome: str                 # "completed" | "dropped" | "timeout"
+    staleness: int = 0           # async: server updates since model was sent
+
+    @property
+    def completed(self) -> bool:
+        return self.outcome == "completed"
+
+
+@dataclass
+class TaskLog:
+    """Accumulates everything the carbon estimator needs for one FL task."""
+
+    sessions: List[ClientSession] = field(default_factory=list)
+    rounds: int = 0                       # server model updates so far
+    duration_s: float = 0.0               # task wall-clock so far
+    server_busy_s: float = 0.0            # == duration (servers stay up)
+    eval_history: List[Dict] = field(default_factory=list)
+
+    def log_session(self, s: ClientSession) -> None:
+        self.sessions.append(s)
+
+    def log_round(self, t: float) -> None:
+        self.rounds += 1
+        self.duration_s = max(self.duration_s, t)
+
+    def log_eval(self, t: float, round_idx: int, perplexity: float,
+                 smoothed: float) -> None:
+        self.eval_history.append(dict(t=t, round=round_idx,
+                                      perplexity=perplexity, smoothed=smoothed))
+
+    # ------------------------------------------------------------ summaries
+    def completed_sessions(self) -> int:
+        return sum(1 for s in self.sessions if s.completed)
+
+    def participation(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for s in self.sessions:
+            out[s.outcome] = out.get(s.outcome, 0) + 1
+        return out
+
+    def total_bytes(self) -> Dict[str, float]:
+        return {
+            "up": float(sum(s.bytes_up for s in self.sessions)),
+            "down": float(sum(s.bytes_down for s in self.sessions)),
+        }
+
+    def mean_staleness(self) -> float:
+        ss = [s.staleness for s in self.sessions if s.completed]
+        return float(np.mean(ss)) if ss else 0.0

@@ -1,0 +1,1 @@
+from repro.data.synthetic import FederatedDataset, client_num_samples

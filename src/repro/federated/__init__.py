@@ -1,0 +1,3 @@
+from repro.federated.runtime import TaskResult, run_async, run_sync, run_task
+from repro.federated.real import RealLearner
+from repro.federated.surrogate import SurrogateLearner

@@ -1,0 +1,62 @@
+"""Client-side local training (paper §3.3): plain SGD, E local epochs.
+
+``make_client_update`` builds a jitted function running a fixed number of
+local SGD steps via ``lax.scan`` (stacked batches + per-step mask so ragged
+client datasets fit one compiled shape) and returning the model DELTA and
+the example count (FedAvg weighting).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def make_client_update(loss_fn: Callable, client_lr: float,
+                       max_grad_norm: float = 10.0) -> Callable:
+    """loss_fn(params, batch) -> (loss, metrics).
+
+    Returns f(params, batches, step_mask) -> (delta, total_examples, mean_loss)
+    where batches is a dict of (n_steps, B, ...) stacked arrays and
+    step_mask (n_steps,) zeroes out padding steps.
+    """
+
+    grad_fn = jax.grad(lambda p, b: loss_fn(p, b)[0])
+
+    def one_step(params, batch_and_mask):
+        batch, m = batch_and_mask
+        g = grad_fn(params, batch)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(v.astype(jnp.float32)))
+                          for v in g.values()))
+        scale = jnp.minimum(1.0, max_grad_norm / (gn + 1e-9)) * m
+        new = {k: params[k] - (client_lr * scale) * g[k].astype(params[k].dtype)
+               for k in params}
+        loss = loss_fn(params, batch)[0]
+        return new, loss * m
+
+    def client_update(params, batches, step_mask):
+        final, losses = lax.scan(
+            one_step, params, (batches, step_mask.astype(jnp.float32)))
+        delta = {k: final[k] - params[k] for k in params}
+        n_steps = jnp.maximum(jnp.sum(step_mask), 1.0)
+        return delta, jnp.sum(losses) / n_steps
+
+    return jax.jit(client_update)
+
+
+def stack_batches(batches, n_steps: int):
+    """Pad a list of batch dicts to n_steps and build the step mask."""
+    import numpy as np
+    assert batches, "client has no data"
+    batches = batches[:n_steps]
+    mask = np.zeros((n_steps,), np.float32)
+    mask[: len(batches)] = 1.0
+    out = {}
+    for k in batches[0]:
+        arrs = [b[k] for b in batches]
+        while len(arrs) < n_steps:
+            arrs.append(np.zeros_like(arrs[0]))
+        out[k] = np.stack(arrs)
+    return out, mask

@@ -1,0 +1,159 @@
+"""Session event sampling: device heterogeneity -> durations -> outcomes.
+
+This is the simulator twin of the paper's production logger: for every
+selected client we draw a device (fleet popularity weights) and a country
+(participation mix), derive download/compute/upload durations from model
+bytes, client data volume and device throughput, then resolve the outcome
+(completed / dropped mid-session / 4-minute timeout). All durations carry a
+lognormal jitter (thermal throttling, background load, link variance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import FederatedConfig, ModelConfig
+from repro.core.profiles import (COUNTRY_MIX, DOWNLOAD_BPS, FLEET, UPLOAD_BPS,
+                                 DeviceProfile)
+from repro.data.synthetic import client_num_samples
+from repro.kernels.int8_quant.ops import wire_bytes
+
+_JITTER_SIGMA = 0.35
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    """splitmix64 on python ints — cheap deterministic per-session
+    randomness (np.random.default_rng construction is ~50us; this is <1us)."""
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return x ^ (x >> 31)
+
+
+_INV53 = 1.0 / float(1 << 53)
+
+
+def _uniforms(seed: int, client_id: int, round_idx: int, n: int):
+    base = (((seed * 1_000_003 + round_idx) & 0xFFFFFFFF) * 2_654_435_761
+            + (client_id & _M64) * 97) & _M64
+    return [(_splitmix64((base + i * 0x9E3779B97F4A7C15) & _M64) >> 11)
+            * _INV53 for i in range(n)]
+
+
+def _lognormal(u1: float, u2: float, sigma: float) -> float:
+    # Box-Muller
+    r = math.sqrt(-2.0 * math.log(max(u1, 1e-12)))
+    return math.exp(sigma * r * math.cos(2.0 * math.pi * u2))
+
+
+def _pareto_samples(u: float, mean: float = 34.0, shape: float = 1.8) -> int:
+    # inverse-CDF Lomax with E = scale/(shape-1)
+    scale = mean * (shape - 1.0)
+    n = int(scale * ((max(1.0 - u, 1e-12)) ** (-1.0 / shape) - 1.0)) + 1
+    return max(2, min(n, 4096))
+
+
+@dataclass(frozen=True)
+class SessionPlan:
+    """Durations + bytes for one client session, before outcome resolution."""
+    client_id: int
+    device: DeviceProfile
+    country: str
+    download_s: float
+    compute_s: float
+    upload_s: float
+    bytes_down: float
+    bytes_up: float
+    n_examples: int
+
+
+class SessionSampler:
+    def __init__(self, model_cfg: ModelConfig, fed: FederatedConfig,
+                 seq_len: int, param_bytes: Optional[float] = None):
+        self.cfg = model_cfg
+        self.fed = fed
+        self.seq_len = seq_len
+        n_params = model_cfg.param_count()
+        self.n_params = n_params
+        full = 4.0 * n_params  # f32 on the wire
+        if fed.compression == "int8":
+            self.bytes_down = float(wire_bytes(n_params, fed.quant_block))
+            self.bytes_up = float(wire_bytes(n_params, fed.quant_block))
+            self.compute_overhead = 1.05   # on-device (de)quant cost
+        else:
+            self.bytes_down = param_bytes or full
+            self.bytes_up = param_bytes or full
+            self.compute_overhead = 1.0
+        self.flops_per_token = model_cfg.train_flops_per_token()
+        self._countries = list(COUNTRY_MIX)
+        cw = np.asarray(list(COUNTRY_MIX.values()), np.float64)
+        self._ccum = np.cumsum(cw / cw.sum())
+        dw = np.asarray([p.weight for p in FLEET], np.float64)
+        self._dcum = np.cumsum(dw / dw.sum())
+
+    def plan(self, client_id: int, round_idx: int) -> SessionPlan:
+        u = _uniforms(self.fed.seed, client_id, round_idx, 10)
+        device = FLEET[int(np.searchsorted(self._dcum, u[0]))]
+        country = self._countries[int(np.searchsorted(self._ccum, u[1]))]
+        n_ex = _pareto_samples(
+            _uniforms(self.fed.seed, client_id, 0, 1)[0])
+        tokens = n_ex * self.seq_len * self.fed.local_epochs
+        compute_s = (tokens * self.flops_per_token * self.compute_overhead
+                     / (device.train_gflops * 1e9)) \
+            * _lognormal(u[2], u[3], _JITTER_SIGMA)
+        download_s = 8.0 * self.bytes_down / DOWNLOAD_BPS \
+            * _lognormal(u[4], u[5], _JITTER_SIGMA)
+        upload_s = 8.0 * self.bytes_up / UPLOAD_BPS \
+            * _lognormal(u[6], u[7], _JITTER_SIGMA)
+        return SessionPlan(client_id, device, country, download_s, compute_s,
+                           upload_s, self.bytes_down, self.bytes_up, n_ex)
+
+    def resolve(self, plan: SessionPlan, round_idx: int, start_t: float,
+                deadline: Optional[float] = None
+                ) -> Tuple[dict, bool]:
+        """Resolve the outcome; returns (session_kwargs, contributed).
+
+        deadline: absolute task-clock time after which the round no longer
+        accepts results (sync FL round close / over-selection cancel)."""
+        fed = self.fed
+        uu = _uniforms(fed.seed, plan.client_id, round_idx + 1_000_000, 2)
+        full_d, full_c, full_u = plan.download_s, plan.compute_s, plan.upload_s
+        end = start_t + full_d + full_c + full_u
+        outcome = "completed"
+        d, c, u = full_d, full_c, full_u
+
+        if uu[0] < fed.dropout_rate:
+            # device stopped being idle/charging at a random point
+            frac = uu[1]
+            burn = frac * (full_d + full_c + full_u)
+            d = min(full_d, burn)
+            c = min(full_c, max(0.0, burn - full_d))
+            u = min(full_u, max(0.0, burn - full_d - full_c))
+            end = start_t + burn
+            outcome = "dropped"
+        elif full_c > fed.client_timeout_s:
+            # the paper's 4-minute training timeout
+            c = fed.client_timeout_s
+            u = 0.0
+            end = start_t + d + c
+            outcome = "timeout"
+        elif deadline is not None and end > deadline:
+            burn = max(0.0, deadline - start_t)
+            d = min(full_d, burn)
+            c = min(full_c, max(0.0, burn - full_d))
+            u = min(full_u, max(0.0, burn - full_d - full_c))
+            end = deadline
+            outcome = "dropped"
+
+        kw = dict(client_id=plan.client_id, round_idx=round_idx,
+                  device=plan.device.name, country=plan.country,
+                  download_s=d, compute_s=c, upload_s=u,
+                  bytes_down=plan.bytes_down if d > 0 else 0.0,
+                  bytes_up=plan.bytes_up if outcome == "completed" else 0.0,
+                  start_t=start_t, end_t=end, outcome=outcome)
+        return kw, outcome == "completed"

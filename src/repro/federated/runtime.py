@@ -1,0 +1,227 @@
+"""The FL task runtime: synchronous (FedAvg) and asynchronous (FedBuff)
+event loops with full carbon telemetry (paper §3.1).
+
+Both loops drive a pluggable learner (RealLearner or SurrogateLearner)
+through the same PAPAYA-shaped protocol:
+
+sync  — each round selects `concurrency` clients ("users per round"); the
+        round closes when the `aggregation_goal`-th result arrives; clients
+        still running are cancelled (over-selection waste is charged);
+        server updates once per round.
+async — `concurrency` clients are always in flight; a finished client's
+        (staleness-weighted) delta joins the buffer; every
+        `aggregation_goal` arrivals the server updates and later clients
+        train on the newer model (FedBuff). Stragglers never block.
+
+The returned TaskLog contains every session's vitals; CarbonEstimator turns
+it into the paper's component breakdown.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
+from repro.core.estimator import CarbonBreakdown, CarbonEstimator
+from repro.core.telemetry import ClientSession, TaskLog
+from repro.federated.events import SessionSampler
+
+_SERVER_AGG_S = 2.0     # server-side aggregation latency per update
+
+
+@dataclass
+class TaskResult:
+    log: TaskLog
+    carbon: CarbonBreakdown
+    reached_target: bool
+    rounds: int
+    duration_h: float
+    final_perplexity: float
+    smoothed_perplexity: float
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "rounds": self.rounds,
+            "duration_h": self.duration_h,
+            "reached_target": float(self.reached_target),
+            "perplexity": self.final_perplexity,
+            "carbon_total_kg": self.carbon.total_kg,
+            **{k: v for k, v in self.carbon.as_dict().items()},
+            "sessions": float(len(self.log.sessions)),
+        }
+
+
+class _Stopper:
+    """Paper §3.2: stop when smoothed test perplexity has been at/below the
+    target for `patience` consecutive evals, or at the time limit."""
+
+    def __init__(self, run: RunConfig):
+        self.run = run
+        self.smoothed: Optional[float] = None
+        self.hits = 0
+        self.reached = False
+
+    def update(self, ppl: float) -> None:
+        a = self.run.ema_alpha
+        self.smoothed = ppl if self.smoothed is None else \
+            a * ppl + (1 - a) * self.smoothed
+        if self.smoothed <= self.run.target_perplexity:
+            self.hits += 1
+        else:
+            self.hits = 0
+        if self.hits >= self.run.patience_rounds:
+            self.reached = True
+
+    def out_of_budget(self, t_s: float, rounds: int) -> bool:
+        return (t_s >= self.run.max_hours * 3600.0
+                or rounds >= self.run.max_rounds)
+
+
+def _select_cohort(rng: np.random.Generator, k: int, population: int,
+                   exclude_eval: int = 10_000_000) -> np.ndarray:
+    """Coordinator client selection: eligible devices, unique per round."""
+    return rng.choice(exclude_eval, size=k, replace=False) % population
+
+
+def run_sync(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
+             learner, seq_len: int = 64,
+             estimator: Optional[CarbonEstimator] = None) -> TaskResult:
+    assert fed.mode == "sync"
+    sampler = SessionSampler(model_cfg, fed, seq_len)
+    est = estimator or CarbonEstimator()
+    log = TaskLog()
+    stop = _Stopper(run)
+    rng = np.random.default_rng(fed.seed + 1)
+    t = 0.0
+    rounds = 0
+    ppl = float(model_cfg.vocab_size)
+
+    while True:
+        cohort = _select_cohort(rng, fed.concurrency, population=5_000_000)
+        plans = [sampler.plan(int(c), rounds) for c in cohort]
+        # pass 1: tentative outcomes, find when the goal-th result arrives
+        tentative = [sampler.resolve(p, rounds, t) for p in plans]
+        ends = sorted(s["end_t"] for s, ok in tentative if ok)
+        goal = min(fed.aggregation_goal, fed.concurrency)
+        if len(ends) >= goal:
+            round_end = ends[goal - 1]
+            failed = False
+        elif ends:
+            # dropouts ate the over-selection slack: the round closes at the
+            # last survivor (production would hit the round deadline) and the
+            # server updates with what it received
+            round_end = ends[-1]
+            failed = False
+        else:
+            round_end = max((s["end_t"] for s, _ in tentative), default=t)
+            failed = True
+        # pass 2: sessions against the round deadline (cancel stragglers)
+        contributors: List[int] = []
+        for p in plans:
+            kw, ok = sampler.resolve(p, rounds, t, deadline=round_end)
+            log.log_session(ClientSession(**kw))
+            if ok and len(contributors) < goal:
+                contributors.append(p.client_id)
+        t = round_end + _SERVER_AGG_S
+        rounds += 1
+        if not failed and contributors:
+            deltas, weights = [], []
+            if getattr(learner, "real", True):
+                if hasattr(learner, "client_deltas"):
+                    deltas, weights = learner.client_deltas(contributors)
+                else:
+                    for c in contributors:
+                        d, w = learner.client_delta(c, None)
+                        deltas.append(d)
+                        weights.append(w)
+            else:
+                deltas, weights = [None], [1.0]
+            learner.apply(deltas, weights, n_contributors=len(contributors))
+            ppl = learner.eval_perplexity()
+            stop.update(ppl)
+        log.log_round(t)
+        log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
+        if stop.reached or stop.out_of_budget(t, rounds):
+            break
+
+    return TaskResult(log, est.estimate(log), stop.reached, rounds,
+                      t / 3600.0, ppl, stop.smoothed or ppl)
+
+
+def run_async(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
+              learner, seq_len: int = 64,
+              estimator: Optional[CarbonEstimator] = None) -> TaskResult:
+    """FedBuff: always-`concurrency` in-flight clients, buffer size =
+    aggregation_goal, staleness-weighted aggregation."""
+    assert fed.mode == "async"
+    sampler = SessionSampler(model_cfg, fed, seq_len)
+    est = estimator or CarbonEstimator()
+    log = TaskLog()
+    stop = _Stopper(run)
+    rng = np.random.default_rng(fed.seed + 2)
+    t = 0.0
+    version = 0
+    ppl = float(model_cfg.vocab_size)
+    buffer: List[Tuple[int, int]] = []          # (client_id, version_sent)
+    heap: List[Tuple[float, int, int, object]] = []   # (end, cid, ver, plan)
+    counter = 0
+
+    def dispatch(cid: int, now: float):
+        nonlocal counter
+        plan = sampler.plan(cid, version)
+        kw, ok = sampler.resolve(plan, version, now)
+        heapq.heappush(heap, (kw["end_t"], counter, cid, (kw, ok, version)))
+        counter += 1
+
+    for c in _select_cohort(rng, fed.concurrency, population=5_000_000):
+        dispatch(int(c), t + float(rng.uniform(0, 5.0)))
+
+    while heap:
+        if stop.out_of_budget(t, version):
+            break
+        end, _, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
+        t = max(t, end)
+        log.log_session(ClientSession(staleness=version - ver_sent, **kw))
+        if ok:
+            buffer.append((cid, ver_sent))
+            if len(buffer) >= fed.aggregation_goal:
+                staleness = [version - v for _, v in buffer]
+                deltas, weights = [], []
+                is_real = getattr(learner, "real", True)
+                if is_real:
+                    for bc, bv in buffer:
+                        d, w = learner.client_delta(bc, bv)
+                        deltas.append(d)
+                        weights.append(w)
+                else:
+                    deltas, weights = [None], [1.0]
+                kw_extra = {"staleness": staleness} if is_real else {}
+                learner.apply(deltas, weights,
+                              n_contributors=len(buffer),
+                              mean_staleness=float(np.mean(staleness)),
+                              **kw_extra)
+                buffer = []
+                version += 1
+                t += _SERVER_AGG_S
+                ppl = learner.eval_perplexity()
+                stop.update(ppl)
+                log.log_round(t)
+                log.log_eval(t, version, ppl, stop.smoothed or ppl)
+                if stop.reached or stop.out_of_budget(t, version):
+                    break
+        # keep concurrency in-flight: replace this client immediately
+        nxt = int(rng.choice(5_000_000))
+        dispatch(nxt, t)
+
+    return TaskResult(log, est.estimate(log), stop.reached, version,
+                      t / 3600.0, ppl, stop.smoothed or ppl)
+
+
+def run_task(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
+             learner, seq_len: int = 64) -> TaskResult:
+    fn = run_sync if fed.mode == "sync" else run_async
+    return fn(model_cfg, fed, run, learner, seq_len=seq_len)

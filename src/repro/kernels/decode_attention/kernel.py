@@ -1,0 +1,100 @@
+"""Pallas TPU decode attention: one query token vs. a (ring-buffer) KV cache.
+
+Grid (B*Hkv, n_cache_blocks): the cache streams through VMEM in
+(BLOCK_C, D) tiles while the (group, D) query tile stays resident; online
+softmax state (m, l, acc) sits in VMEM scratch across the sequential cache
+axis. valid_len masks ring-buffer slots (prefetched as a scalar). This is
+the serving-path hot spot for decode_32k / long_500k shapes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, block_c: int, n_c: int, scale: float):
+    ci = pl.program_id(1)
+    b = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (g, D)
+    k = k_ref[0].astype(jnp.float32)          # (bc, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (g, bc)
+    cpos = ci * block_c + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cpos < vl_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ci == n_c - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def decode_attention_pallas(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, valid_len,
+                            block_c: int = 512, interpret: bool = False
+                            ) -> jnp.ndarray:
+    """q: (B,Hq,D); caches: (B,C,Hkv,D); valid_len: () or (B,)."""
+    B, C, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    g = Hq // Hkv
+    block_c = min(block_c, C)
+    assert C % block_c == 0
+    n_c = C // block_c
+    scale = 1.0 / math.sqrt(D)
+
+    vl = jnp.asarray(valid_len, jnp.int32)
+    if vl.ndim == 0:
+        vl = jnp.full((B,), vl, jnp.int32)
+    # per (batch, kv head) panels: q (B*Hkv, g, D); kv (B*Hkv, C, D)
+    qr = q.reshape(B, Hkv, g, D).reshape(B * Hkv, g, D)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * Hkv, C, D)
+    vl_bh = jnp.repeat(vl, Hkv)
+
+    kernel = functools.partial(_decode_kernel, block_c=block_c, n_c=n_c,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, n_c),
+        in_specs=[
+            pl.BlockSpec((1, g, D), lambda bh, ci, vl_ref: (bh, 0, 0)),
+            pl.BlockSpec((1, block_c, D), lambda bh, ci, vl_ref: (bh, ci, 0)),
+            pl.BlockSpec((1, block_c, D), lambda bh, ci, vl_ref: (bh, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, D), lambda bh, ci, vl_ref: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, g, D), q.dtype),
+        interpret=interpret,
+    )(vl_bh, qr, kr, vr)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,21 @@
+"""Public decode-attention op: Pallas on TPU, pure-jnp path elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import kernel as K
+from repro.models import common as cm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *,
+                     use_pallas: bool | None = None, interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return K.decode_attention_pallas(q, k_cache, v_cache, valid_len,
+                                         interpret=interpret or not _on_tpu())
+    return cm.decode_attention(q, k_cache, v_cache, valid_len)

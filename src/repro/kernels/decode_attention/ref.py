@@ -1,0 +1,26 @@
+"""Naive pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, valid_len) -> jnp.ndarray:
+    """q: (B,Hq,D); caches: (B,C,Hkv,D); valid_len: () or (B,) -> (B,Hq,D)."""
+    B, C, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, D)
+    s = jnp.einsum("bhgd,bchd->bhgc", qf, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    vl = jnp.asarray(valid_len)
+    if vl.ndim == 0:
+        vl = jnp.full((B,), vl)
+    mask = jnp.arange(C)[None, :] < vl[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernels for blockwise int8 quantize / fused dequant-accumulate.
+
+TPU adaptation (DESIGN.md §3): the quantization block (256 lanes) maps onto
+the VPU lane width (multiples of 128); tiles of ROWS_PER_TILE x block live
+in VMEM so each grid step streams one tile HBM->VMEM, reduces |max| on the
+sublane axis, and writes int8 + scales back. The dequant-accumulate kernel
+fuses the FedBuff buffer update (acc += w * q*scale) into a single pass so
+the server never materializes the dequantized f32 update in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_TILE = 8  # quant blocks per grid step (sublane dim)
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (R, block)
+    amax = jnp.max(jnp.abs(x), axis=1)                 # (R,)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_pallas(x: jnp.ndarray, block: int = 256, interpret: bool = False
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: any shape; returns (q (nb, block) int8, scales (nb,) f32).
+    nb is padded up to a multiple of ROWS_PER_TILE."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % (block * ROWS_PER_TILE)
+    flat = jnp.pad(flat, (0, pad))
+    xb = flat.reshape(-1, block)
+    nb = xb.shape[0]
+    grid = (nb // ROWS_PER_TILE,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb)
+    return q, s
+
+
+def _deq_acc_kernel(q_ref, s_ref, w_ref, acc_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)                 # (R, block)
+    s = s_ref[...]                                     # (R,)
+    w = w_ref[0]
+    out_ref[...] = acc_ref[...] + w * (q * s[:, None])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_accumulate_pallas(acc2d: jnp.ndarray, q: jnp.ndarray,
+                              s: jnp.ndarray, weight, interpret: bool = False
+                              ) -> jnp.ndarray:
+    """acc2d: (nb, block) f32 accumulator laid out like q."""
+    nb, block = q.shape
+    assert nb % ROWS_PER_TILE == 0
+    grid = (nb // ROWS_PER_TILE,)
+    w = jnp.asarray([weight], jnp.float32)
+    return pl.pallas_call(
+        _deq_acc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_PER_TILE, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q, s, w, acc2d)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for blockwise symmetric int8 quantization.
+
+The paper's compression lever (§6, Prasad et al. 2022): client update
+tensors are flattened, padded to a multiple of `block`, and quantized per
+block with a symmetric scale max|x|/127. The oracle defines bit-exact
+semantics for the Pallas kernel tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def _blocked(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block), n
+
+
+def quantize_ref(x: jnp.ndarray, block: int = 256
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (q int8 (nb, block), scales f32 (nb,))."""
+    xb, _ = _blocked(x.astype(jnp.float32), block)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray, shape, block: int = 256
+                   ) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def quant_dequant_ref(x: jnp.ndarray, block: int = 256) -> jnp.ndarray:
+    q, s = quantize_ref(x, block)
+    return dequantize_ref(q, s, x.shape, block).astype(x.dtype)
+
+
+def dequant_accumulate_ref(acc: jnp.ndarray, q: jnp.ndarray,
+                           scale: jnp.ndarray, weight: float | jnp.ndarray,
+                           block: int = 256) -> jnp.ndarray:
+    """acc += weight * dequant(q): the FedBuff buffer update, fused."""
+    upd = dequantize_ref(q, scale, acc.shape, block)
+    return acc + jnp.asarray(weight, acc.dtype) * upd.astype(acc.dtype)

@@ -1,0 +1,22 @@
+"""Public attention op: Pallas on TPU, blocked pure-JAX path elsewhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention import kernel as K
+from repro.models import common as cm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_pallas: bool | None = None, interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return K.flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                        interpret=interpret or not _on_tpu())
+    return cm.flash_attention(q, k, v, causal=causal, window=window)

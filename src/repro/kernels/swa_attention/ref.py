@@ -1,0 +1,36 @@
+"""Naive pure-jnp oracle for (sliding-window) causal GQA attention.
+
+Materializes the full (S, S) score matrix — test sizes only. This is an
+INDEPENDENT oracle: both the Pallas kernel and the blocked pure-JAX
+production path (models.common.flash_attention) are validated against it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  *, causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: (B,S,Hq,D); k/v: (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, g, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / math.sqrt(D)
+    pos_q = jnp.arange(S)[:, None]
+    pos_k = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos_k <= pos_q
+    if window:
+        mask &= pos_k > pos_q - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, S, Hq, D).astype(q.dtype)

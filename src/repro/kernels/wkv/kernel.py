@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for the RWKV6 WKV recurrence.
+
+TPU adaptation: one (batch*head) panel per grid row; the (D, D) state lives
+in VMEM scratch across the sequential chunk axis, so the recurrence never
+round-trips HBM between timesteps — the defining win over the pure-jnp scan
+whose carry is an HBM tensor. In-chunk steps run as a fori_loop over VMEM
+tiles; D (head_dim, typically 64) maps onto VPU lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                S_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)          # (chunk, D)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (D,)
+
+    def step(t, _):
+        S = S_scr[...]
+        kt, vt, rt, wt = k[t], v[t], r[t], w[t]
+        kv = kt[:, None] * vt[None, :]        # (D, D) outer product
+        o_ref[0, t, :] = (rt @ (S + u[:, None] * kv)).astype(o_ref.dtype)
+        S_scr[...] = wt[:, None] * S + kv
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        sT_ref[0] = S_scr[...].astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas(r, k, v, w, u, state, chunk: int = 64,
+               interpret: bool = False):
+    """r,k,v,w: (BH, T, D); u: (BH, D); state: (BH, D, D) f32.
+    Returns (o (BH, T, D), S_T (BH, D, D))."""
+    BH, T, D = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    n_chunks = T // chunk
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    o, sT = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, D), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, D, D), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, D), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, D, D), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, D), r.dtype),
+            jax.ShapeDtypeStruct((BH, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return o, sT

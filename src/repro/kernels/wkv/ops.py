@@ -1,0 +1,24 @@
+"""Public WKV op: Pallas on TPU, chunked pure-jnp scan elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.wkv import kernel as K
+from repro.kernels.wkv import ref as R
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def wkv(r, k, v, w, u, state, *, use_pallas: bool | None = None,
+        interpret: bool = False):
+    """Single-panel WKV; see ref.wkv_ref for semantics."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        rb, kb, vb, wb = (t[None] for t in (r, k, v, w))
+        o, sT = K.wkv_pallas(rb, kb, vb, wb, u[None], state[None],
+                             interpret=interpret or not _on_tpu())
+        return o[0], sT[0]
+    return R.wkv_ref(r, k, v, w, u, state)

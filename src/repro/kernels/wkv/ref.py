@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence (single head panel).
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+r,k,v,w: (T, D); u: (D,); state: (D, D). Returns (o (T, D), S_T).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv_ref(r, k, v, w, u, state):
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw
+        kv = jnp.outer(kt, vt)
+        o = rt @ (S + u[:, None] * kv)
+        S = wt[:, None] * S + kv
+        return S, o
+
+    state, outs = lax.scan(step, state.astype(jnp.float32),
+                           (r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w.astype(jnp.float32)))
+    return outs, state

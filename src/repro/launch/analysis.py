@@ -1,0 +1,175 @@
+"""Compiled-artifact analysis: collective bytes, roofline terms (§ROOFLINE).
+
+collective_bytes parses the post-SPMD HLO (compiled.as_text()) and sums the
+RESULT sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (per-device bytes moved per op invocation). Ops inside
+while-loop bodies are multiplied by the loop trip count when it is statically
+recoverable from the HLO (scan layers/blocks would otherwise be undercounted);
+the trip-count map is produced alongside.
+
+Roofline terms (per device, seconds):
+  compute    = flops / PEAK_FLOPS_BF16
+  memory     = bytes_accessed / HBM_BW
+  collective = collective_bytes / ICI_BW
+
+cost_analysis() counts a while body ONCE; `scan_correction` rescales with
+analytic model FLOPs (repro.models.step_flops) so the compute term reflects
+the real trip counts (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?:[a-z0-9]+)\[[^\]]*\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE_TRIP_RE = re.compile(
+    r"while\(.*?trip_count[^0-9]*(\d+)", re.DOTALL)
+
+
+def _line_result_bytes(line: str) -> float:
+    """Sum byte sizes of the result shapes on an HLO op line (LHS of '=')."""
+    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split("(", 1)[0]
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes by op kind (single invocation of the
+    program; while-body collectives are scaled by trip count when present
+    in backend_config/metadata)."""
+    out: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    # map computation name -> trip count when known
+    trip: Dict[str, int] = {}
+    for m in re.finditer(
+            r'body=%?([\w.\-]+).*?"known_trip_count":\{"n":"(\d+)"\}',
+            hlo_text):
+        trip[m.group(1)] = int(m.group(2))
+    # which computation each line belongs to
+    current_comp = ""
+    comp_mult: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        mdef = re.match(r"%?([\w.\-]+)\s*\([\w.,%: \[\]\-]*\)\s*->", ls)
+        if (ls.startswith("ENTRY") or mdef) and "{" in ls:
+            name = ls.split()[1].lstrip("%").split("(")[0].split(".")[0] \
+                if not ls.startswith("ENTRY") else "__entry__"
+            current_comp = ls.split("{")[0].strip()
+        m = _COLL_RE.search(ls)
+        if m:
+            kind = m.group(1)
+            b = _line_result_bytes(ls)
+            mult = 1
+            for body_name, n in trip.items():
+                if body_name in current_comp:
+                    mult = n
+                    break
+            out[kind] = out.get(kind, 0.0) + b * mult
+            counts[kind] = counts.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["n_ops"] = float(sum(counts.values()))
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_dev: float
+    model_flops_global: float       # analytic (exact-schedule) whole step
+    bytes_per_dev: float
+    collective_bytes_per_dev: float
+    peak_mem_per_dev: Optional[float]
+
+    @property
+    def compute_s(self) -> float:
+        # analytic global flops spread over chips (scan-corrected)
+        return self.model_flops_global / self.chips / PEAK_FLOPS_BF16
+
+    @property
+    def compute_s_hlo(self) -> float:
+        return self.hlo_flops_per_dev / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs(global): >1 means the while-once HLO
+        undercount dominates; <1 means remat/redundant compute."""
+        hlo_global = self.hlo_flops_per_dev * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "model_flops_global": self.model_flops_global,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.collective_bytes_per_dev,
+            "useful_ratio": self.useful_flops_ratio,
+            "peak_mem_gb": (self.peak_mem_per_dev or 0) / 2**30,
+        }
+
+
+def extract_cost(compiled) -> Tuple[float, float]:
+    """(flops, bytes accessed) from compiled.cost_analysis(), per device."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+    return flops, bytes_acc
+
+
+def extract_peak_memory(compiled) -> Optional[float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    for attr in ("temp_size_in_bytes",):
+        if hasattr(ma, attr):
+            try:
+                return float(ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes
+                             + ma.temp_size_in_bytes)
+            except Exception:
+                return None
+    return None

@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (MULTI-POD DRY-RUN §0-4).
+
+For every (assigned architecture x input shape) pair, lower + compile the
+step program on the production mesh — (16,16)=("data","model") single pod
+and (2,16,16)=("pod","data","model") for two pods — with ShapeDtypeStruct
+inputs (no allocation), then report memory_analysis / cost_analysis /
+collective bytes for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.registry import ASSIGNED_ARCHS
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SKIPS, build_program
+from repro.models import step_flops
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, rules=None, save_hlo: str = "",
+               variant: str = ""):
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = mesh.devices.size
+    key = (arch, shape_name)
+    if key in SKIPS:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": SKIPS[key]}
+    t0 = time.time()
+    prog = build_program(cfg, shape_name, mesh, rules=rules, variant=variant)
+    with mesh:
+        jitted = jax.jit(prog.step_fn,
+                         in_shardings=prog.in_shardings,
+                         out_shardings=prog.out_shardings,
+                         donate_argnums=prog.donate_argnums)
+        lowered = jitted.lower(*prog.input_specs.values())
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    flops_dev, bytes_dev = analysis.extract_cost(compiled)
+    peak = analysis.extract_peak_memory(compiled)
+    hlo = compiled.as_text()
+    coll = analysis.collective_stats(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    shape = INPUT_SHAPES[shape_name]
+    model_flops = step_flops(cfg, shape.global_batch, shape.seq_len,
+                             shape.kind)
+    if shape.kind == "train":
+        # dry-run round: K clients x local_steps fwd+bwd on the same batch
+        from repro.launch.specs import DRYRUN_LOCAL_STEPS
+        model_flops = model_flops * DRYRUN_LOCAL_STEPS
+
+    roof = analysis.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_dev=flops_dev, model_flops_global=model_flops,
+        bytes_per_dev=bytes_dev, collective_bytes_per_dev=coll["total"],
+        peak_mem_per_dev=peak)
+    row = roof.row()
+    row.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1),
+               coll_ops=int(coll.get("n_ops", 0)),
+               coll_by_kind={k: v for k, v in coll.items()
+                             if k not in ("total", "n_ops")})
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"== {arch} x {shape_name} on {mesh_name} "
+              f"({chips} chips) ==")
+        print(f"   memory_analysis: {mem}")
+        print(f"   cost: flops/dev={flops_dev:.3e} bytes/dev={bytes_dev:.3e}")
+        print(f"   collectives/dev: {coll['total']:.3e} B over "
+              f"{int(coll.get('n_ops', 0))} ops")
+        print(f"   roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> dominant={roof.dominant}")
+    return row
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--variant", default="",
+                   help='"" (baseline) | "flash_decode" (§Perf optimized '
+                        'serving: shard_map flash-decoding + decode-'
+                        'consumable prefill cache)')
+    p.add_argument("--json", default="")
+    args = p.parse_args(argv)
+
+    pairs = []
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rows = []
+    for mp in meshes:
+        for a, s in pairs:
+            try:
+                rows.append(dryrun_one(a, s, multi_pod=mp,
+                                       variant=args.variant))
+            except Exception as e:
+                traceback.print_exc()
+                rows.append({"arch": a, "shape": s,
+                             "mesh": "2x16x16" if mp else "16x16",
+                             "status": "FAILED", "error": repr(e)[:500]})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+    n_fail = sum(1 for r in rows if r.get("status") == "FAILED")
+    print(f"\n{len(rows) - n_fail}/{len(rows)} dry-runs OK")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,21 @@
+"""Production mesh construction (MULTI-POD DRY-RUN §1).
+
+A function, not a module-level constant: importing this module never touches
+jax device state. The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link

@@ -1,0 +1,309 @@
+"""Per-(arch x shape) dry-run program construction (MULTI-POD DRY-RUN §2-3).
+
+For each assigned architecture and input shape this module builds:
+  * the step function — a FEDERATED ROUND for train shapes (the paper's
+    technique at datacenter scale: K cross-silo clients scanned, each running
+    `local_steps` of local SGD from the broadcast server params, deltas
+    accumulated sharded and applied through the FedAdam server optimizer),
+    or prefill / single-token decode for serving shapes;
+  * ``input_specs()`` — ShapeDtypeStruct stand-ins for every input
+    (weak-type-correct, shardable, no device allocation);
+  * in/out shardings derived from the models' logical param axes.
+
+long_500k uses each family's sub-quadratic decode state: native recurrent
+state (rwkv6), RG-LRU + SWA ring (recurrentgemma), arch SWA ring (mixtral),
+and a window-4096 ring-buffer variant for the full-attention decoders.
+seamless-m4t skips long_500k (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models import get_model, param_shapes_and_axes
+from repro.optim import adam
+
+# federated round structure lowered for train shapes
+DRYRUN_CLIENTS = 4          # silo clients per round (scan)
+DRYRUN_LOCAL_STEPS = 2      # local SGD steps per client
+DRYRUN_CLIENT_LR = 0.1
+LONG_DECODE_WINDOW = 4096   # SWA ring for full-attention archs at 500k
+
+SKIPS: Dict[Tuple[str, str], str] = {
+    ("seamless-m4t-medium", "long_500k"):
+        "enc-dec speech-to-text has no 500k-token autoregressive decode "
+        "regime (decoder is full-attention over a short encoder memory)",
+}
+
+
+@dataclass
+class DryRunProgram:
+    arch: str
+    shape: str
+    step_fn: Callable
+    input_specs: Dict[str, Any]          # kwargs of ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _batch_sds(cfg: ModelConfig, shape: ShapeConfig, n_clients: int):
+    """Train-round batch: leaves (K, Bc, ...)."""
+    Bc = shape.global_batch // n_clients
+    S = shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((n_clients, Bc, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((n_clients, Bc, S), jnp.int32),
+    }
+    if cfg.num_frontend_tokens:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (n_clients, Bc, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "charlm":
+        batch["chars"] = jax.ShapeDtypeStruct(
+            (n_clients, Bc, S, cfg.max_word_len), jnp.int32)
+    return batch
+
+
+def _batch_specs(batch, mesh):
+    out = {}
+    for k, v in batch.items():
+        out[k] = sh.batch_spec(mesh, v.ndim, batch_dim=1, shape=v.shape)
+    return out
+
+
+def model_for(cfg: ModelConfig, shape: ShapeConfig, *, remat: bool = True):
+    if shape.name == "long_500k":
+        return get_model(cfg, decode_window=cfg.sliding_window
+                         or LONG_DECODE_WINDOW, remat=remat)
+    return get_model(cfg, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_round(cfg: ModelConfig, *, n_clients: int = DRYRUN_CLIENTS,
+                     local_steps: int = DRYRUN_LOCAL_STEPS,
+                     client_lr: float = DRYRUN_CLIENT_LR,
+                     server_lr: float = 1e-3):
+    """One synchronous federated round as a single SPMD program."""
+    model = get_model(cfg, remat=True)
+    opt = adam(server_lr)
+
+    def loss_fn(p, b):
+        return model.loss(p, b)[0]
+
+    def train_round(params, opt_state, batch):
+        def client_fn(acc, client_batch):
+            def local(p, _):
+                g = jax.grad(loss_fn)(p, client_batch)
+                p = {k: (p[k] - client_lr * g[k].astype(jnp.float32)
+                         ).astype(p[k].dtype) for k in p}
+                return p, None
+
+            p_fin, _ = lax.scan(local, params, None, length=local_steps)
+            acc = {k: acc[k] + (p_fin[k].astype(jnp.float32)
+                                - params[k].astype(jnp.float32))
+                   for k in acc}
+            return acc, None
+
+        acc0 = {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+        acc, _ = lax.scan(client_fn, acc0, batch)
+        grads = {k: -(v / n_clients) for k, v in acc.items()}
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state
+
+    return train_round, opt
+
+
+def make_train_round_vmapped(cfg: ModelConfig, *, n_clients: int,
+                             local_steps: int = DRYRUN_LOCAL_STEPS,
+                             client_lr: float = DRYRUN_CLIENT_LR,
+                             server_lr: float = 1e-3):
+    """Cross-device variant: the whole cohort trains in parallel via vmap
+    (per-client param replicas on the data axis) — the faithful simulation
+    mode for phone-sized models (smollm / charlm)."""
+    model = get_model(cfg, remat=True)
+    opt = adam(server_lr)
+
+    def loss_fn(p, b):
+        return model.loss(p, b)[0]
+
+    def client_fn(params, cbatch):
+        def local(p, _):
+            g = jax.grad(loss_fn)(p, cbatch)
+            p = {k: (p[k] - client_lr * g[k].astype(jnp.float32)
+                     ).astype(p[k].dtype) for k in p}
+            return p, None
+
+        p_fin, _ = lax.scan(local, params, None, length=local_steps)
+        return {k: p_fin[k].astype(jnp.float32) - params[k].astype(jnp.float32)
+                for k in params}
+
+    def train_round(params, opt_state, batch):
+        deltas = jax.vmap(client_fn, in_axes=(None, 0))(params, batch)
+        grads = {k: -jnp.mean(v, axis=0) for k, v in deltas.items()}
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state
+
+    return train_round, opt
+
+
+def make_prefill(cfg: ModelConfig, shape: ShapeConfig):
+    model = model_for(cfg, shape, remat=False)
+
+    if cfg.num_frontend_tokens:
+        def prefill(params, tokens, frontend):
+            return model.prefill(params, tokens, frontend)
+    else:
+        def prefill(params, tokens):
+            return model.prefill(params, tokens)
+    return prefill, model
+
+
+def make_decode(cfg: ModelConfig, shape: ShapeConfig):
+    model = model_for(cfg, shape, remat=False)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return serve_step, model
+
+
+# ---------------------------------------------------------------------------
+# program assembly
+# ---------------------------------------------------------------------------
+
+def build_program(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                  rules=None, variant: str = "") -> DryRunProgram:
+    """variant: "" (baseline) | "flash_decode" (§Perf: shard_map
+    flash-decoding + decode-consumable prefill cache) | "vmap_clients"
+    (cross-device simulation: vmapped cohort, per-client replicas on the
+    data axis — small models only)."""
+    shape = INPUT_SHAPES[shape_name]
+    key = (cfg.name, shape_name)
+    if key in SKIPS:
+        raise ValueError(f"skip {key}: {SKIPS[key]}")
+    if rules is None:
+        # decode keeps weights resident (2D-sharded), train/prefill use
+        # FSDP+TP rules — see sharding.SERVE_RULES rationale.
+        rules = sh.SERVE_RULES if shape.kind == "decode" else sh.DEFAULT_RULES
+    if variant in ("flash_decode", "flash_decode_q8") \
+            and INPUT_SHAPES[shape_name].kind != "train":
+        # the cache-length sharding only helps models that actually run the
+        # shard_map flash-decode path (DecoderLM); ring-window hybrids and
+        # recurrent states keep the plain serve rules.
+        probe = model_for(cfg, INPUT_SHAPES[shape_name], remat=False)
+        if hasattr(probe, "flash_decode"):
+            rules = dict(rules)
+            rules["cache"] = ("model",)
+        else:
+            variant = ''
+
+    pshapes, paxes = param_shapes_and_axes(cfg)
+    pspecs = sh.tree_specs(paxes, pshapes, mesh, rules)
+    pshard = {k: NamedSharding(mesh, s) for k, s in pspecs.items()}
+
+    if shape.kind == "train":
+        if variant == "vmap_clients":
+            # cross-device mode: 16 parallel clients on the data axis
+            rules = sh.XDEVICE_RULES
+            pspecs2 = sh.tree_specs(paxes, pshapes, mesh, rules)
+            pshard = {k: NamedSharding(mesh, s) for k, s in pspecs2.items()}
+            n_clients = mesh.shape.get("data", 16)
+            step, opt = make_train_round_vmapped(cfg, n_clients=n_clients)
+        else:
+            n_clients = DRYRUN_CLIENTS
+            step, opt = make_train_round(cfg)
+        ostate_shapes = jax.eval_shape(opt.init, pshapes)
+        ospec = {
+            "step": NamedSharding(mesh, P()),
+            "m": pshard, "v": pshard,
+        }
+        batch = _batch_sds(cfg, shape, n_clients)
+        if variant == "vmap_clients":
+            bspecs = {k: NamedSharding(mesh, P("data"))
+                      for k in batch}
+        else:
+            bspecs = {k: NamedSharding(mesh, s)
+                      for k, s in _batch_specs(batch, mesh).items()}
+        inputs = {
+            "params": pshapes,
+            "opt_state": ostate_shapes,
+            "batch": batch,
+        }
+        in_sh = (pshard, ospec, bspecs)
+        out_sh = (pshard, ospec)
+        return DryRunProgram(cfg.name, shape_name, step, inputs, in_sh, out_sh,
+                             donate_argnums=(0, 1))
+
+    model = model_for(cfg, shape, remat=False)
+    B, S = shape.global_batch, shape.seq_len
+    bspec = sh.batch_spec(mesh, 1, batch_dim=0, shape=(B,))
+    baxes = bspec[0] if len(bspec) else None
+
+    vspec = vocab_logit_spec(cfg, mesh)
+
+    if shape.kind == "prefill":
+        step, model = make_prefill(cfg, shape)
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tok_spec = NamedSharding(mesh, P(baxes, None))
+        inputs = {"params": pshapes, "tokens": tokens}
+        in_sh = [pshard, tok_spec]
+        cache_rules = rules
+        if variant in ("flash_decode", "flash_decode_q8"):
+            # §Perf H2.1: land the prefill cache in the decode-consumable
+            # sharding (length over "model") — kills the 2x6GB f32 output
+            # all-gathers that dominate the baseline's collective term.
+            cache_rules = dict(sh.SERVE_RULES)
+            cache_rules["cache"] = ("model",)
+        out_sh = (NamedSharding(mesh, P(baxes, vspec)),
+                  _cache_shardings(model, cfg, B, S, mesh, cache_rules))
+        if cfg.num_frontend_tokens:
+            inputs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+            in_sh.append(NamedSharding(mesh, P(baxes, None, None)))
+        return DryRunProgram(cfg.name, shape_name, step, inputs,
+                             tuple(in_sh), out_sh)
+
+    # decode
+    step, model = make_decode(cfg, shape)
+    if variant in ("flash_decode", "flash_decode_q8") \
+            and hasattr(model, "flash_decode"):
+        model.flash_decode = True
+        if variant == "flash_decode_q8":
+            model.kv_quant = True
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(B, S, dtype=jnp.bfloat16)[0])
+    cache_sh = _cache_shardings(model, cfg, B, S, mesh, rules)
+    tokens = jax.ShapeDtypeStruct((B,), jnp.int32)
+    inputs = {"params": pshapes, "cache": cache_sds, "tokens": tokens}
+    in_sh = (pshard, cache_sh, NamedSharding(mesh, P(baxes)))
+    out_sh = (NamedSharding(mesh, P(baxes, vspec)), cache_sh)
+    return DryRunProgram(cfg.name, shape_name, step, inputs, in_sh, out_sh,
+                         donate_argnums=(1,))
+
+
+def _cache_shardings(model, cfg: ModelConfig, B: int, S: int, mesh: Mesh,
+                     rules):
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(B, S, dtype=jnp.bfloat16)[0])
+    # shapes from eval_shape; logical axes from the (tiny) concrete builder
+    _, cache_axes = model.init_cache(1, 8, dtype=jnp.bfloat16)
+    out = {}
+    for k, sds in cache_sds.items():
+        spec = sh.spec_for(cache_axes[k], sds.shape, mesh, rules)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def vocab_logit_spec(cfg: ModelConfig, mesh: Mesh) -> Optional[str]:
+    return "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None

@@ -1,0 +1,3 @@
+from repro.models.registry import (attention_flops, get_model, param_count,
+                                   param_shapes_and_axes, step_bytes_min,
+                                   step_flops)

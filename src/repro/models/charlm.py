@@ -1,0 +1,152 @@
+"""The paper's FL workload: character-aware CNN-LSTM next-word LM
+(Kim et al. 2016; Green Federated Learning §3.2).
+
+    e_i = CNN(chars of word i)          (multi-width char convs + max-pool)
+    c_i, h_i = LSTM(h_{i-1}, c_{i-1}, e_i)
+    p(w_{i+1} | w_{<=i}) = softmax(W^T h_i)        (MLP decoder + softmax)
+
+Batch layout: tokens are WORDS; ``batch["chars"]`` is (B, S, W) char ids
+per word (W = max_word_len). Perplexity = exp(mean nll) as the paper's
+target metric (target 175).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+class CharLM:
+    def __init__(self, cfg: ModelConfig, *, remat: bool = False, **_):
+        self.cfg = cfg
+        self.remat = remat
+        self.cnn_out = sum(n for _, n in cfg.cnn_filters)
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng, dtype=jnp.float32) -> Tuple[cm.Params, cm.Axes]:
+        cfg = self.cfg
+        b = cm.ParamBuilder(rng, dtype)
+        b.param("char_embed", (cfg.char_vocab, cfg.char_emb), ("vocab", "embed"),
+                scale=0.1)
+        for w, n in cfg.cnn_filters:
+            b.param(f"cnn/w{w}", (w, cfg.char_emb, n), (None, "embed", "ffn"))
+            b.param(f"cnn/b{w}", (n,), ("ffn",), init="zeros")
+        # highway layer over CNN features
+        b.param("highway/wt", (self.cnn_out, self.cnn_out), ("ffn", "ffn_out"))
+        b.param("highway/bt", (self.cnn_out,), ("ffn",), init="zeros")
+        b.param("highway/wh", (self.cnn_out, self.cnn_out), ("ffn", "ffn_out"))
+        b.param("highway/bh", (self.cnn_out,), ("ffn",), init="zeros")
+        b.param("proj_in", (self.cnn_out, cfg.d_model), ("ffn", "embed"))
+        L, d, Hd = cfg.num_layers, cfg.d_model, cfg.lstm_hidden
+        # LSTM: input->gates and hidden->gates (i, f, g, o)
+        b.param("lstm/wx", (L, d, 4 * Hd), ("layers", "embed", "ffn"))
+        b.param("lstm/wh", (L, Hd, 4 * Hd), ("layers", "embed", "ffn"))
+        b.param("lstm/bias", (L, 4 * Hd), ("layers", "ffn"), init="zeros")
+        b.param("mlp/w1", (Hd, cfg.d_ff), ("embed", "ffn"))
+        b.param("mlp/b1", (cfg.d_ff,), ("ffn",), init="zeros")
+        b.param("unembed", (cfg.d_ff, cfg.vocab_size), ("embed", "vocab"))
+        return b.build()
+
+    # ------------------------------------------------------------- word enc
+    def word_embed(self, params, chars):
+        """chars: (..., W) int32 -> (..., d_model)."""
+        cfg = self.cfg
+        x = params["char_embed"][chars]                    # (..., W, ce)
+        feats = []
+        for w, n in cfg.cnn_filters:
+            ker = params[f"cnn/w{w}"]                      # (w, ce, n)
+            # valid conv over the W axis
+            conv = sum(jnp.einsum("...wc,cn->...wn",
+                                  x[..., i:x.shape[-2] - w + 1 + i, :], ker[i])
+                       for i in range(w))
+            conv = jnp.tanh(conv + params[f"cnn/b{w}"])
+            feats.append(jnp.max(conv, axis=-2))           # max over positions
+        f = jnp.concatenate(feats, axis=-1)                # (..., cnn_out)
+        t = jax.nn.sigmoid(f @ params["highway/wt"] + params["highway/bt"])
+        h = jax.nn.relu(f @ params["highway/wh"] + params["highway/bh"])
+        f = t * h + (1.0 - t) * f
+        return f @ params["proj_in"]
+
+    # ------------------------------------------------------------- lstm
+    def _lstm_layer(self, wx, wh, bias, x, h0, c0):
+        """x: (B, S, d); returns (out (B,S,Hd), h_last, c_last)."""
+        Hd = wh.shape[0]
+        xg = jnp.einsum("bsd,dg->bsg", x, wx) + bias
+
+        def step(carry, xg_t):
+            h, c = carry
+            g = xg_t + h @ wh
+            i, f, gg, o = jnp.split(g, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(gg)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        (h, c), hs = lax.scan(step, (h0, c0), jnp.moveaxis(xg, 1, 0))
+        return jnp.moveaxis(hs, 0, 1), h, c
+
+    def _stack(self, params, x, states):
+        """states: dict h/c (L, B, Hd)."""
+        L = self.cfg.num_layers
+
+        def body(x, per):
+            wx, wh, bias, h0, c0 = per
+            out, h, c = self._lstm_layer(wx, wh, bias, x, h0, c0)
+            return out, (h, c)
+
+        x, (hs, cs) = lax.scan(
+            body, x, (params["lstm/wx"], params["lstm/wh"], params["lstm/bias"],
+                      states["h"], states["c"]))
+        return x, {"h": hs, "c": cs}
+
+    def logits(self, params, x):
+        h = jax.nn.relu(x @ params["mlp/w1"] + params["mlp/b1"])
+        return h @ params["unembed"]
+
+    def _zero_states(self, B, dtype):
+        L, Hd = self.cfg.num_layers, self.cfg.lstm_hidden
+        st = {"h": jnp.zeros((L, B, Hd), dtype), "c": jnp.zeros((L, B, Hd), dtype)}
+        axes = {"h": ("layers", "batch", "embed"), "c": ("layers", "batch", "embed")}
+        return st, axes
+
+    # ----------------------------------------------------------- train api
+    def loss(self, params, batch):
+        chars = batch["chars"]                             # (B, S, W)
+        x = self.word_embed(params, chars)
+        states, _ = self._zero_states(chars.shape[0], x.dtype)
+        x, _ = self._stack(params, x, states)
+        h = jax.nn.relu(x @ params["mlp/w1"] + params["mlp/b1"])
+        loss = cm.lm_loss(h, params["unembed"], batch["labels"],
+                          batch.get("mask", None))
+        return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32),
+                      "perplexity": jnp.exp(loss)}
+
+    # ----------------------------------------------------------- serve api
+    def init_cache(self, B, cache_len, dtype=jnp.float32):
+        st, axes = self._zero_states(B, dtype)
+        st["pos"] = jnp.zeros((), jnp.int32)
+        axes["pos"] = ()
+        return st, axes
+
+    def prefill(self, params, tokens, frontend=None, chars=None, pad_to: int = 0):
+        chars = chars if chars is not None else tokens
+        x = self.word_embed(params, chars)
+        states, _ = self._zero_states(chars.shape[0], x.dtype)
+        x, states = self._stack(params, x, states)
+        lg = self.logits(params, x[:, -1])
+        states["pos"] = jnp.asarray(chars.shape[1], jnp.int32)
+        return lg, states
+
+    def decode_step(self, params, cache, chars):
+        """chars: (B, W) — the chars of the latest word."""
+        x = self.word_embed(params, chars)[:, None, :]
+        states = {k: v for k, v in cache.items() if k != "pos"}
+        x, states = self._stack(params, x, states)
+        lg = self.logits(params, x[:, 0])
+        states["pos"] = cache["pos"] + 1
+        return lg, states

@@ -1,0 +1,571 @@
+"""Shared functional layer library for the model zoo.
+
+Conventions
+-----------
+* Params are FLAT dicts: ``{"path/to/weight": jnp.ndarray}``. A parallel
+  dict of *logical axes* (tuple of axis names per dim) is built at init time
+  and consumed by ``repro.sharding`` to derive PartitionSpecs.
+* Per-layer parameters are STACKED on a leading ``"layers"`` axis and the
+  layer stack runs under ``lax.scan`` (small HLO, fast compiles).
+* Attention uses blocked online-softmax ("flash") formulations so that
+  prefill at 32k–500k never materializes an (S, S) score matrix. The blocked
+  schedule is a scan over (q_block, kv_block) pairs; causal / sliding-window
+  variants simply enumerate different pair lists (exact-FLOPs banded
+  schedule — see kernels/swa_attention for the TPU Pallas twin).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import sharding as _sh
+
+Params = Dict[str, jnp.ndarray]
+Axes = Dict[str, Tuple[Optional[str], ...]]
+
+
+# ---------------------------------------------------------------------------
+# Param construction
+# ---------------------------------------------------------------------------
+
+class ParamBuilder:
+    """Collects params + their logical sharding axes."""
+
+    def __init__(self, rng: jax.Array, dtype=jnp.float32):
+        self.rng = rng
+        self.dtype = dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next(self) -> jax.Array:
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def param(self, path: str, shape: Sequence[int],
+              axes: Sequence[Optional[str]], init: str = "normal",
+              scale: Optional[float] = None) -> None:
+        assert len(shape) == len(axes), (path, shape, axes)
+        assert path not in self.params, path
+        shape = tuple(int(s) for s in shape)
+        if init == "normal":
+            if scale is None:
+                scale = 1.0 / math.sqrt(shape[-2] if len(shape) >= 2 else shape[-1])
+            w = jax.random.normal(self._next(), shape, self.dtype) * scale
+        elif init == "zeros":
+            w = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            w = jnp.ones(shape, self.dtype)
+        elif init == "uniform":
+            w = jax.random.uniform(self._next(), shape, self.dtype,
+                                   -(scale or 1.0), scale or 1.0)
+        else:
+            raise ValueError(init)
+        self.params[path] = w
+        self.axes[path] = tuple(axes)
+
+    def build(self) -> Tuple[Params, Axes]:
+        return self.params, self.axes
+
+
+def stack_layer_params(per_layer: List[Params]) -> Params:
+    """Stack identical per-layer param dicts on a leading 'layers' axis."""
+    out = {}
+    for k in per_layer[0]:
+        out[k] = jnp.stack([p[k] for p in per_layer], axis=0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def swish(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D); cos/sin: (..., S, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # insert head dim
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention (pure JAX oracle; Pallas twin in kernels/)
+# ---------------------------------------------------------------------------
+
+def _block_pairs(n_q: int, n_kv: int, window_blocks: Optional[int]) -> List[Tuple[int, int]]:
+    """Lower-triangle (banded, if windowed) (q_block, kv_block) schedule."""
+    pairs = []
+    for qi in range(n_q):
+        lo = 0 if window_blocks is None else max(0, qi - window_blocks)
+        for ki in range(lo, min(qi + 1, n_kv)):
+            pairs.append((qi, ki))
+    return pairs
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512,
+                    positions_offset: int = 0) -> jnp.ndarray:
+    """Blocked online-softmax attention with exact banded FLOPs.
+
+    q: (B, S, Hq, D);  k, v: (B, S, Hkv, D)  (GQA: Hq % Hkv == 0).
+    window > 0 => sliding-window causal attention of that width.
+    Returns (B, S, Hq, D).
+    """
+    B, S, Hq, D = q.shape
+    Skv = k.shape[1]
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, Skv)
+    while S % block_q:            # e.g. VLM S = text + 256 visual tokens
+        block_q //= 2
+    while Skv % block_kv:
+        block_kv //= 2
+    assert block_q >= 1 and block_kv >= 1
+    n_q, n_kv = S // block_q, Skv // block_kv
+    wb = None
+    if window:
+        wb = max(1, math.ceil(window / block_kv))
+    pairs = _block_pairs(n_q, n_kv, wb) if causal else \
+        [(qi, ki) for qi in range(n_q) for ki in range(n_kv)]
+    pair_arr = jnp.asarray(pairs, dtype=jnp.int32)  # (P, 2)
+
+    scale = 1.0 / math.sqrt(D)
+    # layout: (B, Hkv, group, n_q, block_q, D)
+    qr = q.reshape(B, n_q, block_q, Hkv, group, D).transpose(0, 3, 4, 1, 2, 5)
+    kr = k.reshape(B, n_kv, block_kv, Hkv, D).transpose(0, 3, 1, 2, 4)
+    vr = v.reshape(B, n_kv, block_kv, Hkv, D).transpose(0, 3, 1, 2, 4)
+
+    o = jnp.zeros_like(qr, dtype=jnp.float32)
+    m = jnp.full(qr.shape[:-1], -jnp.inf, dtype=jnp.float32)
+    l = jnp.zeros(qr.shape[:-1], dtype=jnp.float32)
+
+    q_pos = positions_offset + jnp.arange(S).reshape(n_q, block_q)
+    k_pos = jnp.arange(Skv).reshape(n_kv, block_kv)
+
+    def step(carry, pair):
+        o, m, l = carry
+        qi, ki = pair[0], pair[1]
+        qb = lax.dynamic_index_in_dim(qr, qi, axis=3, keepdims=False)   # (B,Hkv,g,bq,D)
+        kb = lax.dynamic_index_in_dim(kr, ki, axis=2, keepdims=False)   # (B,Hkv,bk,D)
+        vb = lax.dynamic_index_in_dim(vr, ki, axis=2, keepdims=False)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        qp = lax.dynamic_index_in_dim(q_pos, qi, axis=0, keepdims=False)  # (bq,)
+        kp = lax.dynamic_index_in_dim(k_pos, ki, axis=0, keepdims=False)  # (bk,)
+        if causal:
+            mask = kp[None, :] <= qp[:, None]
+        else:
+            mask = jnp.ones((qp.shape[0], kp.shape[0]), bool)
+        if window:
+            mask &= kp[None, :] > (qp[:, None] - window)
+        s = jnp.where(mask, s, -jnp.inf)
+        mb = lax.dynamic_index_in_dim(m, qi, axis=3, keepdims=False)
+        lb = lax.dynamic_index_in_dim(l, qi, axis=3, keepdims=False)
+        ob = lax.dynamic_index_in_dim(o, qi, axis=3, keepdims=False)
+        m_new = jnp.maximum(mb, jnp.max(s, axis=-1))
+        # guard fully-masked rows (only possible in ragged windows)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(mb), jnp.exp(mb - m_safe), 0.0)
+        l_new = lb * corr + jnp.sum(p, axis=-1)
+        o_new = ob * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+        o = lax.dynamic_update_index_in_dim(o, o_new, qi, axis=3)
+        m = lax.dynamic_update_index_in_dim(m, m_new, qi, axis=3)
+        l = lax.dynamic_update_index_in_dim(l, l_new, qi, axis=3)
+        return (o, m, l), None
+
+    # checkpoint: backward recomputes s/p per block instead of stacking
+    # (P, B, H, g, bq, bk) f32 residuals — the flash-attention bwd scheme.
+    (o, m, l), _ = lax.scan(jax.checkpoint(step), (o, m, l), pair_arr)
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    out = o.transpose(0, 3, 4, 1, 2, 5).reshape(B, S, Hq, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     valid_len) -> jnp.ndarray:
+    """Single-position GQA attention against a KV cache.
+
+    q: (B, Hq, D); k_cache/v_cache: (B, C, Hkv, D); valid_len: () or (B,)
+    int32 — number of valid cache slots (ring buffers pass capacity).
+    Returns (B, Hq, D). Pure-jnp oracle; Pallas twin in kernels/decode_attention.
+    """
+    B, C, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    group = Hq // Hkv
+    qr = q.reshape(B, Hkv, group, D)
+    # keep the cache in its storage dtype; accumulate in f32 via
+    # preferred_element_type so XLA cannot hoist an f32 copy of the whole
+    # stacked cache out of the layer scan (a 2x HBM + collective blowup).
+    s = jnp.einsum("bhgd,bchd->bhgc", qr, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    idx = jnp.arange(C)
+    vl = jnp.asarray(valid_len)
+    mask = idx[None, :] < (vl[:, None] if vl.ndim else vl[None, None])
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def quantize_kv(x, axis: int = -1):
+    """Symmetric per-token-per-head int8 KV quantization.
+    x: (..., D) -> (q int8 same shape, scale f32 shape[:-1])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    qv = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                  -127, 127).astype(jnp.int8)
+    return qv, scale
+
+
+def dequantize_kv(qv, scale):
+    return qv.astype(jnp.float32) * scale[..., None]
+
+
+def flash_decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale,
+                              k_new, v_new, write_pos, valid_len):
+    """§Perf H1.6 (experimental): flash-decoding over an int8 KV cache.
+    Caches: int8 (B,C,Hkv,D) + f32 scales (B,C,Hkv) — 2.2x less cache HBM
+    than bf16 (incl. scales at D=128). Numerics: per-token symmetric int8;
+    max |error| on attention outputs bounded by the softmax-weighted
+    per-token quantization error (tested vs the bf16 path)."""
+    from repro import sharding as _sh2
+    mesh = _sh2.current_mesh()
+    B, C, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    g = Hq // Hkv
+    kq_new, ks_new = quantize_kv(k_new)
+    vq_new, vs_new = quantize_kv(v_new)
+
+    def _plain():
+        kc = lax.dynamic_update_slice_in_dim(k_cache, kq_new[:, None],
+                                             write_pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(v_cache, vq_new[:, None],
+                                             write_pos, axis=1)
+        ks = lax.dynamic_update_slice_in_dim(k_scale, ks_new[:, None],
+                                             write_pos, axis=1)
+        vs = lax.dynamic_update_slice_in_dim(v_scale, vs_new[:, None],
+                                             write_pos, axis=1)
+        o = decode_attention(q,
+                             dequantize_kv(kc, ks).astype(q.dtype),
+                             dequantize_kv(vc, vs).astype(q.dtype), valid_len)
+        return o, kc, vc, ks, vs
+
+    if mesh is None or "model" not in mesh.shape or C % mesh.shape["model"]:
+        return _plain()
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    n = mesh.shape["model"]
+    C_loc = C // n
+    bt = None
+    for cand in (("pod", "data"), ("data",)):
+        if all(a in mesh.shape for a in cand):
+            sz = 1
+            for a in cand:
+                sz *= mesh.shape[a]
+            if B % sz == 0:
+                bt = cand if len(cand) > 1 else cand[0]
+                break
+
+    def inner(q, kc, vc, ks, vs, kn, vn, ksn, vsn, wp, vl):
+        wp, vl = wp[0], vl[0]
+        ax = lax.axis_index("model")
+        start = ax * C_loc
+        li = jnp.clip(wp - start, 0, C_loc - 1)
+        in_rng = (wp >= start) & (wp < start + C_loc)
+
+        def upd(buf, new):
+            b2 = lax.dynamic_update_slice_in_dim(
+                buf, new[:, None].astype(buf.dtype), li, axis=1)
+            return jnp.where(in_rng, b2, buf)
+
+        kc, vc, ks, vs = upd(kc, kn), upd(vc, vn), upd(ks, ksn), upd(vs, vsn)
+        kf = (kc.astype(jnp.float32) * ks[..., None]).astype(q.dtype)
+        vf = (vc.astype(jnp.float32) * vs[..., None]).astype(q.dtype)
+        qr = q.reshape(q.shape[0], Hkv, g, D)
+        sc = jnp.einsum("bhgd,bchd->bhgc", qr, kf,
+                        preferred_element_type=jnp.float32) / math.sqrt(D)
+        gpos = start + jnp.arange(C_loc)
+        mask = gpos[None, None, None, :] < vl
+        sc = jnp.where(mask, sc, -jnp.inf)
+        m = jnp.max(sc, axis=-1)
+        m_g = lax.pmax(m, "model")
+        m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+        pr = jnp.where(mask, jnp.exp(sc - m_safe[..., None]), 0.0)
+        l = jnp.sum(pr, axis=-1)
+        l_g = lax.psum(l, "model")
+        o = jnp.einsum("bhgc,bchd->bhgd", pr.astype(vf.dtype), vf,
+                       preferred_element_type=jnp.float32)
+        o_g = lax.psum(o, "model") / jnp.maximum(l_g, 1e-30)[..., None]
+        return (o_g.reshape(q.shape[0], Hq, D).astype(q.dtype),
+                kc, vc, ks, vs)
+
+    cspec = P(bt, "model", None, None)
+    sspec = P(bt, "model", None)
+    fn = shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(bt, None, None), cspec, cspec, sspec, sspec,
+                  P(bt, None, None), P(bt, None, None),
+                  P(bt, None), P(bt, None), P(None), P(None)),
+        out_specs=(P(bt, None, None), cspec, cspec, sspec, sspec),
+        check_rep=False)
+    wp = jnp.asarray(write_pos, jnp.int32).reshape(1)
+    vl = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    return fn(q, k_cache, v_cache, k_scale, v_scale,
+              kq_new, vq_new, ks_new, vs_new, wp, vl)
+
+
+def flash_decode_attention(q, k_cache, v_cache, k_new, v_new, write_pos,
+                           valid_len):
+    """Distributed flash-decoding with an explicit collective schedule.
+
+    The KV cache is sharded along its LENGTH over the "model" mesh axis
+    (batch over "data"); each shard appends the new token locally iff the
+    write position falls in its range, computes a local online-softmax over
+    its cache chunk, and the shards combine with (B, H)-sized pmax/psum —
+    ~2 MB/layer of collectives instead of GSPMD's cache gathers (§Perf H1).
+
+    q: (B, Hq, D); caches: (B, C, Hkv, D); k_new/v_new: (B, Hkv, D);
+    write_pos, valid_len: scalars. Returns (o, kc_updated, vc_updated).
+    Falls back to the dense path outside a mesh context.
+    """
+    from repro import sharding as _sh2
+    mesh = _sh2.current_mesh()
+
+    def _plain():
+        kc = lax.dynamic_update_slice_in_dim(
+            k_cache, k_new[:, None].astype(k_cache.dtype), write_pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(
+            v_cache, v_new[:, None].astype(v_cache.dtype), write_pos, axis=1)
+        return decode_attention(q, kc, vc, valid_len), kc, vc
+
+    if mesh is None or "model" not in mesh.shape:
+        return _plain()
+    B, C, Hkv, D = k_cache.shape
+    n = mesh.shape["model"]
+    if C % n != 0:
+        return _plain()
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    Hq = q.shape[1]
+    g = Hq // Hkv
+    C_loc = C // n
+    bt = None
+    for cand in (("pod", "data"), ("data",)):
+        if all(a in mesh.shape for a in cand):
+            sz = 1
+            for a in cand:
+                sz *= mesh.shape[a]
+            if B % sz == 0:
+                bt = cand if len(cand) > 1 else cand[0]
+                break
+
+    def inner(q, kc, vc, kn, vn, wp, vl):
+        wp, vl = wp[0], vl[0]
+        ax = lax.axis_index("model")
+        start = ax * C_loc
+        li = jnp.clip(wp - start, 0, C_loc - 1)
+        in_rng = (wp >= start) & (wp < start + C_loc)
+        kc2 = lax.dynamic_update_slice_in_dim(
+            kc, kn[:, None].astype(kc.dtype), li, axis=1)
+        vc2 = lax.dynamic_update_slice_in_dim(
+            vc, vn[:, None].astype(vc.dtype), li, axis=1)
+        kc = jnp.where(in_rng, kc2, kc)
+        vc = jnp.where(in_rng, vc2, vc)
+        qr = q.reshape(q.shape[0], Hkv, g, D)
+        s = jnp.einsum("bhgd,bchd->bhgc", qr, kc,
+                       preferred_element_type=jnp.float32) / math.sqrt(D)
+        gpos = start + jnp.arange(C_loc)
+        mask = gpos[None, None, None, :] < vl
+        s = jnp.where(mask, s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        m_g = lax.pmax(m, "model")
+        m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+        l = jnp.sum(p, axis=-1)
+        l_g = lax.psum(l, "model")
+        o = jnp.einsum("bhgc,bchd->bhgd", p.astype(vc.dtype), vc,
+                       preferred_element_type=jnp.float32)
+        o_g = lax.psum(o, "model") / jnp.maximum(l_g, 1e-30)[..., None]
+        return o_g.reshape(q.shape[0], Hq, D).astype(q.dtype), kc, vc
+
+    cache_spec = P(bt, "model", None, None)
+    fn = shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(bt, None, None), cache_spec, cache_spec,
+                  P(bt, None, None), P(bt, None, None), P(None), P(None)),
+        out_specs=(P(bt, None, None), cache_spec, cache_spec),
+        check_rep=False)
+    wp = jnp.asarray(write_pos, jnp.int32).reshape(1)
+    vl = jnp.asarray(valid_len, jnp.int32).reshape(1)
+    return fn(q, k_cache, v_cache, k_new, v_new, wp, vl)
+
+
+# ---------------------------------------------------------------------------
+# FFN blocks
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    h = swish(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def moe_block(x: jnp.ndarray, router_w, w_gate, w_up, w_down, *,
+              top_k: int, capacity_factor: float = 1.25
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based top-k MoE with SORT-BASED dispatch.
+
+    x: (T, d). Expert weights: (E, d, f) / (E, f, d). Returns (out, aux_loss).
+
+    Dispatch/combine are pure row GATHERS over a stable argsort of the
+    (token, slot) -> expert assignment — no scatters. The scatter-based
+    GShard formulation made XLA materialize (T*k, d)-wide u32 index maps
+    (~10 GiB/device on granite train_4k; §Perf H3). Stable sort preserves
+    token order within an expert, so the drop policy (and outputs) match
+    the cumsum/position formulation exactly.
+    """
+    T, d = x.shape
+    E = router_w.shape[1]
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, top_k)                  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(capacity_factor * T * top_k / E))
+    capacity = min(capacity, T)
+    N = T * top_k
+
+    e_flat = expert_idx.reshape(N)
+    g_flat = gate_vals.reshape(N)
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    order = jnp.argsort(e_flat, stable=True)                         # (N,)
+    e_sorted = e_flat[order]
+    counts = jnp.bincount(e_flat, length=E)                          # (E,)
+    starts = jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_sorted = jnp.arange(N) - starts[e_sorted]                    # 0..cnt-1
+
+    # dispatch: expert e's tokens live at sorted rows [starts[e], +capacity)
+    slot_rows = starts[:, None] + jnp.arange(capacity)[None, :]      # (E, C)
+    slot_valid = jnp.arange(capacity)[None, :] < counts[:, None]
+    rows = tok_ids[order]                                            # (N,)
+    expert_tok = rows[jnp.clip(slot_rows, 0, N - 1)]                 # (E, C)
+    expert_in = x[expert_tok] * slot_valid[..., None].astype(x.dtype)
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, w_gate)
+    h = swish(h) * jnp.einsum("ecd,edf->ecf", expert_in, w_up)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, w_down)               # (E, C, d)
+
+    # combine: row-gather each kept slot's output, un-sort, weighted sum
+    kept = pos_sorted < capacity
+    pos_c = jnp.clip(pos_sorted, 0, capacity - 1)
+    out_sorted = expert_out[e_sorted, pos_c]                         # (N, d)
+    out_sorted = out_sorted * (kept.astype(jnp.float32)
+                               * g_flat[order])[:, None].astype(out_sorted.dtype)
+    inv = jnp.argsort(order)
+    out = jnp.sum(out_sorted[inv].reshape(T, top_k, d), axis=1)
+
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)                                     # (T,E)->(E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(x: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray,
+            mask: Optional[jnp.ndarray] = None, chunk: int = 256
+            ) -> jnp.ndarray:
+    """Fused next-token cross-entropy WITHOUT materializing (B, S, V) logits.
+
+    x: (B, S, d) final hidden states (already norm'd); w: (d, V) unembedding;
+    labels: (B, S). Computes mean nll of labels[:, 1:] given x[:, :-1],
+    scanning the sequence in `chunk`-sized slices so peak logits memory is
+    (B, chunk, V) — essential for the 100k-256k vocab architectures.
+    mask: optional (B, S-1) validity mask.
+    """
+    B, S, d = x.shape
+    xs = x[:, :-1, :]
+    ys = labels[:, 1:]
+    n = S - 1
+    m = mask if mask is not None else jnp.ones((B, n), jnp.float32)
+    chunk = min(chunk, n)
+    pad = (-n) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        ys = jnp.pad(ys, ((0, 0), (0, pad)))
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    nc = (n + pad) // chunk
+    xs = xs.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ys = ys.reshape(B, nc, chunk).transpose(1, 0, 2)
+    m = m.reshape(B, nc, chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, yc, mc = inp
+        lg = (xc.astype(jnp.float32) @ w.astype(jnp.float32))   # (B, c, V)
+        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, yc[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((logz - gold) * mc)
+        cnt = cnt + jnp.sum(mc)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = lax.scan(jax.checkpoint(body),
+                             (jnp.zeros(()), jnp.zeros(())), (xs, ys, m))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def next_token_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                    mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean cross-entropy; logits (B, S, V), labels (B, S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,210 @@
+"""SeamlessM4T-medium text backbone (arXiv:2308.11596): encoder-decoder.
+
+The speech frontend (mel filterbank + conformer feature extractor) is a STUB
+per the assignment: the encoder consumes precomputed frame embeddings
+(B, T_enc, d) supplied by ``input_specs``. Encoder: bidirectional pre-norm
+transformer. Decoder: causal self-attention + cross-attention + SwiGLU FFN.
+Decode cache: self-attn KV ring + precomputed cross-attn K/V (encoder memory).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import sharding as _sh
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, *, remat: bool = False, **_):
+        self.cfg = cfg
+        self.remat = remat
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng, dtype=jnp.float32) -> Tuple[cm.Params, cm.Axes]:
+        cfg = self.cfg
+        d, H, Hkv, hd, f = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+            cfg.resolved_head_dim, cfg.d_ff
+        Le, Ld = cfg.encoder_layers, cfg.num_layers
+        b = cm.ParamBuilder(rng, dtype)
+        b.param("embed", (cfg.vocab_size, d), ("vocab", "embed"),
+                scale=1.0 / math.sqrt(d))
+        b.param("unembed", (d, cfg.vocab_size), ("embed", "vocab"))
+        b.param("final_norm", (d,), ("embed",), init="ones")
+        b.param("enc_final_norm", (d,), ("embed",), init="ones")
+
+        def attn_params(pfx, n):
+            b.param(f"{pfx}/norm", (n, d), ("layers", "embed"), init="ones")
+            b.param(f"{pfx}/wq", (n, d, H, hd), ("layers", "embed", "heads", "head_dim"))
+            b.param(f"{pfx}/wk", (n, d, Hkv, hd), ("layers", "embed", "kv_heads", "head_dim"))
+            b.param(f"{pfx}/wv", (n, d, Hkv, hd), ("layers", "embed", "kv_heads", "head_dim"))
+            b.param(f"{pfx}/wo", (n, H, hd, d), ("layers", "heads", "head_dim", "embed"),
+                    scale=1.0 / math.sqrt(H * hd))
+
+        def ffn_params(pfx, n):
+            b.param(f"{pfx}/ffn_norm", (n, d), ("layers", "embed"), init="ones")
+            b.param(f"{pfx}/w_gate", (n, d, f), ("layers", "embed", "ffn"))
+            b.param(f"{pfx}/w_up", (n, d, f), ("layers", "embed", "ffn"))
+            b.param(f"{pfx}/w_down", (n, f, d), ("layers", "ffn", "embed"))
+
+        attn_params("enc/self", Le)
+        ffn_params("enc", Le)
+        attn_params("dec/self", Ld)
+        attn_params("dec/cross", Ld)
+        ffn_params("dec", Ld)
+        return b.build()
+
+    def _split(self, params, prefix):
+        return {k[len(prefix) + 1:]: v for k, v in params.items()
+                if k.startswith(prefix + "/")}
+
+    # -------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        """frames: (B, T, d) precomputed frontend embeddings -> memory."""
+        cfg = self.cfg
+        enc = self._split(params, "enc")
+
+        def body(x, lp):
+            h = cm.rms_norm(x, lp["self/norm"])
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["self/wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["self/wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["self/wv"])
+            pos = jnp.arange(x.shape[1])
+            cos, sin = cm.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+            q, k = cm.apply_rope(q, cos, sin), cm.apply_rope(k, cos, sin)
+            a = cm.flash_attention(q, k, v, causal=False,
+                                   block_q=min(512, x.shape[1]),
+                                   block_kv=min(512, x.shape[1]))
+            x = x + jnp.einsum("bshk,hkd->bsd", a, lp["self/wo"])
+            h = cm.rms_norm(x, lp["ffn_norm"])
+            x = _sh.constrain_batch(
+                x + cm.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"]))
+            return x, None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, _ = lax.scan(body, frames, enc)
+        return cm.rms_norm(x, params["enc_final_norm"])
+
+    # -------------------------------------------------------------- decoder
+    def _dec_stack(self, params, x, memory, pos0=0, collect_kv: bool = True):
+        cfg = self.cfg
+        dec = self._split(params, "dec")
+        S, T = x.shape[1], memory.shape[1]
+
+        def body(x, lp):
+            h = cm.rms_norm(x, lp["self/norm"])
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["self/wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["self/wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["self/wv"])
+            pos = pos0 + jnp.arange(S)
+            cos, sin = cm.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+            q, k = cm.apply_rope(q, cos, sin), cm.apply_rope(k, cos, sin)
+            a = cm.flash_attention(q, k, v, causal=True,
+                                   block_q=min(512, S), block_kv=min(512, S))
+            x = x + jnp.einsum("bshk,hkd->bsd", a, lp["self/wo"])
+            h = cm.rms_norm(x, lp["cross/norm"])
+            qc = jnp.einsum("bsd,dhk->bshk", h, lp["cross/wq"])
+            kc = jnp.einsum("btd,dhk->bthk", memory, lp["cross/wk"])
+            vc = jnp.einsum("btd,dhk->bthk", memory, lp["cross/wv"])
+            ac = cm.flash_attention(qc, kc, vc, causal=False,
+                                    block_q=min(512, S), block_kv=min(512, T))
+            x = x + jnp.einsum("bshk,hkd->bsd", ac, lp["cross/wo"])
+            h = cm.rms_norm(x, lp["ffn_norm"])
+            x = _sh.constrain_batch(
+                x + cm.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"]))
+            return x, ((k, v) if collect_kv else None)
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, kvs = lax.scan(body, x, dec)
+        return x, kvs
+
+    # ----------------------------------------------------------- train api
+    def loss(self, params, batch):
+        frames = batch["frontend"]
+        memory = self.encode(params, frames)
+        x = params["embed"][batch["tokens"]]
+        x, _ = self._dec_stack(params, x, memory, collect_kv=False)
+        x = cm.rms_norm(x, params["final_norm"])
+        loss = cm.lm_loss(x, params["unembed"], batch["labels"],
+                          batch.get("mask", None))
+        return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------- serve api
+    def init_cache(self, B, cache_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        Ld, T = cfg.num_layers, cfg.num_frontend_tokens
+        hd, Hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        axes = ("layers", "batch", "cache", "kv_heads", "head_dim")
+        cache = {
+            "k": jnp.zeros((Ld, B, cache_len, Hkv, hd), dtype),
+            "v": jnp.zeros((Ld, B, cache_len, Hkv, hd), dtype),
+            "xk": jnp.zeros((Ld, B, T, Hkv, hd), dtype),
+            "xv": jnp.zeros((Ld, B, T, Hkv, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+        cache_axes = {"k": axes, "v": axes, "xk": axes, "xv": axes, "pos": ()}
+        return cache, cache_axes
+
+    def prefill(self, params, tokens, frontend=None, pad_to: int = 0):
+        """tokens: decoder prompt; frontend: audio frames."""
+        memory = self.encode(params, frontend)
+        x = params["embed"][tokens]
+        x, (ks, vs) = self._dec_stack(params, x, memory)
+        dec = self._split(params, "dec")
+        xks = jnp.einsum("btd,ldhk->lbthk", memory, dec["cross/wk"])
+        xvs = jnp.einsum("btd,ldhk->lbthk", memory, dec["cross/wv"])
+        xl = cm.rms_norm(x[:, -1:, :], params["final_norm"])
+        lg = jnp.einsum("bsd,dv->bsv", xl, params["unembed"])[:, 0]
+        if pad_to > ks.shape[2]:
+            pad = [(0, 0), (0, 0), (0, pad_to - ks.shape[2]), (0, 0), (0, 0)]
+            ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+        cache = {"k": ks, "v": vs, "xk": xks.astype(ks.dtype),
+                 "xv": xvs.astype(vs.dtype),
+                 "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+        return lg, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens][:, None, :]
+        pos = cache["pos"]
+        dec = self._split(params, "dec")
+        C = cache["k"].shape[2]
+
+        def body(x, per):
+            lp, kc, vc, xk, xv = per
+            h = cm.rms_norm(x, lp["self/norm"])
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["self/wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["self/wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["self/wv"])
+            cos, sin = cm.rope_angles(pos[None], cfg.resolved_head_dim,
+                                      cfg.rope_theta)
+            q, k = cm.apply_rope(q, cos[None], sin[None]), \
+                cm.apply_rope(k, cos[None], sin[None])
+            idx = jnp.minimum(pos, C - 1)
+            kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), idx, 1)
+            vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), idx, 1)
+            kc = _sh.constrain_batch(kc)
+            vc = _sh.constrain_batch(vc)
+            o = cm.decode_attention(q[:, 0], kc, vc, jnp.minimum(pos + 1, C))
+            x = x + jnp.einsum("bhk,hkd->bd", o, lp["self/wo"])[:, None]
+            h = cm.rms_norm(x, lp["cross/norm"])
+            qc = jnp.einsum("bsd,dhk->bshk", h, lp["cross/wq"])
+            oc = cm.decode_attention(qc[:, 0], xk, xv, xk.shape[1])
+            x = x + jnp.einsum("bhk,hkd->bd", oc, lp["cross/wo"])[:, None]
+            h = cm.rms_norm(x, lp["ffn_norm"])
+            x = x + cm.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+            return x, (kc, vc)
+
+        x, (ks, vs) = lax.scan(body, x, (dec, cache["k"], cache["v"],
+                                         cache["xk"], cache["xv"]))
+        xl = cm.rms_norm(x, params["final_norm"])
+        lg = jnp.einsum("bsd,dv->bsv", xl, params["unembed"])[:, 0]
+        return lg, {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"],
+                    "pos": pos + 1}

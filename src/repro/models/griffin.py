@@ -1,0 +1,318 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks +
+local (sliding-window) MQA attention in a 2:1 pattern, each followed by a
+gated-MLP block.
+
+Layer plan: layers are grouped as (recurrent, recurrent, local_attn) triples
+scanned together (uniform scan body), with `num_layers % 3` trailing
+recurrent layers in a second scan. Decode state: per recurrent layer an
+RG-LRU hidden h (B, D) + temporal-conv tail (B, 3, D); per attention layer a
+ring-buffer KV of the window size — O(window), the hybrid's long-context
+advantage.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import sharding as _sh
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+_C = 8.0           # RG-LRU decay sharpness constant (paper §2.4)
+_CONV_W = 4        # temporal conv width
+
+
+class Griffin:
+    def __init__(self, cfg: ModelConfig, *, remat: bool = False, **_):
+        self.cfg = cfg
+        self.remat = remat
+        self.n_tri = cfg.num_layers // 3
+        self.n_rem = cfg.num_layers % 3          # trailing recurrent layers
+        self.n_rec = 2 * self.n_tri + self.n_rem
+        self.n_attn = self.n_tri
+        self.window = cfg.sliding_window or 2048
+        self.d_rnn = cfg.lru_width or cfg.d_model
+
+    # ---------------------------------------------------------------- init
+    def _rec_params(self, b: cm.ParamBuilder, n: int):
+        d, D = self.cfg.d_model, self.d_rnn
+        f = self.cfg.d_ff
+        la = ("layers",)
+        b.param("rec/norm", (n, d), la + ("embed",), init="ones")
+        b.param("rec/w_in_a", (n, d, D), la + ("embed", "rnn"))
+        b.param("rec/w_in_b", (n, d, D), la + ("embed", "rnn"))
+        b.param("rec/conv_w", (n, _CONV_W, D), la + (None, "rnn"))
+        b.param("rec/conv_b", (n, D), la + ("rnn",), init="zeros")
+        b.param("rec/w_gate_a", (n, D), la + ("rnn",), init="zeros")   # recurrence gate diag-ish
+        b.param("rec/w_gate_x", (n, D), la + ("rnn",), init="zeros")   # input gate
+        b.param("rec/lambda", (n, D), la + ("rnn",), init="uniform", scale=1.0)
+        b.param("rec/w_out", (n, D, d), la + ("rnn", "embed"),
+                scale=1.0 / math.sqrt(D))
+        b.param("rec/mlp_norm", (n, d), la + ("embed",), init="ones")
+        b.param("rec/mlp_gate", (n, d, f), la + ("embed", "ffn"))
+        b.param("rec/mlp_up", (n, d, f), la + ("embed", "ffn"))
+        b.param("rec/mlp_down", (n, f, d), la + ("ffn", "embed"))
+
+    def _attn_params(self, b: cm.ParamBuilder, n: int):
+        cfg = self.cfg
+        d, H, Hkv, hd, f = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+            cfg.resolved_head_dim, cfg.d_ff
+        la = ("layers",)
+        b.param("attn/norm", (n, d), la + ("embed",), init="ones")
+        b.param("attn/wq", (n, d, H, hd), la + ("embed", "heads", "head_dim"))
+        b.param("attn/wk", (n, d, Hkv, hd), la + ("embed", "kv_heads", "head_dim"))
+        b.param("attn/wv", (n, d, Hkv, hd), la + ("embed", "kv_heads", "head_dim"))
+        b.param("attn/wo", (n, H, hd, d), la + ("heads", "head_dim", "embed"),
+                scale=1.0 / math.sqrt(H * hd))
+        b.param("attn/mlp_norm", (n, d), la + ("embed",), init="ones")
+        b.param("attn/mlp_gate", (n, d, f), la + ("embed", "ffn"))
+        b.param("attn/mlp_up", (n, d, f), la + ("embed", "ffn"))
+        b.param("attn/mlp_down", (n, f, d), la + ("ffn", "embed"))
+
+    def init(self, rng, dtype=jnp.float32) -> Tuple[cm.Params, cm.Axes]:
+        cfg = self.cfg
+        b = cm.ParamBuilder(rng, dtype)
+        d = cfg.d_model
+        b.param("embed", (cfg.vocab_size, d), ("vocab", "embed"),
+                scale=1.0 / math.sqrt(d))
+        if not cfg.tie_embeddings:
+            b.param("unembed", (d, cfg.vocab_size), ("embed", "vocab"))
+        b.param("final_norm", (d,), ("embed",), init="ones")
+        self._rec_params(b, self.n_rec)
+        if self.n_attn:
+            self._attn_params(b, self.n_attn)
+        return b.build()
+
+    # ------------------------------------------------------------- blocks
+    def _rg_lru(self, lp, x, h0):
+        """x: (B, S, D) conv output; h0: (B, D). Returns (y, h_last)."""
+        r = jax.nn.sigmoid(x * lp["w_gate_a"])
+        i = jax.nn.sigmoid(x * lp["w_gate_x"])
+        log_a = -_C * jax.nn.softplus(lp["lambda"]) * r        # (B,S,D) <= 0
+        a = jnp.exp(log_a.astype(jnp.float32))
+        gated = (i * x).astype(jnp.float32) * jnp.sqrt(
+            jnp.maximum(1.0 - jnp.square(a), 1e-12))
+
+        def step(h, av):
+            a_t, v_t = av
+            h = a_t * h + v_t
+            return h, h
+
+        a_s = jnp.moveaxis(a, 1, 0)
+        v_s = jnp.moveaxis(gated, 1, 0)
+        h_last, ys = lax.scan(step, h0.astype(jnp.float32), (a_s, v_s))
+        return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_last
+
+    def _recurrent_block(self, lp, x, state):
+        """Griffin recurrent mixing block + MLP block."""
+        h = cm.rms_norm(x, lp["norm"])
+        xa = jnp.einsum("bsd,dD->bsD", h, lp["w_in_a"])
+        xb = cm.swish(jnp.einsum("bsd,dD->bsD", h, lp["w_in_b"]))
+        # temporal conv over (prev conv tail ++ xa)
+        tail = state["conv"]                                   # (B, 3, D)
+        xc = jnp.concatenate([tail.astype(xa.dtype), xa], axis=1)
+        w = lp["conv_w"]                                       # (4, D)
+        conv = sum(xc[:, i:i + xa.shape[1], :] * w[i] for i in range(_CONV_W))
+        conv = conv + lp["conv_b"]
+        y, h_last = self._rg_lru(lp, conv, state["h"])
+        y = y * xb
+        x = x + jnp.einsum("bsD,Dd->bsd", y, lp["w_out"])
+        h = cm.rms_norm(x, lp["mlp_norm"])
+        x = x + cm.swiglu(h, lp["mlp_gate"], lp["mlp_up"], lp["mlp_down"])
+        new_state = {"h": h_last, "conv": xc[:, -(_CONV_W - 1):, :].astype(tail.dtype)}
+        return _sh.constrain_batch(x), new_state
+
+    def _attn_block(self, lp, x, kv_state, pos0):
+        cfg = self.cfg
+        h = cm.rms_norm(x, lp["norm"])
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        S = x.shape[1]
+        pos = pos0 + jnp.arange(S)
+        cos, sin = cm.rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        q = cm.apply_rope(q, cos, sin)
+        k = cm.apply_rope(k, cos, sin)
+        attn = cm.flash_attention(q, k, v, causal=True, window=self.window,
+                                  block_q=min(512, S), block_kv=min(512, S))
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
+        h = cm.rms_norm(x, lp["mlp_norm"])
+        x = _sh.constrain_batch(
+            x + cm.swiglu(h, lp["mlp_gate"], lp["mlp_up"], lp["mlp_down"]))
+        W = min(self.window, S)
+        return x, {"k": k[:, -W:], "v": v[:, -W:]}
+
+    # ------------------------------------------------------------- forward
+    def _unembed(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings else params["unembed"]
+
+    def _split(self, params, prefix):
+        return {k.split("/", 1)[1]: v for k, v in params.items()
+                if k.startswith(prefix + "/")}
+
+    def _stack(self, params, x, rec_states, pos0=0, collect: bool = True):
+        """Runs triples via scan + trailing recurrent layers via scan.
+        rec_states: stacked (n_rec, ...) dict. Returns x, new rec states,
+        per-attn-layer kv (stacked python list)."""
+        rec = self._split(params, "rec")
+        attn = self._split(params, "attn") if self.n_attn else None
+        kv_out = []
+        new_rec = None
+
+        if self.n_tri:
+            rec_tri = {k: v[: 2 * self.n_tri].reshape(
+                (self.n_tri, 2) + v.shape[1:]) for k, v in rec.items()}
+            st_tri = jax.tree.map(lambda s: s[: 2 * self.n_tri].reshape(
+                (self.n_tri, 2) + s.shape[1:]), rec_states)
+
+            def tri_body(x, per):
+                lp_r, st, lp_a = per
+                outs = []
+                for j in range(2):
+                    lpj = {k: v[j] for k, v in lp_r.items()}
+                    stj = {k: v[j] for k, v in st.items()}
+                    x, ns = self._recurrent_block(lpj, x, stj)
+                    outs.append(ns)
+                x, kv = self._attn_block(lp_a, x, None, pos0)
+                if not collect:
+                    return x, (None, None)
+                ns = jax.tree.map(lambda a, b: jnp.stack([a, b]), *outs)
+                return x, (ns, kv)
+
+            if self.remat:
+                tri_body = jax.checkpoint(tri_body)
+            x, (ns_tri, kvs) = lax.scan(tri_body, x, (rec_tri, st_tri, attn))
+            kv_out = kvs  # stacked (n_attn, B, W, Hkv, hd)
+            if collect:
+                new_rec = jax.tree.map(
+                    lambda s: s.reshape((2 * self.n_tri,) + s.shape[2:]), ns_tri)
+
+        if self.n_rem:
+            rec_rem = {k: v[2 * self.n_tri:] for k, v in rec.items()}
+            st_rem = jax.tree.map(lambda s: s[2 * self.n_tri:], rec_states)
+
+            def rem_body(x, per):
+                lp, st = per
+                x, ns = self._recurrent_block(lp, x, st)
+                return x, (ns if collect else None)
+
+            if self.remat:
+                rem_body = jax.checkpoint(rem_body)
+            x, ns_rem = lax.scan(rem_body, x, (rec_rem, st_rem))
+            if collect:
+                new_rec = ns_rem if new_rec is None else jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], 0), new_rec, ns_rem)
+        return x, new_rec, kv_out
+
+    def _zero_rec_states(self, B, dtype):
+        D = self.d_rnn
+        states = {
+            "h": jnp.zeros((self.n_rec, B, D), jnp.float32),
+            "conv": jnp.zeros((self.n_rec, B, _CONV_W - 1, D), dtype),
+        }
+        axes = {"h": ("layers", "batch", "rnn"),
+                "conv": ("layers", "batch", None, "rnn")}
+        return states, axes
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        states, _ = self._zero_rec_states(tokens.shape[0], x.dtype)
+        x, _, _ = self._stack(params, x, states, collect=False)
+        x = cm.rms_norm(x, params["final_norm"])
+        loss = cm.lm_loss(x, self._unembed(params), batch["labels"],
+                          batch.get("mask", None))
+        return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------- serve api
+    def init_cache(self, B, cache_len, dtype=jnp.bfloat16):
+        W = min(self.window, cache_len)
+        states, axes = self._zero_rec_states(B, dtype)
+        cache = dict(states)
+        cache_axes = dict(axes)
+        if self.n_attn:
+            shape = (self.n_attn, B, W, self.cfg.num_kv_heads,
+                     self.cfg.resolved_head_dim)
+            cache["k"] = jnp.zeros(shape, dtype)
+            cache["v"] = jnp.zeros(shape, dtype)
+            cache_axes["k"] = ("layers", "batch", "cache", "kv_heads", "head_dim")
+            cache_axes["v"] = cache_axes["k"]
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        cache_axes["pos"] = ()
+        return cache, cache_axes
+
+    def prefill(self, params, tokens, frontend=None, pad_to: int = 0):
+        x = params["embed"][tokens]
+        states, _ = self._zero_rec_states(tokens.shape[0], x.dtype)
+        x, new_rec, kvs = self._stack(params, x, states)
+        xl = cm.rms_norm(x[:, -1:, :], params["final_norm"])
+        lg = jnp.einsum("bsd,dv->bsv", xl, self._unembed(params))[:, 0]
+        cache = dict(new_rec)
+        if self.n_attn:
+            ks, vs = kvs["k"], kvs["v"]
+            W = min(self.window, max(pad_to, ks.shape[2]))
+            if W > ks.shape[2]:
+                pad = [(0, 0), (0, 0), (0, W - ks.shape[2]), (0, 0), (0, 0)]
+                ks, vs = jnp.pad(ks, pad), jnp.pad(vs, pad)
+            cache["k"] = ks
+            cache["v"] = vs
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return lg, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens][:, None, :]
+        pos = cache["pos"]
+        rec = self._split(params, "rec")
+        attn = self._split(params, "attn") if self.n_attn else None
+        new_cache = {"pos": pos + 1}
+
+        # layer order: for triple t: rec(2t), rec(2t+1), attn(t); then remainder
+        new_h, new_conv = [], []
+        new_k, new_v = [], []
+        ai = 0
+        for li in range(self.n_rec + self.n_attn):
+            tri, off = divmod(li, 3)
+            if tri < self.n_tri and off == 2:
+                lp = {k: v[ai] for k, v in attn.items()}
+                kc, vc = cache["k"][ai], cache["v"][ai]
+                W = kc.shape[1]
+                h = cm.rms_norm(x, lp["norm"])
+                q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+                k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+                v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+                cos, sin = cm.rope_angles(pos[None], cfg.resolved_head_dim,
+                                          cfg.rope_theta)
+                q = cm.apply_rope(q, cos[None], sin[None])
+                k = cm.apply_rope(k, cos[None], sin[None])
+                idx = pos % W
+                kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), idx, 1)
+                vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), idx, 1)
+                kc = _sh.constrain_batch(kc)
+                vc = _sh.constrain_batch(vc)
+                o = cm.decode_attention(q[:, 0], kc, vc, jnp.minimum(pos + 1, W))
+                x = x + jnp.einsum("bhk,hkd->bd", o, lp["wo"])[:, None]
+                h = cm.rms_norm(x, lp["mlp_norm"])
+                x = x + cm.swiglu(h, lp["mlp_gate"], lp["mlp_up"], lp["mlp_down"])
+                new_k.append(kc)
+                new_v.append(vc)
+                ai += 1
+            else:
+                ri = 2 * tri + off if tri < self.n_tri else li - self.n_attn
+                lp = {k: v[ri] for k, v in rec.items()}
+                st = {"h": cache["h"][ri], "conv": cache["conv"][ri]}
+                x, ns = self._recurrent_block(lp, x, st)
+                new_h.append(ns["h"])
+                new_conv.append(ns["conv"])
+        new_cache["h"] = jnp.stack(new_h)
+        new_cache["conv"] = jnp.stack(new_conv)
+        if self.n_attn:
+            new_cache["k"] = jnp.stack(new_k)
+            new_cache["v"] = jnp.stack(new_v)
+        xl = cm.rms_norm(x, params["final_norm"])
+        lg = jnp.einsum("bsd,dv->bsv", xl, self._unembed(params))[:, 0]
+        return lg, new_cache

@@ -1,0 +1,231 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free RNN with
+data-dependent decay and token shift.
+
+Time-mix:  r,k,v,g,w projections with data-dependent token-shift (low-rank
+"ddlerp"), per-channel data-dependent decay w_t = exp(-exp(w0 + lora_w(x))),
+bonus u, per-head WKV state S in R^{hd x hd}:
+    o_t = r_t · (S_{t-1} + diag(u) k_t v_t^T);   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+Channel-mix: squared-ReLU MLP with token shift.
+
+Decode state is O(1) per layer — the framework's native long_500k citizen.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import sharding as _sh
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+_DDLERP_RANK = 32
+_DECAY_RANK = 64
+
+
+class RWKV6:
+    def __init__(self, cfg: ModelConfig, *, remat: bool = False, **_):
+        self.cfg = cfg
+        self.remat = remat
+        assert cfg.d_model % cfg.resolved_head_dim == 0
+        self.n_heads = cfg.d_model // cfg.resolved_head_dim
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng, dtype=jnp.float32) -> Tuple[cm.Params, cm.Axes]:
+        cfg, H, hd = self.cfg, self.n_heads, self.cfg.resolved_head_dim
+        d, L, f = cfg.d_model, cfg.num_layers, cfg.d_ff
+        b = cm.ParamBuilder(rng, dtype)
+        b.param("embed", (cfg.vocab_size, d), ("vocab", "embed"),
+                scale=1.0 / math.sqrt(d))
+        b.param("unembed", (d, cfg.vocab_size), ("embed", "vocab"))
+        b.param("final_norm", (d,), ("embed",), init="ones")
+        la, le = ("layers",), ("layers", "embed")
+        b.param("blocks/tm_norm", (L, d), le, init="ones")
+        b.param("blocks/cm_norm", (L, d), le, init="ones")
+        # ddlerp token-shift mixers: base mu for x and per-target (r,k,v,w,g)
+        b.param("blocks/mu_x", (L, d), le, init="zeros")
+        b.param("blocks/mu_rkvwg", (L, 5, d), ("layers", None, "embed"), init="zeros")
+        b.param("blocks/ddlerp_a", (L, d, 5 * _DDLERP_RANK), ("layers", "embed", None))
+        b.param("blocks/ddlerp_b", (L, 5, _DDLERP_RANK, d), ("layers", None, None, "embed"))
+        # time-mix projections
+        for nm in ("wr", "wk", "wv", "wg"):
+            b.param(f"blocks/{nm}", (L, d, H, hd),
+                    ("layers", "embed", "heads", "head_dim"))
+        b.param("blocks/wo", (L, H, hd, d), ("layers", "heads", "head_dim", "embed"),
+                scale=1.0 / math.sqrt(d))
+        # data-dependent decay (low-rank) + bonus
+        b.param("blocks/w0", (L, H, hd), ("layers", "heads", "head_dim"), init="zeros")
+        b.param("blocks/decay_a", (L, d, _DECAY_RANK), ("layers", "embed", None))
+        b.param("blocks/decay_b", (L, _DECAY_RANK, H, hd),
+                ("layers", None, "heads", "head_dim"))
+        b.param("blocks/u", (L, H, hd), ("layers", "heads", "head_dim"), init="zeros")
+        b.param("blocks/ln_out", (L, H, hd), ("layers", "heads", "head_dim"), init="ones")
+        # channel-mix
+        b.param("blocks/cm_mu_k", (L, d), le, init="zeros")
+        b.param("blocks/cm_mu_r", (L, d), le, init="zeros")
+        b.param("blocks/cm_wk", (L, d, f), ("layers", "embed", "ffn"))
+        b.param("blocks/cm_wv", (L, f, d), ("layers", "ffn", "embed"))
+        b.param("blocks/cm_wr", (L, d, d), ("layers", "embed", "embed_out"))
+        return b.build()
+
+    # ------------------------------------------------------------- pieces
+    def _ddlerp(self, lp, x, x_prev):
+        """Data-dependent token-shift. x, x_prev: (B, S, d) ->
+        five mixed streams (B, S, 5, d) for (r, k, v, w, g)."""
+        dx = x_prev - x
+        xx = x + dx * lp["mu_x"]
+        low = jnp.tanh(jnp.einsum("bsd,dr->bsr", xx, lp["ddlerp_a"]))
+        low = low.reshape(*low.shape[:-1], 5, _DDLERP_RANK)
+        off = jnp.einsum("bsfr,frd->bsfd", low, lp["ddlerp_b"])
+        mix = lp["mu_rkvwg"] + off                       # (B,S,5,d)
+        return x[..., None, :] + dx[..., None, :] * mix
+
+    def _decay(self, lp, xw):
+        """xw: (B,S,d) -> per-token decay w in (0,1): (B,S,H,hd)."""
+        low = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, lp["decay_a"]))
+        wlog = lp["w0"] + jnp.einsum("bsr,rhk->bshk", low, lp["decay_b"])
+        return jnp.exp(-jnp.exp(wlog.astype(jnp.float32)))
+
+    def _wkv(self, r, k, v, w, u, state, chunk: int = 64):
+        """r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) carries.
+        Returns (out (B,S,H,hd), new_state).
+
+        Two-level scan: an outer scan over checkpointed chunks bounds BPTT
+        memory to O(S/chunk + chunk) state copies instead of O(S) — the
+        chunked-recurrence scheme RWKV/linear-attention trainings use.
+        """
+        def step(S, rkvw):
+            rt, kt, vt, wt = rkvw                       # (B,H,hd)
+            kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)    # outer product
+            out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+            S = wt[..., None] * S + kv
+            return S, out
+
+        rs, ks, vs, ws = (jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                          for t in (r, k, v, w))
+        state = state.astype(jnp.float32)
+        S_len = rs.shape[0]
+        if S_len % chunk != 0 or S_len <= chunk:
+            state, outs = lax.scan(step, state, (rs, ks, vs, ws))
+            return jnp.moveaxis(outs, 0, 1), state
+
+        n_chunks = S_len // chunk
+        xs = jax.tree.map(
+            lambda t: t.reshape((n_chunks, chunk) + t.shape[1:]),
+            (rs, ks, vs, ws))
+
+        def chunk_body(S, xc):
+            return lax.scan(step, S, xc)
+
+        state, outs = lax.scan(jax.checkpoint(chunk_body), state, xs)
+        outs = outs.reshape((S_len,) + outs.shape[2:])
+        return jnp.moveaxis(outs, 0, 1), state
+
+    def _time_mix(self, lp, x, x_prev_tok, state):
+        """x: (B,S,d). x_prev_tok: (B,d) last token of previous chunk.
+        Returns (out, last_token, new_state)."""
+        B, S, d = x.shape
+        H, hd = self.n_heads, self.cfg.resolved_head_dim
+        xs = jnp.concatenate([x_prev_tok[:, None, :], x[:, :-1, :]], axis=1)
+        mixed = self._ddlerp(lp, x, xs)                 # (B,S,5,d)
+        xr, xk, xv, xw, xg = (mixed[:, :, i, :] for i in range(5))
+        r = jnp.einsum("bsd,dhk->bshk", xr, lp["wr"])
+        k = jnp.einsum("bsd,dhk->bshk", xk, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", xv, lp["wv"])
+        g = cm.swish(jnp.einsum("bsd,dhk->bshk", xg, lp["wg"]))
+        w = self._decay(lp, xw)
+        out, state = self._wkv(r, k, v, w, lp["u"].astype(jnp.float32), state)
+        # per-head groupnorm
+        mu = jnp.mean(out, axis=-1, keepdims=True)
+        var = jnp.var(out, axis=-1, keepdims=True)
+        out = (out - mu) * lax.rsqrt(var + 1e-5) * lp["ln_out"]
+        out = (out.astype(x.dtype) * g)
+        y = jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+        return y, x[:, -1, :], state
+
+    def _channel_mix(self, lp, x, x_prev_tok):
+        xs = jnp.concatenate([x_prev_tok[:, None, :], x[:, :-1, :]], axis=1)
+        dx = xs - x
+        xk = x + dx * lp["cm_mu_k"]
+        xr = x + dx * lp["cm_mu_r"]
+        k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, lp["cm_wk"])))
+        kv = jnp.einsum("bsf,fd->bsd", k, lp["cm_wv"])
+        r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, lp["cm_wr"]))
+        return r * kv, x[:, -1, :]
+
+    # ------------------------------------------------------------- forward
+    def _stack(self, params, x, states, collect_states: bool = True):
+        """states: dict of stacked (L, ...) carries."""
+        blocks = {k.split("/", 1)[1]: v for k, v in params.items()
+                  if k.startswith("blocks/")}
+
+        def body(x, lp_state):
+            lp, st = lp_state
+            h, tm_tok, s_new = self._time_mix(
+                lp, cm.rms_norm(x, lp["tm_norm"]), st["tm_tok"], st["wkv"])
+            x = x + h
+            h, cm_tok = self._channel_mix(
+                lp, cm.rms_norm(x, lp["cm_norm"]), st["cm_tok"])
+            x = _sh.constrain_batch(x + h)
+            if not collect_states:
+                return x, None
+            return x, {"wkv": s_new, "tm_tok": tm_tok, "cm_tok": cm_tok}
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, new_states = lax.scan(body, x, (blocks, states))
+        return x, new_states
+
+    def _zero_states(self, B, dtype):
+        cfg, H, hd = self.cfg, self.n_heads, self.cfg.resolved_head_dim
+        L, d = cfg.num_layers, cfg.d_model
+        states = {
+            "wkv": jnp.zeros((L, B, H, hd, hd), jnp.float32),
+            "tm_tok": jnp.zeros((L, B, d), dtype),
+            "cm_tok": jnp.zeros((L, B, d), dtype),
+        }
+        axes = {
+            "wkv": ("layers", "batch", "heads", "head_dim", "head_dim2"),
+            "tm_tok": ("layers", "batch", "embed"),
+            "cm_tok": ("layers", "batch", "embed"),
+        }
+        return states, axes
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        states, _ = self._zero_states(tokens.shape[0], x.dtype)
+        x, _ = self._stack(params, x, states, collect_states=False)
+        x = cm.rms_norm(x, params["final_norm"])
+        loss = cm.lm_loss(x, params["unembed"], batch["labels"],
+                          batch.get("mask", None))
+        return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------- serve api
+    def init_cache(self, B, cache_len, dtype=jnp.bfloat16):
+        states, axes = self._zero_states(B, dtype)
+        states["pos"] = jnp.zeros((), jnp.int32)
+        axes["pos"] = ()
+        return states, axes
+
+    def prefill(self, params, tokens, frontend=None, pad_to: int = 0):
+        x = params["embed"][tokens]
+        states, _ = self._zero_states(tokens.shape[0], x.dtype)
+        x, states = self._stack(params, x, states)
+        x = cm.rms_norm(x[:, -1:, :], params["final_norm"])
+        lg = jnp.einsum("bsd,dv->bsv", x, params["unembed"])[:, 0]
+        states["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return lg, states
+
+    def decode_step(self, params, cache, tokens):
+        x = params["embed"][tokens][:, None, :]
+        pos = cache["pos"]
+        states = {k: v for k, v in cache.items() if k != "pos"}
+        x, states = self._stack(params, x, states)
+        x = cm.rms_norm(x, params["final_norm"])
+        lg = jnp.einsum("bsd,dv->bsv", x, params["unembed"])[:, 0]
+        states["pos"] = pos + 1
+        return lg, states

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (Optimizer, adam, momentum, sgd,
+                                    server_optimizer)

@@ -1,0 +1,100 @@
+"""From-scratch optimizers (no optax): client SGD + FedAdam server optimizer.
+
+The paper (§3.3): clients run plain SGD (no momentum — no extra on-device
+state, little data per client); the server runs Adam on the aggregated
+model delta ("FedAdam", Reddi et al. 2021). Optimizer state lives in the
+same flat-dict format as params, so sharding rules apply unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+State = Dict[str, Params]
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], State]
+    update: Callable[[Params, State, Params], Tuple[Params, State]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        new = {k: params[k] - lr * grads[k].astype(params[k].dtype)
+               for k in params}
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": {k: jnp.zeros_like(v) for k, v in params.items()}}
+
+    def update(grads, state, params):
+        m = {k: beta * state["m"][k] + grads[k].astype(state["m"][k].dtype)
+             for k in params}
+        new = {k: params[k] - lr * m[k].astype(params[k].dtype) for k in params}
+        return new, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    """Adam with f32 moments regardless of param dtype."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+            "v": {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+        }
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        tf = t.astype(jnp.float32)
+        c1 = 1.0 - b1 ** tf
+        c2 = 1.0 - b2 ** tf
+        m, v, new = {}, {}, {}
+        for k in params:
+            g = grads[k].astype(jnp.float32)
+            m[k] = b1 * state["m"][k] + (1 - b1) * g
+            v[k] = b2 * state["v"][k] + (1 - b2) * jnp.square(g)
+            upd = (m[k] / c1) / (jnp.sqrt(v[k] / c2) + eps)
+            new[k] = (params[k].astype(jnp.float32) - lr * upd).astype(params[k].dtype)
+        return new, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def server_optimizer(name: str, lr: float, *, b1: float = 0.9,
+                     b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    if name == "adam":
+        return adam(lr, b1, b2, eps)
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, b1)
+    raise ValueError(name)
+
+
+def opt_state_axes(state_template: State, param_axes) -> Dict:
+    """Logical axes for optimizer state (moments share param axes)."""
+    out = {}
+    for k, v in state_template.items():
+        if k == "step":
+            out[k] = ()
+        else:
+            out[k] = dict(param_axes)
+    return out

@@ -1,0 +1,88 @@
+"""Synthetic federated dataset statistics + checkpoint round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data import FederatedDataset, client_num_samples
+
+
+def test_power_law_sample_counts():
+    ns = np.asarray([client_num_samples(i) for i in range(4000)])
+    assert 20 < ns.mean() < 60          # paper: mean ~34
+    assert ns.min() >= 2
+    assert (ns > 200).sum() > 5         # heavy tail exists
+
+
+def test_determinism_and_client_disjointness():
+    ds = FederatedDataset(vocab_size=1000, seq_len=16)
+    a1 = ds.client_tokens(5)
+    a2 = ds.client_tokens(5)
+    np.testing.assert_array_equal(a1, a2)
+    b = ds.client_tokens(6)
+    assert a1.shape[1] == 16
+    assert not (a1[: min(len(a1), len(b))] == b[: min(len(a1), len(b))]).all()
+
+
+def test_non_iid_dialects():
+    """Clients' unigram histograms must differ far beyond sampling noise."""
+    ds = FederatedDataset(vocab_size=512, seq_len=64)
+    h = []
+    for c in (1, 2):
+        t = ds.client_tokens(c, n_samples=64).reshape(-1)
+        h.append(np.bincount(t, minlength=512) / t.size)
+    l1 = np.abs(h[0] - h[1]).sum()
+    assert l1 > 0.3
+
+
+def test_chars_deterministic_and_padded():
+    ds = FederatedDataset(vocab_size=100, seq_len=4, char_vocab=64,
+                          max_word_len=12)
+    w = np.asarray([[1, 50, 99]])
+    c1, c2 = ds.word_chars(w), ds.word_chars(w)
+    np.testing.assert_array_equal(c1, c2)
+    assert c1.shape == (1, 3, 12)
+    assert (c1 >= 0).all() and (c1 < 64).all()
+    # frequent (low-id) words are shorter
+    len1 = (ds.word_chars(np.asarray([1])) > 0).sum()
+    len99 = (ds.word_chars(np.asarray([99])) > 0).sum()
+    assert len1 <= len99
+
+
+def test_client_batches_padding_mask():
+    ds = FederatedDataset(vocab_size=100, seq_len=8)
+    bs = ds.client_batches(3, batch_size=16, local_epochs=2)
+    assert len(bs) >= 2
+    for b in bs:
+        assert b["tokens"].shape == (16, 8)
+        assert b["mask"].shape == (16, 7)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"a/b": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                   "c": jnp.asarray([1, 2], jnp.int32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    path = os.path.join(tmp_path, "ckpt")
+    save_checkpoint(path, tree, meta={"round": 7})
+    loaded, meta = load_checkpoint(path)
+    assert meta["round"] == 7
+    np.testing.assert_array_equal(loaded["params"]["a/b"],
+                                  np.asarray(tree["params"]["a/b"]))
+    assert loaded["params"]["a/b"].dtype == np.float32
+    assert int(loaded["step"]) == 7
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_checkpoint_roundtrip_property(tmp_path_factory, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"x": rng.normal(size=(rng.integers(1, 20),)).astype(np.float32)}
+    path = str(tmp_path_factory.mktemp("ck") / "c")
+    save_checkpoint(path, tree)
+    loaded, _ = load_checkpoint(path)
+    np.testing.assert_array_equal(loaded["x"], tree["x"])

@@ -1,0 +1,131 @@
+"""Federated substrate: client updates, aggregation, FedBuff weights,
+compression round-trip, and FedAvg==centralized equivalences."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import FederatedConfig, RunConfig, get_config, reduced
+from repro.data import FederatedDataset
+from repro.federated import aggregation
+from repro.federated.client import make_client_update, stack_batches
+from repro.federated.real import RealLearner
+from repro.optim import adam, momentum, server_optimizer, sgd
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tiny_charlm():
+    cfg0 = get_config("paper-charlm")
+    return dataclasses.replace(
+        reduced(cfg0, layers=1, d_model=32, d_ff=32, vocab=128),
+        lstm_hidden=32, max_context=8)
+
+
+def test_client_update_is_sgd():
+    """One local step with one batch == a plain SGD step."""
+    from repro.models import get_model
+    cfg = _tiny_charlm()
+    model = get_model(cfg)
+    params, _ = model.init(RNG)
+    ds = FederatedDataset(vocab_size=cfg.vocab_size, seq_len=8,
+                          char_vocab=cfg.char_vocab,
+                          max_word_len=cfg.max_word_len)
+    batches = ds.client_batches(7, batch_size=4, local_epochs=1)[:1]
+    upd = make_client_update(model.loss, client_lr=0.1,
+                             max_grad_norm=1e9)
+    stacked, mask = stack_batches(batches, 1)
+    delta, _ = upd(params, stacked, mask)
+    g = jax.grad(lambda p: model.loss(p, jax.tree.map(
+        lambda a: a[0], stacked))[0])(params)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(delta[k]),
+                                   -0.1 * np.asarray(g[k]),
+                                   atol=1e-5)
+
+
+def test_padding_steps_are_noops():
+    from repro.models import get_model
+    cfg = _tiny_charlm()
+    model = get_model(cfg)
+    params, _ = model.init(RNG)
+    ds = FederatedDataset(vocab_size=cfg.vocab_size, seq_len=8,
+                          char_vocab=cfg.char_vocab,
+                          max_word_len=cfg.max_word_len)
+    batches = ds.client_batches(7, batch_size=4, local_epochs=1)[:1]
+    upd = make_client_update(model.loss, client_lr=0.1)
+    s1, m1 = stack_batches(batches, 1)
+    s4, m4 = stack_batches(batches, 4)          # 3 padded steps
+    d1, _ = upd(params, s1, m1)
+    d4, _ = upd(params, s4, m4)
+    for k in d1:
+        np.testing.assert_allclose(np.asarray(d1[k]), np.asarray(d4[k]),
+                                   atol=1e-6)
+
+
+def test_weighted_mean_deltas():
+    deltas = {"w": jnp.asarray([[1.0, 1.0], [3.0, 3.0]])}
+    out = aggregation.weighted_mean_deltas(deltas, jnp.asarray([1.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.5, 2.5])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=10),
+       st.floats(0.1, 1.0))
+def test_fedbuff_weights_monotone(staleness, alpha):
+    w = aggregation.fedbuff_weights(staleness, alpha)
+    assert (w <= 1.0 + 1e-12).all() and (w > 0).all()
+    s = np.asarray(staleness, np.float64)
+    order = np.argsort(s)
+    assert (np.diff(w[order]) <= 1e-12).all()
+
+
+def test_compression_roundtrip_small_error():
+    x = {"a": jax.random.normal(RNG, (1000,)) * 0.01}
+    y = aggregation.compress_roundtrip(x, block=256)
+    err = float(jnp.max(jnp.abs(x["a"] - y["a"])))
+    amax = float(jnp.max(jnp.abs(x["a"])))
+    assert err <= amax / 127.0
+
+
+def test_fedavg_single_client_equals_centralized():
+    """concurrency=1, E=1, server SGD lr=1 => server params move exactly by
+    the client delta (FedAvg == centralized local SGD)."""
+    from repro.models import get_model
+    cfg = _tiny_charlm()
+    ds = FederatedDataset(vocab_size=cfg.vocab_size, seq_len=8,
+                          char_vocab=cfg.char_vocab,
+                          max_word_len=cfg.max_word_len)
+    fed = FederatedConfig(mode="sync", concurrency=1, aggregation_goal=1,
+                          client_lr=0.05, server_lr=1.0,
+                          server_optimizer="sgd", client_batch_size=4)
+    run = RunConfig(max_rounds=1)
+    lr = RealLearner(cfg, fed, run, ds, max_client_steps=2)
+    p0 = jax.device_get(lr.params)
+    d, w = lr.client_delta(42, None)
+    lr.apply([d], [w])
+    p1 = jax.device_get(lr.params)
+    for k in p0:
+        np.testing.assert_allclose(p1[k], p0[k] + d[k], atol=1e-5)
+
+
+def test_optimizers():
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.1, -0.2])}
+    p1, _ = sgd(0.5).update(g, sgd(0.5).init(params), params)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [0.95, 2.1])
+    # adam first step = lr * sign-ish
+    opt = adam(0.001)
+    st_ = opt.init(params)
+    p2, st2 = opt.update(g, st_, params)
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               [1.0 - 0.001, 2.0 + 0.001], atol=1e-5)
+    assert int(st2["step"]) == 1
+    m = momentum(0.1, 0.9)
+    p3, st3 = m.update(g, m.init(params), params)
+    np.testing.assert_allclose(np.asarray(p3["w"]), [0.99, 2.02], atol=1e-6)
+    with pytest.raises(ValueError):
+        server_optimizer("nope", 0.1)

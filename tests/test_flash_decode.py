@@ -1,0 +1,127 @@
+"""shard_map flash-decoding (§Perf H1) vs the dense oracle, on a CPU mesh."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import common as cm
+
+_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.models import common as cm
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+B, C, Hkv, Hq, D = 4, 32, 2, 4, 16
+ks = jax.random.split(jax.random.PRNGKey(0), 5)
+q = jax.random.normal(ks[0], (B, Hq, D))
+kc = jax.random.normal(ks[1], (B, C, Hkv, D))
+vc = jax.random.normal(ks[2], (B, C, Hkv, D))
+kn = jax.random.normal(ks[3], (B, Hkv, D))
+vn = jax.random.normal(ks[4], (B, Hkv, D))
+for wp_v, vl_v in ((20, 21), (0, 1), (31, 32)):
+    kc2 = jax.lax.dynamic_update_slice_in_dim(kc, kn[:, None], wp_v, axis=1)
+    vc2 = jax.lax.dynamic_update_slice_in_dim(vc, vn[:, None], wp_v, axis=1)
+    want = cm.decode_attention(q, kc2, vc2, vl_v)
+    with mesh:
+        got, kc3, vc3 = jax.jit(cm.flash_decode_attention)(
+            q, kc, vc, kn, vn, jnp.asarray(wp_v), jnp.asarray(vl_v))
+    assert float(jnp.max(jnp.abs(got - want))) < 1e-5, wp_v
+    assert float(jnp.max(jnp.abs(kc3 - kc2))) == 0.0
+    assert float(jnp.max(jnp.abs(vc3 - vc2))) == 0.0
+print("OK")
+"""
+
+
+def test_flash_decode_matches_oracle_on_mesh():
+    """Runs in a subprocess: needs 8 forced host devices, which must not
+    leak into the other tests' single-device jax runtime."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", _CODE], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_flash_decode_fallback_without_mesh():
+    """Outside a mesh context the op must equal update+dense attention."""
+    B, C, Hkv, Hq, D = 2, 16, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kc = jax.random.normal(ks[1], (B, C, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, C, Hkv, D))
+    kn = jax.random.normal(ks[3], (B, Hkv, D))
+    vn = jax.random.normal(ks[4], (B, Hkv, D))
+    got, kc2, vc2 = cm.flash_decode_attention(q, kc, vc, kn, vn, 7, 8)
+    kc_ref = jax.lax.dynamic_update_slice_in_dim(kc, kn[:, None], 7, axis=1)
+    want = cm.decode_attention(q, kc_ref, jax.lax.dynamic_update_slice_in_dim(
+        vc, vn[:, None], 7, axis=1), 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(kc2), np.asarray(kc_ref))
+
+
+def test_sort_moe_grad_finite():
+    """Sort-based MoE must be differentiable end-to-end."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    T, d, E, f, k = 32, 8, 4, 16, 2
+    x = jax.random.normal(ks[0], (T, d))
+    rw = jax.random.normal(ks[1], (d, E))
+    wg = jax.random.normal(ks[2], (E, d, f)) * 0.1
+    wu = jax.random.normal(ks[3], (E, d, f)) * 0.1
+    wd = jax.random.normal(ks[4], (E, f, d)) * 0.1
+
+    def loss(x):
+        out, aux = cm.moe_block(x, rw, wg, wu, wd, top_k=k)
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(x)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_q8_kv_cache_numerics():
+    """int8 KV cache attention error stays in the quantization envelope."""
+    import jax.numpy as jnp
+    B, C, Hkv, Hq, D = 2, 24, 2, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kc_f = jax.random.normal(ks[1], (B, C, Hkv, D))
+    vc_f = jax.random.normal(ks[2], (B, C, Hkv, D))
+    kn = jax.random.normal(ks[3], (B, Hkv, D))
+    vn = jax.random.normal(ks[4], (B, Hkv, D))
+    kq, kss = cm.quantize_kv(kc_f)
+    vq, vss = cm.quantize_kv(vc_f)
+    # roundtrip bound per element
+    err = jnp.max(jnp.abs(cm.dequantize_kv(kq, kss) - kc_f))
+    assert float(err) <= float(jnp.max(jnp.abs(kc_f))) / 127.0 + 1e-6
+    kc2 = jax.lax.dynamic_update_slice_in_dim(kc_f, kn[:, None], 10, axis=1)
+    vc2 = jax.lax.dynamic_update_slice_in_dim(vc_f, vn[:, None], 10, axis=1)
+    want = cm.decode_attention(q, kc2, vc2, 11)
+    got, *_ = cm.flash_decode_attention_q8(
+        q, kq, vq, kss, vss, kn, vn, jnp.asarray(10), jnp.asarray(11))
+    assert float(jnp.max(jnp.abs(got - want))) < 0.05
+
+
+def test_q8_decoder_step():
+    """DecoderLM with kv_quant runs a full decode step."""
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.models import get_model
+    cfg = reduced(get_config("smollm-135m"))
+    m = get_model(cfg)
+    m.flash_decode = True
+    m.kv_quant = True
+    params, _ = m.init(jax.random.PRNGKey(0))
+    cache, axes = m.init_cache(2, 16, dtype=jnp.bfloat16)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    tok = jnp.asarray([1, 2], jnp.int32)
+    lg, cache2 = jax.jit(m.decode_step)(params, cache, tok)
+    assert lg.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+    assert cache2["k"].dtype == jnp.int8

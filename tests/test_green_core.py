@@ -1,0 +1,109 @@
+"""Green core: energy/carbon/network models, estimator, predictor."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import carbon
+from repro.core.energy import (client_session_energy, server_energy_j,
+                               SERVER_TASK_POWER_W)
+from repro.core.estimator import CarbonEstimator
+from repro.core.network import DEFAULT_NETWORK, NetworkEnergyModel
+from repro.core.predictor import CarbonPredictor, fit_linear
+from repro.core.profiles import FLEET, COUNTRY_MIX
+from repro.core.telemetry import ClientSession, TaskLog
+
+
+def _session(device="pixel-3", country="US", compute=60.0, up=30.0, dn=10.0,
+             outcome="completed"):
+    return ClientSession(
+        client_id=1, round_idx=0, device=device, country=country,
+        download_s=dn, compute_s=compute, upload_s=up,
+        bytes_down=64e6, bytes_up=64e6, start_t=0.0, end_t=100.0,
+        outcome=outcome)
+
+
+def test_device_power_from_profile_fields():
+    p = FLEET[0]
+    # Watt's law: (active + cluster + cores*core) mA * 3.8 V
+    want = (p.cpu_active_ma + p.cpu_cluster_ma
+            + p.big_cores * p.cpu_core_ma) / 1000 * 3.8
+    assert abs(p.cpu_power_w - want) < 1e-9
+    assert 0.5 < p.cpu_power_w < 8.0          # phone-plausible
+    assert p.wifi_tx_power_w > p.wifi_rx_power_w
+
+
+def test_session_energy_linear_in_durations():
+    p = FLEET[0]
+    e1 = client_session_energy(p, 10, 5, 2)
+    e2 = client_session_energy(p, 20, 10, 4)
+    assert abs(e2.total_j - 2 * e1.total_j) < 1e-9
+
+
+def test_network_energy_per_bit():
+    m = DEFAULT_NETWORK
+    assert 50e-9 < m.energy_per_bit_j < 500e-9       # literature band
+    assert m.transfer_energy_j(1e6) == pytest.approx(
+        8e6 * m.energy_per_bit_j)
+
+
+def test_carbon_intensity_table():
+    assert carbon.intensity("NO") < carbon.intensity("WORLD") < \
+        carbon.intensity("IN")
+    assert carbon.intensity("??") == carbon.intensity("WORLD")
+    dc = carbon.datacenter_intensity()
+    assert 200 < dc < 450          # US-heavy mix
+
+
+def test_co2_units():
+    # 1 kWh at 1000 g/kWh = 1 kg
+    assert carbon.co2e_kg(3.6e6, 1000.0) == pytest.approx(1.0)
+
+
+def test_estimator_components_and_accounting_of_dropouts():
+    est = CarbonEstimator()
+    log = TaskLog()
+    log.log_session(_session())
+    log.log_session(_session(outcome="dropped", up=0.0))
+    log.duration_s = 3600.0
+    br = est.estimate(log)
+    assert br.total_kg > 0
+    sh = br.shares()
+    assert abs(sum(sh.values()) - 1.0) < 1e-9
+    # dropped session still contributed compute carbon
+    est2 = CarbonEstimator()
+    log2 = TaskLog()
+    log2.log_session(_session())
+    log2.duration_s = 3600.0
+    br2 = est2.estimate(log2)
+    assert br.client_compute_kg > br2.client_compute_kg
+
+
+def test_server_energy_pue():
+    assert server_energy_j(3600.0) == pytest.approx(
+        2 * SERVER_TASK_POWER_W * 1.09 * 3600)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.1, 100.0), st.floats(-5.0, 5.0), st.integers(0, 10**6))
+def test_predictor_recovers_linear_law(slope, intercept, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(10, 1e4, size=40)
+    y = slope * x + intercept * 100 + rng.normal(0, 1e-6, size=40)
+    fit = fit_linear(x, y)
+    assert fit.r2 > 0.9999
+    assert fit.slope == pytest.approx(slope, rel=1e-3)
+
+
+def test_carbon_predictor_api():
+    pred = CarbonPredictor.from_measurements(
+        "sync", concurrency=[100, 200, 400, 800],
+        rounds_or_hours=[500, 400, 300, 250],
+        carbon_kg=[3.0, 4.8, 7.2, 12.0])
+    kg = pred.predict_kg(1000, 240)
+    assert 10 < kg < 20
+    assert pred.fit.r2 > 0.9
+
+
+def test_country_mix_normalized():
+    assert abs(sum(COUNTRY_MIX.values()) - 1.0) < 1e-9
+    assert all(v >= 0 for v in COUNTRY_MIX.values())

@@ -1,0 +1,102 @@
+"""Attention kernels: Pallas (interpret=True) and the blocked pure-JAX
+production path, both swept against the naive O(S^2) oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.swa_attention.kernel import flash_attention_pallas
+from repro.kernels.swa_attention.ref import attention_ref
+from repro.models import common as cm
+
+
+def _qkv(B, S, Hq, Hkv, D, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    return q, k, v
+
+
+CASES = [
+    # B, S, Hq, Hkv, D, window
+    (1, 64, 2, 2, 32, 0),
+    (2, 128, 4, 2, 64, 0),
+    (2, 128, 4, 1, 64, 32),      # MQA + SWA
+    (1, 256, 6, 3, 32, 96),      # window not multiple of block
+    (2, 64, 8, 8, 16, 16),
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,window", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_flash_vs_oracle(B, S, Hq, Hkv, D, window, dtype):
+    q, k, v = _qkv(B, S, Hq, Hkv, D, dtype)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=32, block_kv=32, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,window", CASES)
+def test_blocked_jax_vs_oracle(B, S, Hq, Hkv, D, window):
+    q, k, v = _qkv(B, S, Hq, Hkv, D, jnp.float32, seed=1)
+    want = attention_ref(q, k, v, causal=True, window=window)
+    got = cm.flash_attention(q, k, v, causal=True, window=window,
+                             block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_non_causal_matches():
+    q, k, v = _qkv(2, 64, 4, 4, 32, jnp.float32, seed=2)
+    want = attention_ref(q, k, v, causal=False)
+    got = cm.flash_attention(q, k, v, causal=False, block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    gp = flash_attention_pallas(q, k, v, causal=False, block_q=32,
+                                block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(want), atol=2e-5)
+
+
+DECODE_CASES = [
+    # B, C, Hq, Hkv, D, valid
+    (2, 128, 4, 2, 64, "full"),
+    (3, 256, 8, 1, 32, "ragged"),
+    (1, 64, 2, 2, 128, "one"),
+]
+
+
+@pytest.mark.parametrize("B,C,Hq,Hkv,D,valid", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_decode_vs_oracle(B, C, Hq, Hkv, D, valid, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kc = jax.random.normal(ks[1], (B, C, Hkv, D), dtype)
+    vc = jax.random.normal(ks[2], (B, C, Hkv, D), dtype)
+    if valid == "full":
+        vl = jnp.asarray(C)
+    elif valid == "one":
+        vl = jnp.asarray(1)
+    else:
+        vl = jnp.arange(B) * (C // 2) + 1
+    want = decode_attention_ref(q, kc, vc, vl)
+    got = decode_attention_pallas(q, kc, vc, vl, block_c=32, interpret=True)
+    ours = cm.decode_attention(q, kc, vc, vl)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(ours, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+def test_decode_consistent_with_prefill_attention():
+    """Decoding position S-1 must equal row S-1 of full causal attention."""
+    B, S, Hq, Hkv, D = 2, 64, 4, 2, 32
+    q, k, v = _qkv(B, S, Hq, Hkv, D, jnp.float32, seed=9)
+    full = attention_ref(q, k, v, causal=True)
+    dec = cm.decode_attention(q[:, -1], k, v, S)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               atol=1e-5)

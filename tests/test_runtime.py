@@ -1,0 +1,97 @@
+"""FL runtime (event loops) + surrogate learner: the paper's qualitative
+findings must hold in simulation."""
+import numpy as np
+import pytest
+
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.predictor import fit_linear
+from repro.federated import SurrogateLearner, run_task
+
+CFG = get_config("paper-charlm")
+RUN = RunConfig(target_perplexity=175.0, max_hours=48.0)
+
+
+def _run(mode="sync", conc=100, goal=None, **kw):
+    fed = FederatedConfig(mode=mode, concurrency=conc,
+                          aggregation_goal=goal or max(1, int(conc * 0.8)),
+                          **kw)
+    return run_task(CFG, fed, RUN, SurrogateLearner(CFG, fed, RUN))
+
+
+def test_deterministic():
+    a = _run(conc=50)
+    b = _run(conc=50)
+    assert a.rounds == b.rounds
+    assert a.carbon.total_kg == pytest.approx(b.carbon.total_kg)
+
+
+def test_reaches_target_with_good_hparams():
+    res = _run(conc=200)
+    assert res.reached_target
+    assert res.final_perplexity <= 175.0 * 1.1
+
+
+def test_bad_lr_fails_or_is_much_slower():
+    good = _run(conc=200, client_lr=0.1)
+    bad = _run(conc=200, client_lr=1e-4)
+    assert (not bad.reached_target) or bad.rounds > 3 * good.rounds
+
+
+def test_async_faster_but_dirtier():
+    """Paper Fig.5: tuned async reaches target sooner in wall-clock but
+    emits more carbon than sync."""
+    sync = _run(mode="sync", conc=400, goal=400)
+    asyn = _run(mode="async", conc=400, goal=400)
+    assert asyn.duration_h < sync.duration_h
+    assert asyn.carbon.total_kg > 0.9 * sync.carbon.total_kg
+
+
+def test_concurrency_diminishing_returns():
+    """Paper Fig.7: more concurrency -> more carbon, sublinear speedup."""
+    lo = _run(conc=50)
+    hi = _run(conc=800)
+    assert hi.carbon.total_kg > 3 * lo.carbon.total_kg
+    assert hi.duration_h < lo.duration_h          # still faster
+    speedup = lo.duration_h / hi.duration_h
+    assert speedup < 16                            # way below linear (16x)
+
+
+def test_component_shares_match_paper_at_headline_setting():
+    """Paper §5.1 at concurrency=1000: client compute ~46-50%, upload
+    ~27-29%, download ~22-24%, server ~1-2%. Allow simulator slack."""
+    res = _run(conc=1000, goal=1000)
+    sh = res.carbon.shares()
+    assert 0.40 <= sh["client_compute"] <= 0.56
+    assert 0.20 <= sh["upload"] <= 0.33
+    assert 0.16 <= sh["download"] <= 0.28
+    assert sh["server"] <= 0.08
+
+
+def test_carbon_linear_in_concurrency_x_rounds():
+    """Paper Fig.8: carbon ~ a*(concurrency x rounds), high R^2."""
+    xs, ys = [], []
+    for conc in (50, 100, 200, 400):
+        r = _run(conc=conc)
+        xs.append(conc * r.rounds)
+        ys.append(r.carbon.total_kg)
+    fit = fit_linear(xs, ys)
+    assert fit.r2 > 0.9
+
+
+def test_compression_reduces_carbon():
+    """Paper §6: int8 compression cuts comm carbon ~4x =>
+    total reduction toward 1/(cc + comm/4)."""
+    base = _run(conc=200)
+    comp = _run(conc=200, compression="int8")
+    assert comp.carbon.total_kg < 0.75 * base.carbon.total_kg
+    assert comp.reached_target
+
+
+def test_sessions_logged_with_outcomes():
+    res = _run(conc=100)
+    parts = res.log.participation()
+    assert parts.get("completed", 0) > 0
+    assert sum(parts.values()) == len(res.log.sessions)
+    # telemetry carries device + country for every session
+    s = res.log.sessions[0]
+    assert s.device and s.country

@@ -1,0 +1,74 @@
+"""End-to-end behaviour: real federated training improves perplexity and the
+full telemetry -> carbon -> predictor pipeline closes the loop (the paper's
+workflow in miniature)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import FederatedConfig, RunConfig, get_config, reduced
+from repro.core.predictor import CarbonPredictor
+from repro.data import FederatedDataset
+from repro.federated import RealLearner, SurrogateLearner, run_task
+
+
+def _tiny_charlm():
+    cfg0 = get_config("paper-charlm")
+    return dataclasses.replace(
+        reduced(cfg0, layers=1, d_model=64, d_ff=64, vocab=256),
+        lstm_hidden=64, max_context=16)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = _tiny_charlm()
+    ds = FederatedDataset(vocab_size=cfg.vocab_size, seq_len=16,
+                          char_vocab=cfg.char_vocab,
+                          max_word_len=cfg.max_word_len)
+    return cfg, ds
+
+
+def test_e2e_sync_training_reduces_perplexity(tiny_setup):
+    cfg, ds = tiny_setup
+    fed = FederatedConfig(mode="sync", concurrency=6, aggregation_goal=4,
+                          client_lr=0.3, server_lr=0.02, client_batch_size=8)
+    run = RunConfig(target_perplexity=5.0, max_rounds=10, max_hours=1e6)
+    learner = RealLearner(cfg, fed, run, ds)
+    ppl0 = learner.eval_perplexity()
+    res = run_task(cfg, fed, run, learner, seq_len=16)
+    assert res.final_perplexity < 0.7 * ppl0
+    assert res.carbon.total_kg > 0
+    assert res.log.completed_sessions() >= 10
+
+
+def test_e2e_async_with_true_staleness(tiny_setup):
+    cfg, ds = tiny_setup
+    fed = FederatedConfig(mode="async", concurrency=6, aggregation_goal=3,
+                          client_lr=0.3, server_lr=0.02, staleness_cap=8)
+    run = RunConfig(target_perplexity=5.0, max_rounds=8, max_hours=1e6)
+    learner = RealLearner(cfg, fed, run, ds)
+    ppl0 = learner.eval_perplexity()
+    res = run_task(cfg, fed, run, learner, seq_len=16)
+    assert res.final_perplexity < 0.8 * ppl0
+    assert res.rounds == 8
+
+
+def test_paper_workflow_predict_then_measure():
+    """§5.3: fit the predictor on a few cheap (surrogate) runs, then check it
+    forecasts a held-out configuration within 2x."""
+    cfg = get_config("paper-charlm")
+    run = RunConfig(target_perplexity=175.0)
+    xs, kgs = [], []
+    for conc in (50, 100, 200, 400):
+        fed = FederatedConfig(mode="sync", concurrency=conc,
+                              aggregation_goal=int(conc * 0.8))
+        r = run_task(cfg, fed, run, SurrogateLearner(cfg, fed, run))
+        xs.append((conc, r.rounds))
+        kgs.append(r.carbon.total_kg)
+    pred = CarbonPredictor.from_measurements(
+        "sync", [x[0] for x in xs], [x[1] for x in xs], kgs)
+    fed = FederatedConfig(mode="sync", concurrency=300,
+                          aggregation_goal=240)
+    r = run_task(cfg, fed, run, SurrogateLearner(cfg, fed, run))
+    forecast = pred.predict_kg(300, r.rounds)
+    assert 0.5 < forecast / r.carbon.total_kg < 2.0
