@@ -8,18 +8,24 @@ import sys
 import time
 from typing import Dict, Iterable, List, Sequence
 
+from repro.api import Environment, Experiment, ExperimentSpec, ModelRef
 from repro.configs import FederatedConfig, RunConfig, get_config
-from repro.federated import SurrogateLearner, run_task
 
 CFG = get_config("paper-charlm")
+MODEL = ModelRef("paper-charlm")
 
 
-def run_point(run: RunConfig | None = None, **fed_kw) -> Dict[str, float]:
+def run_point(run: RunConfig | None = None,
+              environment: Environment | None = None,
+              **fed_kw) -> Dict[str, float]:
     fed_kw.setdefault("aggregation_goal",
                       max(1, int(fed_kw.get("concurrency", 100) * 0.8)))
     fed = FederatedConfig(**fed_kw)
     run = run or RunConfig(target_perplexity=175.0)
-    res = run_task(CFG, fed, run, SurrogateLearner(CFG, fed, run))
+    spec = ExperimentSpec(model=MODEL, federated=fed, run=run,
+                          environment=environment or Environment(),
+                          learner="surrogate")
+    res = Experiment(spec).run()
     out = res.summary()
     out.update(concurrency=fed.concurrency, mode=0.0 if fed.mode == "sync" else 1.0,
                client_lr=fed.client_lr, server_lr=fed.server_lr,

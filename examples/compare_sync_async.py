@@ -1,19 +1,23 @@
 """Reproduce the paper's Figure 5 story interactively: sync vs async FL at
 equal tuning — async converges faster in wall-clock but burns more carbon.
+Both arms are the same `repro.api.ExperimentSpec` with the strategy key
+swapped.
 
   PYTHONPATH=src python examples/compare_sync_async.py
 """
-from repro.configs import FederatedConfig, RunConfig, get_config
-from repro.federated import SurrogateLearner, run_task
+from repro.api import Experiment, ExperimentSpec, ModelRef
+from repro.configs import FederatedConfig, RunConfig
 
-cfg = get_config("paper-charlm")
-run = RunConfig(target_perplexity=175.0)
+base = ExperimentSpec(model=ModelRef("paper-charlm"),
+                      run=RunConfig(target_perplexity=175.0),
+                      learner="surrogate")
 
 print(f"{'mode':6s} {'rounds':>7s} {'hours':>7s} {'kgCO2e':>8s} "
       f"{'sessions':>9s} {'staleness':>9s}")
 for mode in ("sync", "async"):
-    fed = FederatedConfig(mode=mode, concurrency=1000, aggregation_goal=1000)
-    res = run_task(cfg, fed, run, SurrogateLearner(cfg, fed, run))
+    spec = base.replace(federated=FederatedConfig(
+        mode=mode, concurrency=1000, aggregation_goal=1000))
+    res = Experiment(spec).run()
     print(f"{mode:6s} {res.rounds:7d} {res.duration_h:7.1f} "
           f"{res.carbon.total_kg:8.2f} {len(res.log.sessions):9d} "
           f"{res.log.mean_staleness():9.2f}")

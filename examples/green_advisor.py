@@ -22,7 +22,11 @@ for r in GreenAdvisor.pareto(recs):
 best = recs[0]
 print("\ngreenest feasible config:\n  " + best.why())
 deadline = advisor.search(grid=grid, max_hours=18.0)[0]
+# recommendations carry a `feasible` flag: an impossible deadline returns
+# the least-bad candidates explicitly marked [INFEASIBLE]
 print("greenest under an 18h deadline:\n  " + deadline.why())
+impossible = advisor.search(grid=grid, max_hours=0.01)[0]
+print("under an impossible 36s deadline:\n  " + impossible.why())
 
 # the paper's predictor: carbon ≈ a (concurrency x rounds) + b, fit on a
 # dedicated calibration set (one wire format, tuned lrs, E=1 — the paper

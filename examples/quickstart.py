@@ -1,34 +1,34 @@
 """Quickstart: train the paper's char-CNN-LSTM federatedly for a few rounds
-and read its carbon bill — the Green-FL workflow in ~40 lines.
+and read its carbon bill — the Green-FL workflow, now one declarative
+`repro.api.ExperimentSpec`.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
+from repro.api import Experiment, ExperimentSpec, ModelRef
+from repro.configs import FederatedConfig, RunConfig
 
-from repro.configs import FederatedConfig, RunConfig, get_config, reduced
-from repro.data import FederatedDataset
-from repro.federated import RealLearner, run_task
+# 1. one spec describes the whole run: the paper's workload shrunk so a
+#    laptop CPU trains it in ~1 min, a PAPAYA-shaped synchronous task
+#    (8 users/round, 4-min timeout, FedAdam server / client SGD, §3.3),
+#    and the real JAX learner on non-IID power-law federated data
+spec = ExperimentSpec(
+    model=ModelRef("paper-charlm", reduced=True,
+                   reduced_kw=dict(layers=1, d_model=64, d_ff=64, vocab=256),
+                   overrides=dict(lstm_hidden=64, max_context=16)),
+    federated=FederatedConfig(mode="sync", concurrency=8, aggregation_goal=6,
+                              client_lr=0.3, server_lr=0.02,
+                              client_batch_size=8),
+    run=RunConfig(target_perplexity=5.0, max_rounds=10, max_hours=1e6),
+    learner="real", seq_len=16)
 
-# 1. the paper's workload, shrunk so a laptop CPU trains it in ~1 min
-cfg = dataclasses.replace(
-    reduced(get_config("paper-charlm"), layers=1, d_model=64, d_ff=64,
-            vocab=256),
-    lstm_hidden=64, max_context=16)
+# 2. specs are shareable artifacts: JSON out == JSON in
+assert ExperimentSpec.from_json(spec.to_json()) == spec
 
-# 2. non-IID power-law federated data (pushift-Reddit statistics)
-data = FederatedDataset(vocab_size=cfg.vocab_size, seq_len=16,
-                        char_vocab=cfg.char_vocab,
-                        max_word_len=cfg.max_word_len)
-
-# 3. a PAPAYA-shaped synchronous task: 8 users/round, 4-min timeout,
-#    FedAdam server optimizer, client SGD (paper §3.3)
-fed = FederatedConfig(mode="sync", concurrency=8, aggregation_goal=6,
-                      client_lr=0.3, server_lr=0.02, client_batch_size=8)
-run = RunConfig(target_perplexity=5.0, max_rounds=10, max_hours=1e6)
-
-learner = RealLearner(cfg, fed, run, data)
-print(f"initial perplexity: {learner.eval_perplexity():8.1f}")
-result = run_task(cfg, fed, run, learner, seq_len=16)
+# 3. run it, streaming per-round progress
+exp = Experiment(spec)
+print(f"initial perplexity: {exp.build_learner().eval_perplexity():8.1f}")
+result = exp.run(on_round=lambda ev: print(
+    f"  round {ev.round_idx:2d} ppl={ev.perplexity:8.1f}"))
 print(f"final perplexity:   {result.final_perplexity:8.1f} "
       f"after {result.rounds} rounds")
 

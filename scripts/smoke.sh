@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 test suite + an ExperimentSpec JSON dry-run end-to-end.
+#
+#   bash scripts/smoke.sh            # from the repo root
+#
+# Step 2 loads the committed spec artifact, runs it, then re-serializes,
+# reloads and re-runs it, asserting both runs produce the identical
+# Result.summary() — the repro.api reproducibility contract.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== smoke 1/2: tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== smoke 2/2: ExperimentSpec JSON dry-run (with round-trip check) =="
+python -m repro.api examples/specs/charlm_sync_small.json \
+    --roundtrip-check --quiet
+
+echo "smoke OK"

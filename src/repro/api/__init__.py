@@ -1,0 +1,25 @@
+"""`repro.api` — the declarative Experiment layer (the ONE entry point).
+
+    from repro.api import Environment, Experiment, ExperimentSpec, ModelRef
+
+    spec = ExperimentSpec(model=ModelRef("paper-charlm"),
+                          federated=FederatedConfig(mode="async", ...),
+                          environment=Environment(download_bps=50e6))
+    result = Experiment(spec).run(on_round=lambda ev: print(ev.round_idx))
+    spec.save("exp.json")     # shareable artifact; reload reproduces result
+
+Strategies ("sync", "async", ...) dispatch through the string-keyed
+registry in `repro.federated.runtime`; carbon/energy/network models all
+come from the spec's `Environment` rather than module defaults.
+"""
+from repro.api.environment import Environment
+from repro.api.experiment import Experiment, Result, run_spec
+from repro.api.spec import ExperimentSpec, ModelRef
+from repro.federated.runtime import (STRATEGIES, RoundEvent, Strategy,
+                                     get_strategy, register_strategy)
+
+__all__ = [
+    "Environment", "Experiment", "ExperimentSpec", "ModelRef", "Result",
+    "RoundEvent", "STRATEGIES", "Strategy", "get_strategy",
+    "register_strategy", "run_spec",
+]

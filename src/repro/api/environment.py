@@ -1,0 +1,90 @@
+"""The `Environment` bundle: every externally-given model the carbon
+accounting depends on — network energy-per-bit, grid carbon intensities,
+datacenter fleet + PUE, device fleet, participation country mix, and link
+bandwidths — as one swappable, JSON-serializable value.
+
+The seed codebase hard-wired all of these as module-level defaults; an
+`Environment` threads them explicitly through `SessionSampler` and
+`CarbonEstimator`, which is what makes scenarios like geographically
+shifted intensity (CAFE) or a device-heterogeneous fleet expressible as
+config rather than code forks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Sequence, Tuple
+
+from repro.configs.base import FederatedConfig, ModelConfig
+from repro.core.carbon import (CARBON_INTENSITY, DATACENTER_LOCATIONS, PUE,
+                               IntensityModel)
+from repro.core.energy import SERVER_TASK_POWER_W
+from repro.core.estimator import CarbonEstimator
+from repro.core.network import NetworkEnergyModel
+from repro.core.profiles import (COUNTRY_MIX, DOWNLOAD_BPS, FLEET, UPLOAD_BPS,
+                                 DeviceProfile)
+from repro.federated.events import SessionSampler
+
+
+@dataclass(frozen=True)
+class Environment:
+    network: NetworkEnergyModel = field(default_factory=NetworkEnergyModel)
+    carbon_intensity: Mapping[str, float] = field(
+        default_factory=lambda: dict(CARBON_INTENSITY))
+    datacenter_locations: Mapping[str, int] = field(
+        default_factory=lambda: dict(DATACENTER_LOCATIONS))
+    pue: float = PUE
+    fleet: Tuple[DeviceProfile, ...] = FLEET
+    country_mix: Mapping[str, float] = field(
+        default_factory=lambda: dict(COUNTRY_MIX))
+    download_bps: float = DOWNLOAD_BPS
+    upload_bps: float = UPLOAD_BPS
+    server_power_w: float = SERVER_TASK_POWER_W
+
+    # ------------------------------------------------------------ wiring
+    def intensity_model(self) -> IntensityModel:
+        return IntensityModel(table=dict(self.carbon_intensity),
+                              datacenter_locations=dict(
+                                  self.datacenter_locations),
+                              pue=self.pue)
+
+    def estimator(self) -> CarbonEstimator:
+        return CarbonEstimator(network=self.network,
+                               profiles={p.name: p for p in self.fleet},
+                               intensity=self.intensity_model(),
+                               server_power_w=self.server_power_w)
+
+    def sampler(self, model_cfg: ModelConfig, fed: FederatedConfig,
+                seq_len: int) -> SessionSampler:
+        return SessionSampler(model_cfg, fed, seq_len,
+                              fleet=self.fleet,
+                              country_mix=self.country_mix,
+                              download_bps=self.download_bps,
+                              upload_bps=self.upload_bps)
+
+    # ------------------------------------------------- JSON round-tripping
+    def to_dict(self) -> dict:
+        return {
+            "network": dataclasses.asdict(self.network),
+            "carbon_intensity": dict(self.carbon_intensity),
+            "datacenter_locations": dict(self.datacenter_locations),
+            "pue": self.pue,
+            "fleet": [dataclasses.asdict(p) for p in self.fleet],
+            "country_mix": dict(self.country_mix),
+            "download_bps": self.download_bps,
+            "upload_bps": self.upload_bps,
+            "server_power_w": self.server_power_w,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Optional[Mapping]) -> "Environment":
+        if not d:
+            return cls()
+        d = dict(d)
+        if isinstance(d.get("network"), Mapping):
+            d["network"] = NetworkEnergyModel(**d["network"])
+        if d.get("fleet") is not None:
+            d["fleet"] = tuple(
+                p if isinstance(p, DeviceProfile) else DeviceProfile(**p)
+                for p in d["fleet"])
+        return cls(**d)

@@ -1,0 +1,150 @@
+"""`Experiment` — the one way to run an FL task — and its `Result`.
+
+    spec = ExperimentSpec(model=ModelRef("paper-charlm"),
+                          federated=FederatedConfig(concurrency=100, ...))
+    result = Experiment(spec).run(on_round=print)
+    result.summary()          # rounds / duration / per-component carbon
+
+The runner resolves the model ref, builds the chosen learner, dispatches
+`spec.federated.mode` through the strategy registry, and threads the
+spec's `Environment` into both the session sampler and the carbon
+estimator. Per-round `RoundEvent`s stream to callbacks while the task
+runs; the returned `Result` subsumes the legacy TaskResult + its
+CarbonBreakdown and records the spec that produced it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+from repro.api.spec import ExperimentSpec
+from repro.configs.base import ModelConfig
+from repro.core.estimator import CarbonBreakdown
+from repro.core.telemetry import TaskLog
+from repro.federated.runtime import (RoundEvent, TaskResult, get_strategy)
+
+RoundCallback = Callable[[RoundEvent], None]
+StartCallback = Callable[[ExperimentSpec], None]
+CompleteCallback = Callable[["Result"], None]
+
+
+@dataclass(frozen=True)
+class Result:
+    """Everything a finished experiment produced: telemetry log, carbon
+    breakdown, convergence verdict — plus the spec that generated it and
+    the real wall-clock cost of running the simulation."""
+
+    spec: ExperimentSpec
+    log: TaskLog
+    carbon: CarbonBreakdown
+    reached_target: bool
+    rounds: int
+    duration_h: float
+    final_perplexity: float
+    smoothed_perplexity: float
+    wall_s: float = 0.0
+
+    @classmethod
+    def from_task_result(cls, spec: ExperimentSpec, tr: TaskResult,
+                         wall_s: float = 0.0) -> "Result":
+        return cls(spec=spec, log=tr.log, carbon=tr.carbon,
+                   reached_target=tr.reached_target, rounds=tr.rounds,
+                   duration_h=tr.duration_h,
+                   final_perplexity=tr.final_perplexity,
+                   smoothed_perplexity=tr.smoothed_perplexity,
+                   wall_s=wall_s)
+
+    def summary(self) -> Dict[str, float]:
+        """Same keys as the legacy TaskResult.summary() so downstream CSV
+        tooling keeps working unchanged."""
+        return {
+            "rounds": self.rounds,
+            "duration_h": self.duration_h,
+            "reached_target": float(self.reached_target),
+            "perplexity": self.final_perplexity,
+            "carbon_total_kg": self.carbon.total_kg,
+            **{k: v for k, v in self.carbon.as_dict().items()},
+            "sessions": float(len(self.log.sessions)),
+        }
+
+    def to_dict(self) -> dict:
+        return {
+            "summary": self.summary(),
+            "carbon_shares": self.carbon.shares(),
+            "participation": self.log.participation(),
+            "mean_staleness": self.log.mean_staleness(),
+            "wall_s": self.wall_s,
+            "spec": self.spec.to_dict(),
+        }
+
+
+class Experiment:
+    """Runs an ExperimentSpec. `run()` uses the injected learner if one was
+    given, else the learner pre-built with `build_learner()` (handy for
+    inspecting initial state), else builds a fresh one — and a second
+    `run()` always rebuilds a non-injected learner, so the same Experiment
+    re-runs reproducibly."""
+
+    def __init__(self, spec: ExperimentSpec, learner=None):
+        self.spec = spec
+        self._injected = learner is not None
+        self.learner = learner            # the learner of the next/latest run
+        self._consumed = False
+        self._model_cfg: Optional[ModelConfig] = None
+
+    @property
+    def model_config(self) -> ModelConfig:
+        if self._model_cfg is None:
+            self._model_cfg = self.spec.model.resolve()
+        return self._model_cfg
+
+    def build_learner(self):
+        """Build (and remember) the learner the next `run()` will use."""
+        if not self._injected:
+            self.learner = self._make_learner()
+            self._consumed = False
+        return self.learner
+
+    def _make_learner(self):
+        spec = self.spec
+        cfg = self.model_config
+        if spec.learner == "surrogate":
+            from repro.federated.surrogate import SurrogateLearner
+            return SurrogateLearner(cfg, spec.federated, spec.run)
+        from repro.data.synthetic import FederatedDataset
+        from repro.federated.real import RealLearner
+        ds = FederatedDataset(vocab_size=cfg.vocab_size, seq_len=spec.seq_len,
+                              char_vocab=cfg.char_vocab,
+                              max_word_len=cfg.max_word_len)
+        return RealLearner(cfg, spec.federated, spec.run, ds,
+                           max_client_steps=spec.max_client_steps)
+
+    def run(self, on_round: Optional[RoundCallback] = None,
+            on_start: Optional[StartCallback] = None,
+            on_complete: Optional[CompleteCallback] = None) -> Result:
+        spec = self.spec
+        cfg = self.model_config
+        if self.learner is None or (self._consumed and not self._injected):
+            self.build_learner()
+        self._consumed = True
+        strategy = get_strategy(spec.federated.mode)
+        env = spec.environment
+        if on_start is not None:
+            on_start(spec)
+        t0 = time.time()
+        tr = strategy.run(
+            cfg, spec.federated, spec.run, self.learner,
+            seq_len=spec.seq_len,
+            estimator=env.estimator(),
+            sampler=env.sampler(cfg, spec.federated, spec.seq_len),
+            on_round=on_round)
+        result = Result.from_task_result(spec, tr, wall_s=time.time() - t0)
+        if on_complete is not None:
+            on_complete(result)
+        return result
+
+
+def run_spec(spec: ExperimentSpec, **callbacks) -> Result:
+    """One-liner convenience: `run_spec(ExperimentSpec(...))`."""
+    return Experiment(spec).run(**callbacks)

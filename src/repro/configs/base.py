@@ -178,6 +178,31 @@ class RunConfig:
     ema_alpha: float = 0.3              # paper's EWMA smoothing of test ppl
 
 
+# ---------------------------------------------------------------------------
+# (De)serialization — ModelConfig as a JSON-safe dict (repro.api specs)
+# ---------------------------------------------------------------------------
+
+def normalize_model_kwargs(d: dict) -> dict:
+    """JSON round-trips turn tuples into lists and MoEConfig into a dict;
+    convert the affected ModelConfig fields back (no-op when absent)."""
+    d = dict(d)
+    if isinstance(d.get("moe"), dict):
+        d["moe"] = MoEConfig(**d["moe"])
+    if "block_pattern" in d:
+        d["block_pattern"] = tuple(d["block_pattern"])
+    if "cnn_filters" in d:
+        d["cnn_filters"] = tuple(tuple(f) for f in d["cnn_filters"])
+    return d
+
+
+def model_config_to_dict(cfg: ModelConfig) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def model_config_from_dict(d: dict) -> ModelConfig:
+    return ModelConfig(**normalize_model_kwargs(d))
+
+
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,
             heads: int = 4, kv_heads: int = 0, d_ff: int = 512,
             vocab: int = 512, experts: int = 4) -> ModelConfig:

@@ -7,6 +7,7 @@ locations (weights = number of datacenters per country), times PUE 1.09.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import Dict, Mapping
 
 # gCO2e per kWh (OWID "carbon intensity of electricity", most recent year)
@@ -29,21 +30,57 @@ DATACENTER_LOCATIONS: Dict[str, int] = {
 }
 
 
+@dataclass(frozen=True)
+class IntensityModel:
+    """A swappable grid-carbon model: country intensity table, datacenter
+    fleet weights, and PUE. Instances are what `repro.api.Environment`
+    threads through the estimator; the module-level functions below keep
+    delegating to `DEFAULT_INTENSITY` for legacy callers."""
+
+    table: Mapping[str, float] = field(
+        default_factory=lambda: dict(CARBON_INTENSITY))
+    datacenter_locations: Mapping[str, int] = field(
+        default_factory=lambda: dict(DATACENTER_LOCATIONS))
+    pue: float = PUE
+    fallback: str = "WORLD"
+
+    def intensity(self, country: str) -> float:
+        # partial custom tables (Environment overrides) fall back to their
+        # own fallback entry, then to the global world average
+        return self.table.get(
+            country,
+            self.table.get(self.fallback, CARBON_INTENSITY["WORLD"]))
+
+    def datacenter_intensity(self) -> float:
+        total = sum(self.datacenter_locations.values())
+        return sum(self.intensity(c) * n
+                   for c, n in self.datacenter_locations.items()) / total
+
+    def co2e_kg(self, energy_j: float, intensity_g_per_kwh: float) -> float:
+        """Joules -> kg CO2e at the given intensity."""
+        kwh = energy_j / 3.6e6
+        return kwh * intensity_g_per_kwh / 1000.0
+
+    def mix_intensity(self, country_mix: Mapping[str, float]) -> float:
+        return sum(self.intensity(c) * w for c, w in country_mix.items()) / \
+            max(sum(country_mix.values()), 1e-12)
+
+
+DEFAULT_INTENSITY = IntensityModel()
+
+
 def intensity(country: str) -> float:
-    return CARBON_INTENSITY.get(country, CARBON_INTENSITY["WORLD"])
+    return DEFAULT_INTENSITY.intensity(country)
 
 
 def datacenter_intensity() -> float:
-    total = sum(DATACENTER_LOCATIONS.values())
-    return sum(intensity(c) * n for c, n in DATACENTER_LOCATIONS.items()) / total
+    return DEFAULT_INTENSITY.datacenter_intensity()
 
 
 def co2e_kg(energy_j: float, intensity_g_per_kwh: float) -> float:
     """Joules -> kg CO2e at the given intensity."""
-    kwh = energy_j / 3.6e6
-    return kwh * intensity_g_per_kwh / 1000.0
+    return DEFAULT_INTENSITY.co2e_kg(energy_j, intensity_g_per_kwh)
 
 
 def mix_intensity(country_mix: Mapping[str, float]) -> float:
-    return sum(intensity(c) * w for c, w in country_mix.items()) / \
-        max(sum(country_mix.values()), 1e-12)
+    return DEFAULT_INTENSITY.mix_intensity(country_mix)

@@ -40,9 +40,10 @@ def client_session_energy(profile: DeviceProfile, compute_s: float,
     )
 
 
-def server_energy_j(task_duration_s: float) -> float:
-    return (N_SERVER_COMPONENTS * SERVER_TASK_POWER_W * PUE
-            * task_duration_s)
+def server_energy_j(task_duration_s: float, *, pue: float = PUE,
+                    power_w: float = SERVER_TASK_POWER_W,
+                    n_components: int = N_SERVER_COMPONENTS) -> float:
+    return n_components * power_w * pue * task_duration_s
 
 
 def compute_duration_s(flops: float, device_gflops: float) -> float:

@@ -15,8 +15,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
-from repro.core import carbon
-from repro.core.energy import client_session_energy, server_energy_j
+from repro.core.carbon import IntensityModel
+from repro.core.energy import (SERVER_TASK_POWER_W, client_session_energy,
+                               server_energy_j)
 from repro.core.network import DEFAULT_NETWORK, NetworkEnergyModel
 from repro.core.profiles import FLEET, DeviceProfile
 from repro.core.telemetry import ClientSession, TaskLog
@@ -55,20 +56,29 @@ class CarbonBreakdown:
 
 @dataclass
 class CarbonEstimator:
+    """TaskLog -> CarbonBreakdown under a fully explicit environment: the
+    network energy model, device-profile registry, grid-intensity model and
+    server power are all instance state — nothing on the estimation path
+    reads module-level defaults (construct via ``repro.api.Environment`` to
+    swap any of them)."""
+
     network: NetworkEnergyModel = field(default_factory=lambda: DEFAULT_NETWORK)
     profiles: Dict[str, DeviceProfile] = field(
         default_factory=lambda: {p.name: p for p in FLEET})
+    intensity: IntensityModel = field(default_factory=IntensityModel)
+    server_power_w: float = SERVER_TASK_POWER_W
 
     def session_carbon(self, s: ClientSession) -> Dict[str, float]:
         prof = self.profiles[s.device]
         e = client_session_energy(prof, s.compute_s, s.download_s, s.upload_s)
-        ci = carbon.intensity(s.country)
+        ci = self.intensity.intensity(s.country)
         net_up_j = self.network.transfer_energy_j(s.bytes_up)
         net_down_j = self.network.transfer_energy_j(s.bytes_down)
+        co2e = self.intensity.co2e_kg
         return {
-            "client_compute_kg": carbon.co2e_kg(e.compute_j, ci),
-            "upload_kg": carbon.co2e_kg(e.upload_j + net_up_j, ci),
-            "download_kg": carbon.co2e_kg(e.download_j + net_down_j, ci),
+            "client_compute_kg": co2e(e.compute_j, ci),
+            "upload_kg": co2e(e.upload_j + net_up_j, ci),
+            "download_kg": co2e(e.download_j + net_down_j, ci),
         }
 
     def estimate(self, log: TaskLog) -> CarbonBreakdown:
@@ -78,6 +88,8 @@ class CarbonEstimator:
             cc += d["client_compute_kg"]
             up += d["upload_kg"]
             dn += d["download_kg"]
-        srv = carbon.co2e_kg(server_energy_j(log.duration_s),
-                             carbon.datacenter_intensity())
+        srv_j = server_energy_j(log.duration_s, pue=self.intensity.pue,
+                                power_w=self.server_power_w)
+        srv = self.intensity.co2e_kg(srv_j,
+                                     self.intensity.datacenter_intensity())
         return CarbonBreakdown(cc, up, dn, srv)

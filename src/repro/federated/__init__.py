@@ -1,3 +1,6 @@
-from repro.federated.runtime import TaskResult, run_async, run_sync, run_task
+from repro.federated.runtime import (
+    STRATEGIES, AsyncStrategy, RoundEvent, Strategy, SyncStrategy, TaskResult,
+    get_strategy, register_strategy, run_async, run_sync, run_task,
+)
 from repro.federated.real import RealLearner
 from repro.federated.surrogate import SurrogateLearner

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,10 +74,20 @@ class SessionPlan:
 
 class SessionSampler:
     def __init__(self, model_cfg: ModelConfig, fed: FederatedConfig,
-                 seq_len: int, param_bytes: Optional[float] = None):
+                 seq_len: int, param_bytes: Optional[float] = None,
+                 fleet: Optional[Sequence[DeviceProfile]] = None,
+                 country_mix: Optional[Mapping[str, float]] = None,
+                 download_bps: Optional[float] = None,
+                 upload_bps: Optional[float] = None):
         self.cfg = model_cfg
         self.fed = fed
         self.seq_len = seq_len
+        fleet = tuple(fleet) if fleet is not None else FLEET
+        country_mix = dict(country_mix) if country_mix is not None \
+            else COUNTRY_MIX
+        self.fleet = fleet
+        self.download_bps = download_bps or DOWNLOAD_BPS
+        self.upload_bps = upload_bps or UPLOAD_BPS
         n_params = model_cfg.param_count()
         self.n_params = n_params
         full = 4.0 * n_params  # f32 on the wire
@@ -90,15 +100,15 @@ class SessionSampler:
             self.bytes_up = param_bytes or full
             self.compute_overhead = 1.0
         self.flops_per_token = model_cfg.train_flops_per_token()
-        self._countries = list(COUNTRY_MIX)
-        cw = np.asarray(list(COUNTRY_MIX.values()), np.float64)
+        self._countries = list(country_mix)
+        cw = np.asarray(list(country_mix.values()), np.float64)
         self._ccum = np.cumsum(cw / cw.sum())
-        dw = np.asarray([p.weight for p in FLEET], np.float64)
+        dw = np.asarray([p.weight for p in fleet], np.float64)
         self._dcum = np.cumsum(dw / dw.sum())
 
     def plan(self, client_id: int, round_idx: int) -> SessionPlan:
         u = _uniforms(self.fed.seed, client_id, round_idx, 10)
-        device = FLEET[int(np.searchsorted(self._dcum, u[0]))]
+        device = self.fleet[int(np.searchsorted(self._dcum, u[0]))]
         country = self._countries[int(np.searchsorted(self._ccum, u[1]))]
         n_ex = _pareto_samples(
             _uniforms(self.fed.seed, client_id, 0, 1)[0])
@@ -106,9 +116,9 @@ class SessionSampler:
         compute_s = (tokens * self.flops_per_token * self.compute_overhead
                      / (device.train_gflops * 1e9)) \
             * _lognormal(u[2], u[3], _JITTER_SIGMA)
-        download_s = 8.0 * self.bytes_down / DOWNLOAD_BPS \
+        download_s = 8.0 * self.bytes_down / self.download_bps \
             * _lognormal(u[4], u[5], _JITTER_SIGMA)
-        upload_s = 8.0 * self.bytes_up / UPLOAD_BPS \
+        upload_s = 8.0 * self.bytes_up / self.upload_bps \
             * _lognormal(u[6], u[7], _JITTER_SIGMA)
         return SessionPlan(client_id, device, country, download_s, compute_s,
                            upload_s, self.bytes_down, self.bytes_up, n_ex)

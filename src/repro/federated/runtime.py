@@ -1,8 +1,10 @@
 """The FL task runtime: synchronous (FedAvg) and asynchronous (FedBuff)
 event loops with full carbon telemetry (paper §3.1).
 
-Both loops drive a pluggable learner (RealLearner or SurrogateLearner)
-through the same PAPAYA-shaped protocol:
+Both loops are ``Strategy`` classes registered in the string-keyed
+``STRATEGIES`` registry ("sync", "async"; ``register_strategy`` is open for
+carbon-aware variants). They drive a pluggable learner (RealLearner or
+SurrogateLearner) through the same PAPAYA-shaped protocol:
 
 sync  — each round selects `concurrency` clients ("users per round"); the
         round closes when the `aggregation_goal`-th result arrives; clients
@@ -14,14 +16,17 @@ async — `concurrency` clients are always in flight; a finished client's
         train on the newer model (FedBuff). Stragglers never block.
 
 The returned TaskLog contains every session's vitals; CarbonEstimator turns
-it into the paper's component breakdown.
+it into the paper's component breakdown. Strategies emit a ``RoundEvent``
+after every server eval so callers (``repro.api.Experiment``) can stream
+progress. ``run_task`` survives only as a deprecated shim over the
+registry — new code goes through ``repro.api``.
 """
 from __future__ import annotations
 
 import heapq
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import warnings
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple, Type
 
 import numpy as np
 
@@ -53,6 +58,20 @@ class TaskResult:
             **{k: v for k, v in self.carbon.as_dict().items()},
             "sessions": float(len(self.log.sessions)),
         }
+
+
+@dataclass(frozen=True)
+class RoundEvent:
+    """Streamed to `on_round` after every server eval (both strategies)."""
+    round_idx: int               # server model updates so far
+    t_s: float                   # task clock, seconds
+    perplexity: float
+    smoothed_perplexity: float
+    n_sessions: int              # client sessions logged so far
+    mode: str                    # strategy key ("sync" / "async")
+
+
+RoundCallback = Callable[[RoundEvent], None]
 
 
 class _Stopper:
@@ -87,141 +106,224 @@ def _select_cohort(rng: np.random.Generator, k: int, population: int,
     return rng.choice(exclude_eval, size=k, replace=False) % population
 
 
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+STRATEGIES: Dict[str, Type["Strategy"]] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: expose a Strategy under a string key (open for
+    carbon-aware selection policies next)."""
+    def deco(cls: Type["Strategy"]) -> Type["Strategy"]:
+        cls.mode = name
+        STRATEGIES[name] = cls
+        return cls
+    return deco
+
+
+def get_strategy(name: str) -> "Strategy":
+    try:
+        return STRATEGIES[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown strategy {name!r}; registered: {sorted(STRATEGIES)}"
+        ) from None
+
+
+class Strategy:
+    """One FL orchestration policy. Subclasses implement `_loop`; the base
+    handles sampler/estimator wiring so every strategy sees the same
+    environment knobs (fleet, country mix, bandwidths, carbon models)."""
+
+    mode: str = ""
+
+    def run(self, model_cfg: ModelConfig, fed: FederatedConfig,
+            run: RunConfig, learner, *, seq_len: int = 64,
+            estimator: Optional[CarbonEstimator] = None,
+            sampler: Optional[SessionSampler] = None,
+            on_round: Optional[RoundCallback] = None) -> TaskResult:
+        sampler = sampler or SessionSampler(model_cfg, fed, seq_len)
+        est = estimator or CarbonEstimator()
+        log = TaskLog()
+        stop = _Stopper(run)
+        t, rounds, ppl = self._loop(model_cfg, fed, learner, sampler, log,
+                                    stop, on_round)
+        return TaskResult(log, est.estimate(log), stop.reached, rounds,
+                          t / 3600.0, ppl, stop.smoothed or ppl)
+
+    # subclasses: run the event loop, return (t_s, rounds, perplexity)
+    def _loop(self, model_cfg: ModelConfig, fed: FederatedConfig, learner,
+              sampler: SessionSampler, log: TaskLog, stop: _Stopper,
+              on_round: Optional[RoundCallback]) -> Tuple[float, int, float]:
+        raise NotImplementedError
+
+    def _emit(self, on_round: Optional[RoundCallback], log: TaskLog,
+              round_idx: int, t: float, ppl: float, smoothed: float) -> None:
+        if on_round is not None:
+            on_round(RoundEvent(round_idx, t, ppl, smoothed,
+                                len(log.sessions), self.mode))
+
+
+@register_strategy("sync")
+class SyncStrategy(Strategy):
+    """FedAvg rounds with over-selection cancel (paper §3.1 sync)."""
+
+    def _loop(self, model_cfg, fed, learner, sampler, log, stop, on_round):
+        assert fed.mode == "sync"
+        rng = np.random.default_rng(fed.seed + 1)
+        t = 0.0
+        rounds = 0
+        ppl = float(model_cfg.vocab_size)
+
+        while True:
+            cohort = _select_cohort(rng, fed.concurrency, population=5_000_000)
+            plans = [sampler.plan(int(c), rounds) for c in cohort]
+            # pass 1: tentative outcomes, find when the goal-th result arrives
+            tentative = [sampler.resolve(p, rounds, t) for p in plans]
+            ends = sorted(s["end_t"] for s, ok in tentative if ok)
+            goal = min(fed.aggregation_goal, fed.concurrency)
+            if len(ends) >= goal:
+                round_end = ends[goal - 1]
+                failed = False
+            elif ends:
+                # dropouts ate the over-selection slack: the round closes at
+                # the last survivor (production would hit the round deadline)
+                # and the server updates with what it received
+                round_end = ends[-1]
+                failed = False
+            else:
+                round_end = max((s["end_t"] for s, _ in tentative), default=t)
+                failed = True
+            # pass 2: sessions against the round deadline (cancel stragglers)
+            contributors: List[int] = []
+            for p in plans:
+                kw, ok = sampler.resolve(p, rounds, t, deadline=round_end)
+                log.log_session(ClientSession(**kw))
+                if ok and len(contributors) < goal:
+                    contributors.append(p.client_id)
+            t = round_end + _SERVER_AGG_S
+            rounds += 1
+            if not failed and contributors:
+                deltas, weights = [], []
+                if getattr(learner, "real", True):
+                    if hasattr(learner, "client_deltas"):
+                        deltas, weights = learner.client_deltas(contributors)
+                    else:
+                        for c in contributors:
+                            d, w = learner.client_delta(c, None)
+                            deltas.append(d)
+                            weights.append(w)
+                else:
+                    deltas, weights = [None], [1.0]
+                learner.apply(deltas, weights, n_contributors=len(contributors))
+                ppl = learner.eval_perplexity()
+                stop.update(ppl)
+            log.log_round(t)
+            log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
+            self._emit(on_round, log, rounds, t, ppl, stop.smoothed or ppl)
+            if stop.reached or stop.out_of_budget(t, rounds):
+                break
+        return t, rounds, ppl
+
+
+@register_strategy("async")
+class AsyncStrategy(Strategy):
+    """FedBuff: always-`concurrency` in-flight clients, buffer size =
+    aggregation_goal, staleness-weighted aggregation."""
+
+    def _loop(self, model_cfg, fed, learner, sampler, log, stop, on_round):
+        assert fed.mode == "async"
+        rng = np.random.default_rng(fed.seed + 2)
+        t = 0.0
+        version = 0
+        ppl = float(model_cfg.vocab_size)
+        buffer: List[Tuple[int, int]] = []        # (client_id, version_sent)
+        heap: List[Tuple[float, int, int, object]] = []  # (end, cid, ver, plan)
+        counter = 0
+
+        def dispatch(cid: int, now: float):
+            nonlocal counter
+            plan = sampler.plan(cid, version)
+            kw, ok = sampler.resolve(plan, version, now)
+            heapq.heappush(heap, (kw["end_t"], counter, cid, (kw, ok, version)))
+            counter += 1
+
+        for c in _select_cohort(rng, fed.concurrency, population=5_000_000):
+            dispatch(int(c), t + float(rng.uniform(0, 5.0)))
+
+        while heap:
+            if stop.out_of_budget(t, version):
+                break
+            end, _, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
+            t = max(t, end)
+            log.log_session(ClientSession(staleness=version - ver_sent, **kw))
+            if ok:
+                buffer.append((cid, ver_sent))
+                if len(buffer) >= fed.aggregation_goal:
+                    staleness = [version - v for _, v in buffer]
+                    deltas, weights = [], []
+                    is_real = getattr(learner, "real", True)
+                    if is_real:
+                        for bc, bv in buffer:
+                            d, w = learner.client_delta(bc, bv)
+                            deltas.append(d)
+                            weights.append(w)
+                    else:
+                        deltas, weights = [None], [1.0]
+                    kw_extra = {"staleness": staleness} if is_real else {}
+                    learner.apply(deltas, weights,
+                                  n_contributors=len(buffer),
+                                  mean_staleness=float(np.mean(staleness)),
+                                  **kw_extra)
+                    buffer = []
+                    version += 1
+                    t += _SERVER_AGG_S
+                    ppl = learner.eval_perplexity()
+                    stop.update(ppl)
+                    log.log_round(t)
+                    log.log_eval(t, version, ppl, stop.smoothed or ppl)
+                    self._emit(on_round, log, version, t, ppl,
+                               stop.smoothed or ppl)
+                    if stop.reached or stop.out_of_budget(t, version):
+                        break
+            # keep concurrency in-flight: replace this client immediately
+            nxt = int(rng.choice(5_000_000))
+            dispatch(nxt, t)
+        return t, version, ppl
+
+
+# ---------------------------------------------------------------------------
+# Deprecated free-function shims (pre-`repro.api` entry points)
+# ---------------------------------------------------------------------------
+
 def run_sync(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
              learner, seq_len: int = 64,
              estimator: Optional[CarbonEstimator] = None) -> TaskResult:
-    assert fed.mode == "sync"
-    sampler = SessionSampler(model_cfg, fed, seq_len)
-    est = estimator or CarbonEstimator()
-    log = TaskLog()
-    stop = _Stopper(run)
-    rng = np.random.default_rng(fed.seed + 1)
-    t = 0.0
-    rounds = 0
-    ppl = float(model_cfg.vocab_size)
-
-    while True:
-        cohort = _select_cohort(rng, fed.concurrency, population=5_000_000)
-        plans = [sampler.plan(int(c), rounds) for c in cohort]
-        # pass 1: tentative outcomes, find when the goal-th result arrives
-        tentative = [sampler.resolve(p, rounds, t) for p in plans]
-        ends = sorted(s["end_t"] for s, ok in tentative if ok)
-        goal = min(fed.aggregation_goal, fed.concurrency)
-        if len(ends) >= goal:
-            round_end = ends[goal - 1]
-            failed = False
-        elif ends:
-            # dropouts ate the over-selection slack: the round closes at the
-            # last survivor (production would hit the round deadline) and the
-            # server updates with what it received
-            round_end = ends[-1]
-            failed = False
-        else:
-            round_end = max((s["end_t"] for s, _ in tentative), default=t)
-            failed = True
-        # pass 2: sessions against the round deadline (cancel stragglers)
-        contributors: List[int] = []
-        for p in plans:
-            kw, ok = sampler.resolve(p, rounds, t, deadline=round_end)
-            log.log_session(ClientSession(**kw))
-            if ok and len(contributors) < goal:
-                contributors.append(p.client_id)
-        t = round_end + _SERVER_AGG_S
-        rounds += 1
-        if not failed and contributors:
-            deltas, weights = [], []
-            if getattr(learner, "real", True):
-                if hasattr(learner, "client_deltas"):
-                    deltas, weights = learner.client_deltas(contributors)
-                else:
-                    for c in contributors:
-                        d, w = learner.client_delta(c, None)
-                        deltas.append(d)
-                        weights.append(w)
-            else:
-                deltas, weights = [None], [1.0]
-            learner.apply(deltas, weights, n_contributors=len(contributors))
-            ppl = learner.eval_perplexity()
-            stop.update(ppl)
-        log.log_round(t)
-        log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
-        if stop.reached or stop.out_of_budget(t, rounds):
-            break
-
-    return TaskResult(log, est.estimate(log), stop.reached, rounds,
-                      t / 3600.0, ppl, stop.smoothed or ppl)
+    warnings.warn(
+        "run_sync is deprecated; use repro.api.Experiment",
+        DeprecationWarning, stacklevel=2)
+    return SyncStrategy().run(model_cfg, fed, run, learner, seq_len=seq_len,
+                              estimator=estimator)
 
 
 def run_async(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
               learner, seq_len: int = 64,
               estimator: Optional[CarbonEstimator] = None) -> TaskResult:
-    """FedBuff: always-`concurrency` in-flight clients, buffer size =
-    aggregation_goal, staleness-weighted aggregation."""
-    assert fed.mode == "async"
-    sampler = SessionSampler(model_cfg, fed, seq_len)
-    est = estimator or CarbonEstimator()
-    log = TaskLog()
-    stop = _Stopper(run)
-    rng = np.random.default_rng(fed.seed + 2)
-    t = 0.0
-    version = 0
-    ppl = float(model_cfg.vocab_size)
-    buffer: List[Tuple[int, int]] = []          # (client_id, version_sent)
-    heap: List[Tuple[float, int, int, object]] = []   # (end, cid, ver, plan)
-    counter = 0
-
-    def dispatch(cid: int, now: float):
-        nonlocal counter
-        plan = sampler.plan(cid, version)
-        kw, ok = sampler.resolve(plan, version, now)
-        heapq.heappush(heap, (kw["end_t"], counter, cid, (kw, ok, version)))
-        counter += 1
-
-    for c in _select_cohort(rng, fed.concurrency, population=5_000_000):
-        dispatch(int(c), t + float(rng.uniform(0, 5.0)))
-
-    while heap:
-        if stop.out_of_budget(t, version):
-            break
-        end, _, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
-        t = max(t, end)
-        log.log_session(ClientSession(staleness=version - ver_sent, **kw))
-        if ok:
-            buffer.append((cid, ver_sent))
-            if len(buffer) >= fed.aggregation_goal:
-                staleness = [version - v for _, v in buffer]
-                deltas, weights = [], []
-                is_real = getattr(learner, "real", True)
-                if is_real:
-                    for bc, bv in buffer:
-                        d, w = learner.client_delta(bc, bv)
-                        deltas.append(d)
-                        weights.append(w)
-                else:
-                    deltas, weights = [None], [1.0]
-                kw_extra = {"staleness": staleness} if is_real else {}
-                learner.apply(deltas, weights,
-                              n_contributors=len(buffer),
-                              mean_staleness=float(np.mean(staleness)),
-                              **kw_extra)
-                buffer = []
-                version += 1
-                t += _SERVER_AGG_S
-                ppl = learner.eval_perplexity()
-                stop.update(ppl)
-                log.log_round(t)
-                log.log_eval(t, version, ppl, stop.smoothed or ppl)
-                if stop.reached or stop.out_of_budget(t, version):
-                    break
-        # keep concurrency in-flight: replace this client immediately
-        nxt = int(rng.choice(5_000_000))
-        dispatch(nxt, t)
-
-    return TaskResult(log, est.estimate(log), stop.reached, version,
-                      t / 3600.0, ppl, stop.smoothed or ppl)
+    warnings.warn(
+        "run_async is deprecated; use repro.api.Experiment",
+        DeprecationWarning, stacklevel=2)
+    return AsyncStrategy().run(model_cfg, fed, run, learner, seq_len=seq_len,
+                               estimator=estimator)
 
 
 def run_task(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
              learner, seq_len: int = 64) -> TaskResult:
-    fn = run_sync if fed.mode == "sync" else run_async
-    return fn(model_cfg, fed, run, learner, seq_len=seq_len)
+    """Deprecated: build an `repro.api.ExperimentSpec` and run it through
+    `repro.api.Experiment` instead."""
+    warnings.warn(
+        "run_task is deprecated; use repro.api.Experiment", DeprecationWarning,
+        stacklevel=2)
+    return get_strategy(fed.mode).run(model_cfg, fed, run, learner,
+                                      seq_len=seq_len)

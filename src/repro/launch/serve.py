@@ -9,15 +9,27 @@ decode_step the decode_32k / long_500k dry-run shapes lower.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, reduced
+from repro.api import ModelRef
+from repro.configs import get_config
 from repro.models import get_model
+
+
+def serve_model_ref(arch: str, reduced: bool) -> ModelRef:
+    """Declarative model reference for the serving path (repro.api)."""
+    if not reduced:
+        return ModelRef(arch=arch)
+    family = get_config(arch).family
+    overrides = dict(lstm_hidden=256, max_context=16) \
+        if family == "charlm" else {}
+    return ModelRef(arch=arch, reduced=True,
+                    reduced_kw=dict(layers=3 if family == "hybrid" else 2),
+                    overrides=overrides)
 
 
 def main(argv=None):
@@ -30,12 +42,7 @@ def main(argv=None):
     p.add_argument("--greedy", action="store_true")
     args = p.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        layers = 3 if cfg.family == "hybrid" else 2
-        cfg = reduced(cfg, layers=layers)
-        if cfg.family == "charlm":
-            cfg = dataclasses.replace(cfg, lstm_hidden=256, max_context=16)
+    cfg = serve_model_ref(args.arch, args.reduced).resolve()
     model = get_model(cfg)
     rng = jax.random.PRNGKey(0)
     params, _ = model.init(rng)

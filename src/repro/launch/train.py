@@ -1,29 +1,54 @@
 """Production train driver: run a federated task end-to-end with full
-carbon telemetry, on any model-zoo architecture.
+carbon telemetry, on any model-zoo architecture — a thin CLI over
+`repro.api.Experiment`.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch paper-charlm --reduced \\
       --mode sync --concurrency 8 --rounds 50
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \\
       --mode async --concurrency 6 --rounds 20 --ckpt /tmp/ck
+  PYTHONPATH=src python -m repro.launch.train --spec exp.json   # replay one
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
 import json
 import time
 
+import argparse
+
+from repro.api import Experiment, ExperimentSpec, ModelRef
 from repro.checkpoint import save_checkpoint
-from repro.configs import (FederatedConfig, RunConfig, get_config, reduced)
-from repro.data import FederatedDataset
-from repro.federated import RealLearner, SurrogateLearner, run_task
+from repro.configs import FederatedConfig, RunConfig, get_config
 
 
-def build_dataset(cfg, seq_len):
-    return FederatedDataset(vocab_size=cfg.vocab_size, seq_len=seq_len,
-                            char_vocab=cfg.char_vocab,
-                            max_word_len=cfg.max_word_len)
+def reduced_model_ref(arch: str) -> ModelRef:
+    """The driver's CPU-trainable shrink recipe, recorded declaratively."""
+    family = get_config(arch).family
+    overrides = {}
+    if family == "charlm":
+        overrides = dict(lstm_hidden=128, max_context=16)
+    return ModelRef(arch=arch, reduced=True,
+                    reduced_kw=dict(layers=3 if family == "hybrid" else 2,
+                                    d_model=128, d_ff=256, vocab=512),
+                    overrides=overrides)
+
+
+def spec_from_args(args) -> ExperimentSpec:
+    model = reduced_model_ref(args.arch) if args.reduced \
+        else ModelRef(arch=args.arch)
+    fed = FederatedConfig(
+        mode=args.mode, concurrency=args.concurrency,
+        aggregation_goal=args.aggregation_goal or
+        max(1, int(args.concurrency * 0.8)),
+        client_lr=args.client_lr, server_lr=args.server_lr,
+        local_epochs=args.local_epochs, client_batch_size=args.batch_size,
+        compression=args.compression)
+    run = RunConfig(target_perplexity=args.target_ppl,
+                    max_rounds=args.rounds, max_hours=1e9)
+    return ExperimentSpec(
+        model=model, federated=fed, run=run,
+        learner="surrogate" if args.surrogate else "real",
+        seq_len=args.seq_len)
 
 
 def main(argv=None):
@@ -44,44 +69,38 @@ def main(argv=None):
                    help="tiny same-family variant (CPU-trainable)")
     p.add_argument("--surrogate", action="store_true",
                    help="carbon-only simulation, no real training")
+    p.add_argument("--spec", default="",
+                   help="load an ExperimentSpec JSON (overrides other args)")
+    p.add_argument("--save-spec", default="",
+                   help="write the assembled ExperimentSpec JSON and exit")
     p.add_argument("--ckpt", default="")
     p.add_argument("--json", default="")
     args = p.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        layers = 3 if cfg.family == "hybrid" else 2
-        cfg = reduced(cfg, layers=layers, d_model=128, d_ff=256, vocab=512)
-        if cfg.family == "charlm":
-            cfg = dataclasses.replace(cfg, lstm_hidden=128, max_context=16)
-    fed = FederatedConfig(
-        mode=args.mode, concurrency=args.concurrency,
-        aggregation_goal=args.aggregation_goal or
-        max(1, int(args.concurrency * 0.8)),
-        client_lr=args.client_lr, server_lr=args.server_lr,
-        local_epochs=args.local_epochs, client_batch_size=args.batch_size,
-        compression=args.compression)
-    run = RunConfig(target_perplexity=args.target_ppl,
-                    max_rounds=args.rounds, max_hours=1e9)
+    spec = ExperimentSpec.load(args.spec) if args.spec else \
+        spec_from_args(args)
+    if args.save_spec:
+        spec.save(args.save_spec)
+        print(f"[train] spec -> {args.save_spec}")
+        return 0
 
+    exp = Experiment(spec)
+    if spec.learner == "real":
+        print(f"[train] initial perplexity "
+              f"{exp.build_learner().eval_perplexity():.1f}")
     t0 = time.time()
-    if args.surrogate:
-        learner = SurrogateLearner(cfg, fed, run)
-    else:
-        ds = build_dataset(cfg, args.seq_len)
-        learner = RealLearner(cfg, fed, run, ds)
-        print(f"[train] initial perplexity {learner.eval_perplexity():.1f}")
-    res = run_task(cfg, fed, run, learner, seq_len=args.seq_len)
+    res = exp.run()
     s = res.summary()
-    print(f"[train] {args.arch} {args.mode} rounds={s['rounds']:.0f} "
+    arch = spec.model.arch or exp.model_config.name
+    print(f"[train] {arch} {spec.federated.mode} rounds={s['rounds']:.0f} "
           f"ppl={s['perplexity']:.1f} simulated={s['duration_h']:.2f}h "
           f"carbon={s['carbon_total_kg']*1000:.2f} gCO2e "
           f"(wall {time.time()-t0:.0f}s)")
     print(f"[train] carbon shares: "
           + " ".join(f"{k}={v:.2f}" for k, v in res.carbon.shares().items()))
-    if args.ckpt and not args.surrogate:
-        save_checkpoint(args.ckpt, {"params": learner.params},
-                        meta={"rounds": res.rounds, "arch": args.arch})
+    if args.ckpt and spec.learner == "real":
+        save_checkpoint(args.ckpt, {"params": exp.learner.params},
+                        meta={"rounds": res.rounds, "arch": arch})
         print(f"[train] checkpoint -> {args.ckpt}")
     if args.json:
         with open(args.json, "w") as f:

@@ -154,7 +154,9 @@ def batch_spec(mesh: Mesh, ndim: int, *, batch_dim: int = 0,
             axes = None
     spec = [None] * ndim
     if axes:
-        spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+        # keep the tuple form even for a single axis so specs compare
+        # consistently (PartitionSpec('data') != PartitionSpec(('data',)))
+        spec[batch_dim] = tuple(axes)
     return P(*spec)
 
 

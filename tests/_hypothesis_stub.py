@@ -1,0 +1,107 @@
+"""Minimal stand-in for the `hypothesis` API used by this test suite.
+
+The CI image does not ship hypothesis; rather than skip the property
+tests we run each one against a deterministic pseudo-random sample of the
+declared strategy space. Only the subset the suite uses is implemented:
+``given``, ``settings(max_examples=, deadline=)`` and the ``integers``,
+``floats`` and ``lists`` strategies. conftest.py registers this module as
+``hypothesis`` in sys.modules only when the real package is missing, so
+installing hypothesis transparently upgrades the suite back to real
+property testing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    def draw(r: random.Random) -> float:
+        # hit the boundaries occasionally, like hypothesis does
+        u = r.random()
+        if u < 0.05:
+            return min_value
+        if u > 0.95:
+            return max_value
+        return r.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    return _Strategy(
+        lambda r: [elements.draw(r)
+                   for _ in range(r.randint(min_size, max_size))])
+
+
+def given(*strategies: _Strategy):
+    def decorate(fn):
+        params = list(inspect.signature(fn).parameters)
+        # like hypothesis: positional strategies fill the TRAILING params;
+        # any leading params remain pytest fixtures
+        strat_names = params[len(params) - len(strategies):]
+        fixture_names = params[:len(params) - len(strategies)]
+
+        # NOT functools.wraps: copying __wrapped__/the signature would make
+        # pytest treat the strategy-filled parameters as fixtures
+        def wrapper(**fixture_kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = {name: s.draw(rnd)
+                         for name, s in zip(strat_names, strategies)}
+                try:
+                    fn(**fixture_kwargs, **drawn)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {drawn!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = inspect.Signature(
+            [inspect.Parameter(n_, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+             for n_ in fixture_names])
+        wrapper._max_examples = getattr(fn, "_max_examples",
+                                        _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install() -> None:
+    """Register this stub as `hypothesis` (+ `hypothesis.strategies`)."""
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.lists = lists
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

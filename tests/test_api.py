@@ -1,0 +1,206 @@
+"""repro.api: spec JSON round-trips, strategy registry, streaming
+callbacks, Environment overrides, and the GreenAdvisor edge cases."""
+import dataclasses
+
+import pytest
+
+from repro.api import (Environment, Experiment, ExperimentSpec, ModelRef,
+                       STRATEGIES, Strategy, get_strategy, register_strategy)
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.network import NetworkEnergyModel
+from repro.core.profiles import FLEET
+
+
+def _spec(mode="sync", conc=50, max_rounds=60, **fed_kw):
+    return ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(mode=mode, concurrency=conc,
+                                  aggregation_goal=max(1, int(conc * 0.8)),
+                                  **fed_kw),
+        run=RunConfig(target_perplexity=175.0, max_rounds=max_rounds),
+        learner="surrogate")
+
+
+# ------------------------------------------------------------ spec JSON
+def test_spec_json_roundtrip_equality():
+    spec = _spec(mode="async", compression="int8")
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+def test_spec_json_reproduces_summary(tmp_path):
+    spec = _spec(conc=30)
+    path = str(tmp_path / "spec.json")
+    spec.save(path)
+    first = Experiment(spec).run().summary()
+    again = Experiment(ExperimentSpec.load(path)).run().summary()
+    assert first == again
+
+
+def test_model_ref_inline_config_roundtrip():
+    cfg = get_config("paper-charlm")
+    ref = ModelRef.from_config(cfg)
+    ref2 = ModelRef.from_dict(ref.to_dict())
+    assert ref2.resolve() == cfg
+
+
+def test_model_ref_reduced_overrides():
+    ref = ModelRef("paper-charlm", reduced=True,
+                   reduced_kw=dict(layers=1, d_model=64, d_ff=64, vocab=256),
+                   overrides=dict(lstm_hidden=64, max_context=16))
+    cfg = ref.resolve()
+    assert cfg.num_layers == 1 and cfg.lstm_hidden == 64
+    # survives a JSON hop (tuple fields come back as tuples)
+    spec = ExperimentSpec(model=ref)
+    cfg2 = ExperimentSpec.from_json(spec.to_json()).model.resolve()
+    assert cfg2 == cfg
+
+
+def test_spec_rejects_unknown_learner():
+    with pytest.raises(AssertionError):
+        ExperimentSpec(learner="quantum")
+
+
+# ------------------------------------------------------ strategy registry
+def test_registry_has_seeded_strategies():
+    assert {"sync", "async"} <= set(STRATEGIES)
+    assert get_strategy("sync").mode == "sync"
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        get_strategy("carbon-aware-nope")
+
+
+def test_register_strategy_decorator():
+    @register_strategy("test-dummy")
+    class Dummy(Strategy):
+        pass
+    try:
+        assert isinstance(get_strategy("test-dummy"), Dummy)
+        assert Dummy.mode == "test-dummy"
+    finally:
+        del STRATEGIES["test-dummy"]
+
+
+def test_run_task_shim_warns_and_matches_api():
+    import warnings
+    from repro.federated import SurrogateLearner, run_task
+    spec = _spec(conc=30)
+    cfg = spec.model.resolve()
+    with pytest.warns(DeprecationWarning):
+        tr = run_task(cfg, spec.federated, spec.run,
+                      SurrogateLearner(cfg, spec.federated, spec.run))
+    assert tr.summary() == Experiment(spec).run().summary()
+
+
+# ------------------------------------------------------------- callbacks
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_callback_ordering(mode):
+    spec = _spec(mode=mode, conc=20, max_rounds=15)
+    calls = []
+    res = Experiment(spec).run(
+        on_start=lambda s: calls.append(("start", s)),
+        on_round=lambda ev: calls.append(("round", ev)),
+        on_complete=lambda r: calls.append(("complete", r)))
+    kinds = [k for k, _ in calls]
+    assert kinds[0] == "start" and kinds[-1] == "complete"
+    assert kinds.count("start") == kinds.count("complete") == 1
+    events = [ev for k, ev in calls if k == "round"]
+    assert len(events) == res.rounds > 0
+    assert all(ev.mode == mode for ev in events)
+    # rounds strictly increase, task clock and session count never decrease
+    for a, b in zip(events, events[1:]):
+        assert b.round_idx == a.round_idx + 1
+        assert b.t_s >= a.t_s
+        assert b.n_sessions >= a.n_sessions
+    assert calls[0][1] is spec
+    assert calls[-1][1].summary() == res.summary()
+
+
+# ------------------------------------------------------------ environment
+def test_environment_roundtrip():
+    env = Environment(network=NetworkEnergyModel(e_access_nj=99.0),
+                      fleet=FLEET[:3], pue=1.5)
+    env2 = Environment.from_dict(env.to_dict())
+    assert env2.network.e_access_nj == 99.0
+    assert env2.pue == 1.5
+    assert env2.fleet == tuple(FLEET[:3])
+
+
+def test_network_override_changes_breakdown():
+    spec = _spec(conc=30)
+    base = Experiment(spec).run().carbon
+    hot = Experiment(spec.replace(environment=Environment(
+        network=NetworkEnergyModel(e_access_nj=526.0)))).run().carbon
+    assert hot.upload_kg > base.upload_kg
+    assert hot.download_kg > base.download_kg
+    assert hot.client_compute_kg == pytest.approx(base.client_compute_kg)
+
+
+def test_intensity_override_scales_carbon():
+    spec = _spec(conc=30)
+    base = Experiment(spec).run().carbon
+    env = Environment(carbon_intensity={
+        k: 10.0 * v for k, v in Environment().carbon_intensity.items()})
+    scaled = Experiment(spec.replace(environment=env)).run().carbon
+    assert scaled.client_compute_kg == pytest.approx(
+        10.0 * base.client_compute_kg)
+    assert scaled.total_kg == pytest.approx(10.0 * base.total_kg)
+
+
+def test_partial_intensity_table_falls_back():
+    # a partial custom table must not crash runs whose sampled countries
+    # (or datacenter countries) are missing from it
+    spec = _spec(conc=20, max_rounds=5)
+    env = Environment(carbon_intensity={"US": 380.0})
+    res = Experiment(spec.replace(environment=env)).run()
+    assert res.carbon.total_kg > 0
+
+
+def test_inline_config_spec_json_equality():
+    spec = ExperimentSpec(
+        model=ModelRef.from_config(get_config("paper-charlm")))
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+
+
+def test_prebuilt_learner_is_used_then_rebuilt():
+    spec = _spec(conc=20, max_rounds=5)
+    exp = Experiment(spec)
+    pre = exp.build_learner()
+    res1 = exp.run()
+    assert exp.learner is pre            # run consumed the pre-built learner
+    res2 = exp.run()                     # second run rebuilds -> reproducible
+    assert exp.learner is not pre
+    assert res1.summary() == res2.summary()
+
+
+def test_fleet_override_reaches_telemetry():
+    spec = _spec(conc=20, max_rounds=5)
+    one_phone = dataclasses.replace(FLEET[0], weight=1.0)
+    res = Experiment(spec.replace(
+        environment=Environment(fleet=(one_phone,)))).run()
+    assert {s.device for s in res.log.sessions} == {one_phone.name}
+
+
+# -------------------------------------------------------------- advisor
+def test_advisor_cache_hits_on_equal_config():
+    from repro.core.advisor import GreenAdvisor
+    adv = GreenAdvisor(get_config("paper-charlm"),
+                       RunConfig(target_perplexity=175.0, max_rounds=60))
+    fed = FederatedConfig(concurrency=30, aggregation_goal=24)
+    r1 = adv.evaluate(fed)
+    # a distinct-but-equal config must hit the same cache entry
+    r2 = adv.evaluate(FederatedConfig(concurrency=30, aggregation_goal=24))
+    assert r1 is r2
+
+
+def test_advisor_flags_infeasible():
+    from repro.core.advisor import GreenAdvisor
+    adv = GreenAdvisor(get_config("paper-charlm"),
+                       RunConfig(target_perplexity=175.0))
+    grid = dict(mode=("sync",), concurrency=(50,), local_epochs=(1,))
+    ok = adv.search(grid=grid)
+    assert ok and all(r.feasible for r in ok)
+    bad = adv.search(grid=grid, max_hours=1e-4)
+    assert bad and all(not r.feasible for r in bad)
+    assert "[INFEASIBLE]" in bad[0].why()
