@@ -1,0 +1,159 @@
+"""Simulation-engine throughput benchmark: columnar vs scalar engine.
+
+Runs a fixed fig5-style sweep (sync vs async FedBuff at matched
+concurrency = aggregation goal) through BOTH engines:
+
+* **columnar** — the production `repro.federated.runtime` strategies
+  (vectorized `plan_batch`/`resolve_batch`, `SessionBatch` telemetry,
+  vectorized estimator);
+* **scalar** — the pre-columnar per-session reference loop preserved in
+  `repro.federated.reference` (the seed engine's hot path).
+
+Both engines produce seed-for-seed identical TaskLogs, so sessions/sec is
+an apples-to-apples measure of the same simulated workload. Results land
+in ``BENCH_runtime.json`` (committed at the repo root) so the speedup is
+tracked across PRs; ``--check`` compares the fresh numbers against the
+committed baseline and fails on a >2x throughput regression. The gate is
+deliberately loose: baselines are wall-clock on whatever machine last
+passed, so 2x absorbs hardware variance — and because each passing run
+re-baselines, it catches cliffs, not slow drift (track the committed
+JSON's history for that).
+
+    PYTHONPATH=src python benchmarks/bench_runtime.py [--quick] [--check]
+
+Known asymmetry: the sync engine is fully array-parallel per round and
+clears 20x comfortably; the async engine keeps its (inherently
+sequential) event heap, so its single-thread speedup is bounded by the
+per-pop Python cost even though dispatch/resolve are batched.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.federated.reference import run_scalar
+from repro.federated.runtime import get_strategy
+from repro.federated.surrogate import SurrogateLearner
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_runtime.json")
+REGRESSION_FACTOR = 2.0
+
+
+def sweep_points(quick: bool) -> List[Dict]:
+    conc = 200 if quick else 1000
+    run_kw = dict(target_perplexity=175.0)
+    if quick:
+        run_kw["max_rounds"] = 80
+    return [dict(mode=m, concurrency=conc, aggregation_goal=conc,
+                 run_kw=run_kw) for m in ("sync", "async")]
+
+
+def _run_engine(engine: str, points: List[Dict]) -> Dict:
+    cfg = get_config("paper-charlm")
+    cfg.param_count()   # warm the shared shape cache outside the timer
+    out: Dict = {"per_mode": {}}
+    total_sessions = 0
+    total_wall = 0.0
+    for p in points:
+        fed = FederatedConfig(mode=p["mode"], concurrency=p["concurrency"],
+                              aggregation_goal=p["aggregation_goal"])
+        run = RunConfig(**p["run_kw"])
+        learner = SurrogateLearner(cfg, fed, run)
+        t0 = time.time()
+        if engine == "columnar":
+            res = get_strategy(fed.mode).run(cfg, fed, run, learner)
+        else:
+            res = run_scalar(cfg, fed, run, learner)
+        wall = time.time() - t0
+        n = res.log.n_sessions
+        out["per_mode"][p["mode"]] = {
+            "sessions": n, "wall_s": round(wall, 4),
+            "sessions_per_s": round(n / max(wall, 1e-9)),
+            "rounds": res.rounds,
+            "carbon_total_kg": res.carbon.total_kg,
+        }
+        total_sessions += n
+        total_wall += wall
+    out["sessions"] = total_sessions
+    out["wall_s"] = round(total_wall, 4)
+    out["sessions_per_s"] = round(total_sessions / max(total_wall, 1e-9))
+    return out
+
+
+def run_bench(quick: bool) -> Dict:
+    points = sweep_points(quick)
+    columnar = _run_engine("columnar", points)
+    scalar = _run_engine("scalar", points)
+    result = {
+        "workload": {"style": "fig5", "quick": quick, "points": points},
+        "columnar": columnar,
+        "scalar": scalar,
+        "speedup": round(columnar["sessions_per_s"]
+                         / max(scalar["sessions_per_s"], 1), 2),
+        "speedup_per_mode": {
+            m: round(columnar["per_mode"][m]["sessions_per_s"]
+                     / max(scalar["per_mode"][m]["sessions_per_s"], 1), 2)
+            for m in columnar["per_mode"]},
+    }
+    # the engines must simulate the identical workload (seed-for-seed)
+    for m in columnar["per_mode"]:
+        c, s = columnar["per_mode"][m], scalar["per_mode"][m]
+        assert c["sessions"] == s["sessions"], (m, c, s)
+        assert c["rounds"] == s["rounds"], (m, c, s)
+        assert abs(c["carbon_total_kg"] - s["carbon_total_kg"]) \
+            <= 1e-9 * abs(s["carbon_total_kg"]), (m, c, s)
+    return result
+
+
+def check_regression(fresh: Dict, baseline: Dict) -> int:
+    """Exit status 1 if the columnar throughput regressed more than
+    REGRESSION_FACTOR against the recorded baseline for this workload."""
+    old = baseline.get("columnar", {}).get("sessions_per_s", 0)
+    new = fresh["columnar"]["sessions_per_s"]
+    if old and new * REGRESSION_FACTOR < old:
+        print(f"bench: REGRESSION — columnar engine {new:,} sessions/s vs "
+              f"baseline {old:,} (>{REGRESSION_FACTOR}x slower)")
+        return 1
+    print(f"bench: columnar {new:,} sessions/s vs baseline {old:,} — ok")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for CI (conc=200, capped rounds)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >2x regression vs committed baseline")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args()
+
+    # BENCH_runtime.json holds one section per workload ("full" / "quick")
+    # so CI quick runs never clobber the full-sweep baseline
+    book: Dict = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            book = json.load(f)
+    key = "quick" if args.quick else "full"
+    fresh = run_bench(args.quick)
+    status = check_regression(fresh, book.get(key, {})) if args.check else 0
+    if status == 0:
+        # a failed gate keeps the old baseline, so a rerun can't self-pass
+        book[key] = fresh
+        with open(args.out, "w") as f:
+            json.dump(book, f, indent=1)
+            f.write("\n")
+    print(json.dumps({k: fresh[k] for k in
+                      ("speedup", "speedup_per_mode")}, indent=1))
+    print(f"[{key}] columnar: {fresh['columnar']['sessions_per_s']:,} "
+          f"sessions/s | scalar: {fresh['scalar']['sessions_per_s']:,} "
+          f"sessions/s | wrote {os.path.relpath(args.out)}")
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,33 +1,48 @@
-"""Shared benchmark helpers: grid runner + CSV emission."""
+"""Shared benchmark helpers: parallel grid runner + CSV emission.
+
+Sweeps go through ``repro.api.sweep`` — build the specs with
+``make_spec``, run them all with ``run_points(points, workers=N)`` (a
+process-pool fan-out; ``workers=1`` for serial), and get back the same
+flat summary rows ``run_point`` produces."""
 from __future__ import annotations
 
 import csv
 import io
 import itertools
+import os
 import sys
 import time
-from typing import Dict, Iterable, List, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
-from repro.api import Environment, Experiment, ExperimentSpec, ModelRef
+from repro.api import (Environment, Experiment, ExperimentSpec, ModelRef,
+                       Result, sweep)
 from repro.configs import FederatedConfig, RunConfig, get_config
 
 CFG = get_config("paper-charlm")
 MODEL = ModelRef("paper-charlm")
 
+# benchmark-wide worker count: BENCH_WORKERS env var, default all cores
+WORKERS = int(os.environ.get("BENCH_WORKERS", "0")) or None
 
-def run_point(run: RunConfig | None = None,
+
+def make_spec(run: RunConfig | None = None,
               environment: Environment | None = None,
-              **fed_kw) -> Dict[str, float]:
+              **fed_kw) -> ExperimentSpec:
+    """One sweep point as a self-contained ExperimentSpec."""
     fed_kw.setdefault("aggregation_goal",
                       max(1, int(fed_kw.get("concurrency", 100) * 0.8)))
-    fed = FederatedConfig(**fed_kw)
-    run = run or RunConfig(target_perplexity=175.0)
-    spec = ExperimentSpec(model=MODEL, federated=fed, run=run,
-                          environment=environment or Environment(),
-                          learner="surrogate")
-    res = Experiment(spec).run()
+    return ExperimentSpec(
+        model=MODEL, federated=FederatedConfig(**fed_kw),
+        run=run or RunConfig(target_perplexity=175.0),
+        environment=environment or Environment(), learner="surrogate")
+
+
+def point_row(res: Result) -> Dict[str, float]:
+    """Flatten a Result into the benchmark CSV row schema."""
+    fed = res.spec.federated
     out = res.summary()
-    out.update(concurrency=fed.concurrency, mode=0.0 if fed.mode == "sync" else 1.0,
+    out.update(concurrency=fed.concurrency,
+               mode=0.0 if fed.mode == "sync" else 1.0,
                client_lr=fed.client_lr, server_lr=fed.server_lr,
                local_epochs=fed.local_epochs, batch=fed.client_batch_size)
     out["shares_client_compute"], out["shares_upload"], \
@@ -35,6 +50,22 @@ def run_point(run: RunConfig | None = None,
             res.carbon.shares()[k] for k in
             ("client_compute", "upload", "download", "server"))
     return out
+
+
+def run_point(run: RunConfig | None = None,
+              environment: Environment | None = None,
+              **fed_kw) -> Dict[str, float]:
+    return point_row(Experiment(make_spec(run, environment, **fed_kw)).run())
+
+
+def run_points(points: Sequence[Dict], run: RunConfig | None = None,
+               environment: Environment | None = None,
+               workers: Optional[int] = WORKERS) -> List[Dict[str, float]]:
+    """Run a list of sweep points (dicts of FederatedConfig overrides; a
+    point may carry its own "run"=RunConfig) across a process pool."""
+    specs = [make_spec(p.pop("run", None) or run, environment, **p)
+             for p in (dict(p) for p in points)]
+    return [point_row(r) for r in sweep(specs, workers=workers)]
 
 
 def grid(**axes: Sequence) -> Iterable[Dict]:

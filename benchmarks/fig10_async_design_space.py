@@ -5,16 +5,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import grid, run_point, write_csv
+from benchmarks.common import grid, run_points, write_csv
 from repro.core.predictor import fit_linear
 
 
 def run(fast: bool = False):
     concs = (100, 400) if fast else (100, 200, 400, 800)
     lrs = (0.03, 0.1) if fast else (0.01, 0.03, 0.1, 0.3)
-    rows = []
-    for g in grid(concurrency=concs, client_lr=lrs, local_epochs=(1, 5)):
-        rows.append(run_point(mode="async", **g))
+    rows = run_points([dict(mode="async", **g) for g in
+                       grid(concurrency=concs, client_lr=lrs,
+                            local_epochs=(1, 5))])
     slopes = {}
     for c in concs:
         pts = [r for r in rows if r["concurrency"] == c

@@ -9,16 +9,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import grid, run_point, write_csv
+from benchmarks.common import grid, run_points, write_csv
 from repro.core.predictor import fit_linear
 
 
 def run(fast: bool = False):
     concs = (50, 200) if fast else (50, 100, 200, 400)
     lrs = (0.03, 0.1) if fast else (0.01, 0.03, 0.1, 0.3)
-    rows = []
-    for g in grid(concurrency=concs, client_lr=lrs, local_epochs=(1, 3)):
-        rows.append(run_point(mode="sync", **g))
+    rows = run_points([dict(mode="sync", **g) for g in
+                       grid(concurrency=concs, client_lr=lrs,
+                            local_epochs=(1, 3))])
     # per-concurrency linearity of carbon vs rounds
     fits = {}
     for c in concs:

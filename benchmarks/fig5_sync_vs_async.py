@@ -4,13 +4,14 @@ the target faster (wall-clock) but emits MORE carbon; component shares
 ~46-50% client compute / 27-29% upload / 22-24% download / small server."""
 from __future__ import annotations
 
-from benchmarks.common import run_point, write_csv
+from benchmarks.common import run_points, write_csv
 
 
 def run(fast: bool = False):
     conc = 400 if fast else 1000
-    rows = [run_point(mode="sync", concurrency=conc, aggregation_goal=conc),
-            run_point(mode="async", concurrency=conc, aggregation_goal=conc)]
+    rows = run_points([
+        dict(mode="sync", concurrency=conc, aggregation_goal=conc),
+        dict(mode="async", concurrency=conc, aggregation_goal=conc)])
     sync, asyn = rows
     derived = {
         "async_faster": float(asyn["duration_h"] < sync["duration_h"]),

@@ -3,21 +3,19 @@ perplexity reached. Expected: async advances further early (lower ppl at 4h)
 at higher carbon; by 10h sync catches up to a similar perplexity."""
 from __future__ import annotations
 
-from benchmarks.common import run_point, write_csv
+from benchmarks.common import run_points, write_csv
 from repro.configs import RunConfig
 
 
 def run(fast: bool = False):
     conc = 400 if fast else 1000
-    rows = []
-    for hours in (4.0, 10.0):
-        for mode in ("sync", "async"):
-            run_cfg = RunConfig(target_perplexity=1.0,  # unreachable
-                                max_hours=hours)
-            r = run_point(run=run_cfg, mode=mode, concurrency=conc,
-                          aggregation_goal=conc)
-            r["fixed_hours"] = hours
-            rows.append(r)
+    points = [dict(run=RunConfig(target_perplexity=1.0,  # unreachable
+                                 max_hours=hours),
+                   mode=mode, concurrency=conc, aggregation_goal=conc)
+              for hours in (4.0, 10.0) for mode in ("sync", "async")]
+    rows = run_points(points)
+    for r, p in zip(rows, points):
+        r["fixed_hours"] = p["run"].max_hours
     by = {(r["fixed_hours"], r["mode"]): r for r in rows}
     derived = {
         "async_lower_ppl_at_4h": float(

@@ -4,12 +4,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import run_point, write_csv
+from benchmarks.common import run_points, write_csv
 
 
 def run(fast: bool = False):
     concs = (50, 200, 800) if fast else (50, 100, 200, 300, 800, 1000, 1300)
-    rows = [run_point(mode="sync", concurrency=c) for c in concs]
+    rows = run_points([dict(mode="sync", concurrency=c) for c in concs])
     carbons = [r["carbon_total_kg"] for r in rows]
     times = [r["duration_h"] for r in rows]
     # 10x concurrency -> how much resource vs speedup (paper: ~10x vs 1.5-2x)

@@ -5,18 +5,15 @@ concurrency). Fit per-component linear models and report R² (the paper
 reports high goodness-of-fit for download / upload / client compute)."""
 from __future__ import annotations
 
-from benchmarks.common import grid, run_point, write_csv
+from benchmarks.common import grid, run_points, write_csv
 from repro.core.predictor import fit_linear
 
 
 def run(fast: bool = False):
     concs = (50, 200, 400) if fast else (50, 100, 200, 400, 800)
     lrs = (0.05, 0.1) if fast else (0.03, 0.05, 0.1, 0.2)
-    rows = []
-    for mode in ("sync", "async"):
-        for g in grid(concurrency=concs, client_lr=lrs):
-            r = run_point(mode=mode, **g)
-            rows.append(r)
+    rows = run_points([dict(mode=mode, **g) for mode in ("sync", "async")
+                       for g in grid(concurrency=concs, client_lr=lrs)])
     derived = {}
     for mode, mcode in (("sync", 0.0), ("async", 1.0)):
         pts = [r for r in rows if r["mode"] == mcode and r["rounds"] > 1]

@@ -4,7 +4,7 @@ Target (paper, measured at scale): client+comm = ~97%, client compute
 ~46-50%, upload ~27-29%, download ~22-24%, server ~1-2%."""
 from __future__ import annotations
 
-from benchmarks.common import run_point, write_csv
+from benchmarks.common import run_points, write_csv
 
 PAPER = {"client_compute": (0.46, 0.50), "upload": (0.27, 0.29),
          "download": (0.22, 0.24), "server": (0.01, 0.02)}
@@ -13,10 +13,9 @@ SLACK = 0.07   # simulated fleet tolerance
 
 def run(fast: bool = False):
     conc = 400 if fast else 1000
-    rows = []
-    for mode in ("sync", "async"):
-        r = run_point(mode=mode, concurrency=conc, aggregation_goal=conc)
-        rows.append(r)
+    rows = run_points([dict(mode=mode, concurrency=conc,
+                            aggregation_goal=conc)
+                       for mode in ("sync", "async")])
     derived = {}
     for r, mode in zip(rows, ("sync", "async")):
         for comp, (lo, hi) in PAPER.items():

@@ -4,13 +4,14 @@ c=0.6 gives 1.82x. We MEASURE the factor end-to-end through the runtime
 (bytes on the wire + on-device (de)quant overhead + unchanged convergence)."""
 from __future__ import annotations
 
-from benchmarks.common import run_point, write_csv
+from benchmarks.common import run_points, write_csv
 
 
 def run(fast: bool = False):
     conc = 200 if fast else 500
-    base = run_point(mode="sync", concurrency=conc)
-    comp = run_point(mode="sync", concurrency=conc, compression="int8")
+    base, comp = run_points([
+        dict(mode="sync", concurrency=conc),
+        dict(mode="sync", concurrency=conc, compression="int8")])
     c = base["shares_upload"] + base["shares_download"]
     analytic = 1.0 / ((1.0 - c) + c / 4.0)
     measured = base["carbon_total_kg"] / comp["carbon_total_kg"]

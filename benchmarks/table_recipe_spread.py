@@ -3,7 +3,7 @@
 perplexity, report max/min carbon spread + the Green-FL recipe winner."""
 from __future__ import annotations
 
-from benchmarks.common import grid, run_point, write_csv
+from benchmarks.common import grid, run_points, write_csv
 
 
 def run(fast: bool = False):
@@ -15,9 +15,7 @@ def run(fast: bool = False):
                      client_lr=(0.003, 0.01, 0.1, 0.3),
                      local_epochs=(1, 3, 10, 20),
                      client_batch_size=(8, 16))
-    rows = []
-    for g in space:
-        rows.append(run_point(mode="sync", **g))
+    rows = run_points([dict(mode="sync", **g) for g in space])
     reached = [r for r in rows if r["reached_target"] > 0]
     derived = {"n_reached": float(len(reached))}
     if len(reached) >= 2:

@@ -19,7 +19,7 @@ for mode in ("sync", "async"):
         mode=mode, concurrency=1000, aggregation_goal=1000))
     res = Experiment(spec).run()
     print(f"{mode:6s} {res.rounds:7d} {res.duration_h:7.1f} "
-          f"{res.carbon.total_kg:8.2f} {len(res.log.sessions):9d} "
+          f"{res.carbon.total_kg:8.2f} {res.log.n_sessions:9d} "
           f"{res.log.mean_staleness():9.2f}")
 
 print("\npaper finding: async advances the model faster (stragglers never "

@@ -34,6 +34,6 @@ print(f"final perplexity:   {result.final_perplexity:8.1f} "
 
 # 4. the carbon bill, by component (paper Fig. 5)
 print(f"\ncarbon: {result.carbon.total_kg * 1000:.3f} g CO2e "
-      f"across {len(result.log.sessions)} client sessions")
+      f"across {result.log.n_sessions} client sessions")
 for k, v in result.carbon.shares().items():
     print(f"  {k:16s} {v * 100:5.1f}%")

@@ -1,21 +1,29 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 test suite + an ExperimentSpec JSON dry-run end-to-end.
+# CI smoke: tier-1 test suite + an ExperimentSpec JSON dry-run end-to-end
+# + the simulation-engine runtime benchmark.
 #
 #   bash scripts/smoke.sh            # from the repo root
 #
 # Step 2 loads the committed spec artifact, runs it, then re-serializes,
 # reloads and re-runs it, asserting both runs produce the identical
 # Result.summary() — the repro.api reproducibility contract.
+#
+# Step 3 runs the quick fig5-style engine benchmark (columnar vs scalar),
+# refreshes BENCH_runtime.json, and FAILS if the columnar engine's quick
+# sessions/sec regressed more than 2x against the recorded baseline.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== smoke 1/2: tier-1 test suite =="
+echo "== smoke 1/3: tier-1 test suite =="
 python -m pytest -x -q
 
-echo "== smoke 2/2: ExperimentSpec JSON dry-run (with round-trip check) =="
+echo "== smoke 2/3: ExperimentSpec JSON dry-run (with round-trip check) =="
 python -m repro.api examples/specs/charlm_sync_small.json \
     --roundtrip-check --quiet
+
+echo "== smoke 3/3: runtime benchmark (quick, 2x regression gate) =="
+python benchmarks/bench_runtime.py --quick --check
 
 echo "smoke OK"

@@ -15,11 +15,12 @@ come from the spec's `Environment` rather than module defaults.
 from repro.api.environment import Environment
 from repro.api.experiment import Experiment, Result, run_spec
 from repro.api.spec import ExperimentSpec, ModelRef
+from repro.api.sweep import sweep
 from repro.federated.runtime import (STRATEGIES, RoundEvent, Strategy,
                                      get_strategy, register_strategy)
 
 __all__ = [
     "Environment", "Experiment", "ExperimentSpec", "ModelRef", "Result",
     "RoundEvent", "STRATEGIES", "Strategy", "get_strategy",
-    "register_strategy", "run_spec",
+    "register_strategy", "run_spec", "sweep",
 ]

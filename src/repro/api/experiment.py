@@ -65,7 +65,7 @@ class Result:
             "perplexity": self.final_perplexity,
             "carbon_total_kg": self.carbon.total_kg,
             **{k: v for k, v in self.carbon.as_dict().items()},
-            "sessions": float(len(self.log.sessions)),
+            "sessions": float(self.log.n_sessions),
         }
 
     def to_dict(self) -> dict:

@@ -1,0 +1,101 @@
+"""`repro.api.sweep` — run independent ExperimentSpecs across a process
+pool.
+
+    results = sweep([spec_a, spec_b, ...], workers=8)
+
+Every spec is self-contained and JSON-serializable (that was the point of
+the `repro.api` layer), so a sweep is embarrassingly parallel: each worker
+process runs `Experiment(spec).run()` and ships the whole `Result`
+(columnar TaskLog included — NumPy columns pickle cheaply) back to the
+parent. Results come back in spec order; `on_result` streams them to the
+caller in completion order for progress display.
+
+`workers=None` picks min(n_specs, cpu_count); `workers<=1` (or a single
+spec) runs serially in-process — no pool, no pickling — which is also the
+fallback when a pool cannot be spawned (restricted environments).
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import BrokenExecutor
+from typing import Callable, List, Optional, Sequence
+
+from repro.api.experiment import Result, run_spec
+from repro.api.spec import ExperimentSpec
+
+ResultCallback = Callable[[int, Result], None]
+
+
+class _TaskFailed(Exception):
+    """Wraps an exception raised by a spec's own run inside a pool worker,
+    so infrastructure failures (pool can't start) stay distinguishable
+    from experiment failures (which must propagate as-is, not trigger the
+    serial fallback)."""
+
+    def __init__(self, error: BaseException):
+        super().__init__(repr(error))
+        self.error = error
+
+
+def _run_spec_safe(spec: ExperimentSpec):
+    try:
+        return ("ok", run_spec(spec))
+    except Exception as e:                       # noqa: BLE001
+        return ("err", e)
+
+
+def _n_workers(n_specs: int, workers: Optional[int]) -> int:
+    if workers is None:
+        workers = os.cpu_count() or 1
+    return max(1, min(int(workers), n_specs))
+
+
+def sweep(specs: Sequence[ExperimentSpec], workers: Optional[int] = None,
+          on_result: Optional[ResultCallback] = None) -> List[Result]:
+    """Run every spec; return Results in spec order.
+
+    on_result(index, result) fires in completion order as workers finish
+    (or after each run when serial)."""
+    specs = list(specs)
+    if not specs:
+        return []
+    results: List[Optional[Result]] = [None] * len(specs)
+    n = _n_workers(len(specs), workers)
+    if n > 1 and len(specs) > 1:
+        try:
+            _sweep_pool(specs, n, results, on_result)
+        except _TaskFailed as tf:
+            raise tf.error                # an experiment itself failed
+        except (ImportError, OSError, PermissionError, BrokenExecutor) as e:
+            # restricted environments (no /dev/shm, no fork / broken pool)
+            # fall back to serial — only for the specs the pool never
+            # finished, so on_result fires exactly once per spec
+            import warnings
+            done = sum(r is not None for r in results)
+            warnings.warn(
+                f"sweep: process pool unavailable ({e!r}); running the "
+                f"remaining {len(specs) - done}/{len(specs)} specs serially",
+                RuntimeWarning, stacklevel=2)
+    for i, spec in enumerate(specs):
+        if results[i] is None:
+            results[i] = run_spec(spec)
+            if on_result is not None:
+                on_result(i, results[i])
+    return results  # type: ignore[return-value]
+
+
+def _sweep_pool(specs: List[ExperimentSpec], n: int,
+                results: List[Optional[Result]],
+                on_result: Optional[ResultCallback]) -> None:
+    from concurrent.futures import ProcessPoolExecutor, as_completed
+    with ProcessPoolExecutor(max_workers=n) as pool:
+        futures = {pool.submit(_run_spec_safe, spec): i
+                   for i, spec in enumerate(specs)}
+        for fut in as_completed(futures):
+            i = futures[fut]
+            status, payload = fut.result()
+            if status == "err":
+                raise _TaskFailed(payload)
+            results[i] = payload
+            if on_result is not None:
+                on_result(i, results[i])

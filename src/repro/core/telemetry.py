@@ -1,23 +1,35 @@
-"""The client-runtime "logger" (paper §4.1) as a data model.
+"""The client-runtime "logger" (paper §4.1) as a columnar data model.
 
-Each FL session produces a ``ClientSession`` record with exactly the vitals
-the paper's production logger captures: device model, connecting country,
-download/compute/upload durations, bytes moved, and the outcome (completed,
-dropped mid-round, or timed out at 4 minutes). Dropped/timed-out clients
-still burned energy — the estimator charges them (paper: "our methodology
-also accounts for the clients that drop out or time out").
+Each FL session produces the vitals the paper's production logger captures:
+device model, connecting country, download/compute/upload durations, bytes
+moved, and the outcome (completed, dropped mid-round, or timed out at 4
+minutes). Dropped/timed-out clients still burned energy — the estimator
+charges them (paper: "our methodology also accounts for the clients that
+drop out or time out").
+
+Storage is struct-of-arrays: strategies append one ``SessionBatch`` (a
+bundle of NumPy columns plus small device/country vocabularies) per round
+or per flush, and the estimator reduces whole columns at once. The
+row-oriented ``ClientSession`` dataclass survives as a compatibility view —
+``TaskLog.sessions`` lazily materialises it on demand — so telemetry
+consumers that want objects still get them, while the hot path never
+allocates per-session Python objects.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+OUTCOMES: Tuple[str, ...] = ("completed", "dropped", "timeout")
+OUTCOME_CODE: Dict[str, int] = {name: i for i, name in enumerate(OUTCOMES)}
 
 
 @dataclass(frozen=True)
 class ClientSession:
+    """Row-oriented compatibility view of one session (see module doc)."""
+
     client_id: int
     round_idx: int               # sync round (async: server version at start)
     device: str                  # DeviceProfile.name
@@ -37,18 +49,154 @@ class ClientSession:
         return self.outcome == "completed"
 
 
-@dataclass
-class TaskLog:
-    """Accumulates everything the carbon estimator needs for one FL task."""
+_FLOAT_COLS = ("download_s", "compute_s", "upload_s", "bytes_down",
+               "bytes_up", "start_t", "end_t")
 
-    sessions: List[ClientSession] = field(default_factory=list)
-    rounds: int = 0                       # server model updates so far
-    duration_s: float = 0.0               # task wall-clock so far
-    server_busy_s: float = 0.0            # == duration (servers stay up)
-    eval_history: List[Dict] = field(default_factory=list)
+
+@dataclass(frozen=True)
+class SessionBatch:
+    """A cohort of sessions as columns. ``device_names``/``country_names``
+    are per-batch vocabularies indexed by ``device_idx``/``country_idx``
+    (strings stay out of the big arrays)."""
+
+    device_names: Tuple[str, ...]
+    country_names: Tuple[str, ...]
+    client_id: np.ndarray        # int64
+    round_idx: np.ndarray        # int64
+    device_idx: np.ndarray       # int32 -> device_names
+    country_idx: np.ndarray      # int32 -> country_names
+    download_s: np.ndarray       # float64, seconds
+    compute_s: np.ndarray
+    upload_s: np.ndarray
+    bytes_down: np.ndarray       # float64, bytes charged (prorated on drop)
+    bytes_up: np.ndarray
+    start_t: np.ndarray          # task clock, seconds
+    end_t: np.ndarray
+    outcome: np.ndarray          # int8 -> OUTCOMES
+    staleness: np.ndarray        # int32
+
+    def __len__(self) -> int:
+        return int(self.client_id.shape[0])
+
+    @property
+    def completed_mask(self) -> np.ndarray:
+        return self.outcome == OUTCOME_CODE["completed"]
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def empty(cls) -> "SessionBatch":
+        z = np.zeros(0, np.float64)
+        return cls((), (), np.zeros(0, np.int64), np.zeros(0, np.int64),
+                   np.zeros(0, np.int32), np.zeros(0, np.int32),
+                   z, z.copy(), z.copy(), z.copy(), z.copy(), z.copy(),
+                   z.copy(), np.zeros(0, np.int8), np.zeros(0, np.int32))
+
+    @classmethod
+    def from_sessions(cls, sessions: Sequence[ClientSession]) -> "SessionBatch":
+        if not sessions:
+            return cls.empty()
+        dev_vocab: Dict[str, int] = {}
+        ctry_vocab: Dict[str, int] = {}
+        dev_idx = np.fromiter(
+            (dev_vocab.setdefault(s.device, len(dev_vocab)) for s in sessions),
+            np.int32, len(sessions))
+        ctry_idx = np.fromiter(
+            (ctry_vocab.setdefault(s.country, len(ctry_vocab))
+             for s in sessions), np.int32, len(sessions))
+        cols = {c: np.asarray([getattr(s, c) for s in sessions], np.float64)
+                for c in _FLOAT_COLS}
+        return cls(
+            tuple(dev_vocab), tuple(ctry_vocab),
+            np.asarray([s.client_id for s in sessions], np.int64),
+            np.asarray([s.round_idx for s in sessions], np.int64),
+            dev_idx, ctry_idx,
+            outcome=np.asarray([OUTCOME_CODE[s.outcome] for s in sessions],
+                               np.int8),
+            staleness=np.asarray([s.staleness for s in sessions], np.int32),
+            **cols)
+
+    @classmethod
+    def concat(cls, batches: Sequence["SessionBatch"]) -> "SessionBatch":
+        batches = [b for b in batches if len(b)]
+        if not batches:
+            return cls.empty()
+        if len(batches) == 1:
+            return batches[0]
+        dev_vocab: Dict[str, int] = {}
+        ctry_vocab: Dict[str, int] = {}
+        dev_parts, ctry_parts = [], []
+        for b in batches:
+            dmap = np.asarray([dev_vocab.setdefault(n, len(dev_vocab))
+                               for n in b.device_names], np.int32)
+            cmap = np.asarray([ctry_vocab.setdefault(n, len(ctry_vocab))
+                               for n in b.country_names], np.int32)
+            dev_parts.append(dmap[b.device_idx] if len(dmap)
+                             else b.device_idx)
+            ctry_parts.append(cmap[b.country_idx] if len(cmap)
+                              else b.country_idx)
+        cat = np.concatenate
+        return cls(
+            tuple(dev_vocab), tuple(ctry_vocab),
+            cat([b.client_id for b in batches]),
+            cat([b.round_idx for b in batches]),
+            cat(dev_parts), cat(ctry_parts),
+            outcome=cat([b.outcome for b in batches]),
+            staleness=cat([b.staleness for b in batches]),
+            **{c: cat([getattr(b, c) for b in batches])
+               for c in _FLOAT_COLS})
+
+    # ----------------------------------------------------------------- view
+    def to_sessions(self) -> List[ClientSession]:
+        dn, cn = self.device_names, self.country_names
+        return [ClientSession(
+            client_id=int(self.client_id[i]),
+            round_idx=int(self.round_idx[i]),
+            device=dn[self.device_idx[i]],
+            country=cn[self.country_idx[i]],
+            download_s=float(self.download_s[i]),
+            compute_s=float(self.compute_s[i]),
+            upload_s=float(self.upload_s[i]),
+            bytes_down=float(self.bytes_down[i]),
+            bytes_up=float(self.bytes_up[i]),
+            start_t=float(self.start_t[i]),
+            end_t=float(self.end_t[i]),
+            outcome=OUTCOMES[self.outcome[i]],
+            staleness=int(self.staleness[i])) for i in range(len(self))]
+
+
+class TaskLog:
+    """Accumulates everything the carbon estimator needs for one FL task.
+
+    Sessions arrive as ``SessionBatch`` chunks (``log_batch``) on the fast
+    path, or as individual ``ClientSession`` objects (``log_session``) from
+    legacy callers; both land in the same columnar store. ``columns()``
+    consolidates all chunks into one batch (cached until the next append);
+    ``sessions`` is the lazy row-oriented compatibility view."""
+
+    def __init__(self):
+        self._batches: List[SessionBatch] = []
+        self._pending: List[ClientSession] = []
+        self._n: int = 0
+        self._columns: Optional[SessionBatch] = None
+        self._sessions: Optional[Tuple[ClientSession, ...]] = None
+        self.rounds: int = 0                  # server model updates so far
+        self.duration_s: float = 0.0          # task wall-clock so far
+        self.server_busy_s: float = 0.0       # == duration (servers stay up)
+        self.eval_history: List[Dict] = []
+
+    # ------------------------------------------------------------ appenders
+    def log_batch(self, batch: SessionBatch) -> None:
+        if self._pending:
+            self._batches.append(SessionBatch.from_sessions(self._pending))
+            self._pending = []
+        self._batches.append(batch)
+        self._n += len(batch)
+        self._columns = self._sessions = None
 
     def log_session(self, s: ClientSession) -> None:
-        self.sessions.append(s)
+        self._pending.append(s)
+        self._n += 1
+        self._columns = self._sessions = None
 
     def log_round(self, t: float) -> None:
         self.rounds += 1
@@ -59,22 +207,44 @@ class TaskLog:
         self.eval_history.append(dict(t=t, round=round_idx,
                                       perplexity=perplexity, smoothed=smoothed))
 
+    # ---------------------------------------------------------------- views
+    @property
+    def n_sessions(self) -> int:
+        return self._n
+
+    def columns(self) -> SessionBatch:
+        """All sessions consolidated into one SessionBatch (cached)."""
+        if self._columns is None:
+            parts = list(self._batches)
+            if self._pending:
+                parts.append(SessionBatch.from_sessions(self._pending))
+            self._columns = SessionBatch.concat(parts)
+        return self._columns
+
+    @property
+    def sessions(self) -> Tuple[ClientSession, ...]:
+        """Row-oriented compatibility view (materialised lazily). A tuple,
+        not a list: appending to the view cannot reach the columnar store,
+        so it fails loudly instead of silently dropping sessions — append
+        through ``log_session``/``log_batch``."""
+        if self._sessions is None:
+            self._sessions = tuple(self.columns().to_sessions())
+        return self._sessions
+
     # ------------------------------------------------------------ summaries
     def completed_sessions(self) -> int:
-        return sum(1 for s in self.sessions if s.completed)
+        return int(np.count_nonzero(self.columns().completed_mask))
 
     def participation(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for s in self.sessions:
-            out[s.outcome] = out.get(s.outcome, 0) + 1
-        return out
+        counts = np.bincount(self.columns().outcome, minlength=len(OUTCOMES))
+        return {OUTCOMES[i]: int(n) for i, n in enumerate(counts) if n}
 
     def total_bytes(self) -> Dict[str, float]:
-        return {
-            "up": float(sum(s.bytes_up for s in self.sessions)),
-            "down": float(sum(s.bytes_down for s in self.sessions)),
-        }
+        b = self.columns()
+        return {"up": float(b.bytes_up.sum()),
+                "down": float(b.bytes_down.sum())}
 
     def mean_staleness(self) -> float:
-        ss = [s.staleness for s in self.sessions if s.completed]
-        return float(np.mean(ss)) if ss else 0.0
+        b = self.columns()
+        ok = b.completed_mask
+        return float(b.staleness[ok].mean()) if ok.any() else 0.0

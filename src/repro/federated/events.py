@@ -6,30 +6,41 @@ selected client we draw a device (fleet popularity weights) and a country
 bytes, client data volume and device throughput, then resolve the outcome
 (completed / dropped mid-session / 4-minute timeout). All durations carry a
 lognormal jitter (thermal throttling, background load, link variance).
+
+The engine is columnar: ``plan_batch``/``resolve_batch`` plan and resolve a
+whole cohort in a handful of NumPy ops (array-vectorized splitmix64 counter
+randomness, Box–Muller lognormal jitter, inverse-CDF Lomax sampling) and
+return a ``PlanBatch``/``SessionBatch`` of columns. The scalar ``plan``/
+``resolve`` are thin wrappers over batch size 1; ``plan_scalar``/
+``resolve_scalar`` keep the original pure-Python path as the reference
+implementation for equivalence tests and the runtime benchmark baseline.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Mapping, Optional, Sequence, Tuple
+from typing import Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig
 from repro.core.profiles import (COUNTRY_MIX, DOWNLOAD_BPS, FLEET, UPLOAD_BPS,
                                  DeviceProfile)
+from repro.core.telemetry import OUTCOME_CODE, SessionBatch
 from repro.data.synthetic import client_num_samples
 from repro.kernels.int8_quant.ops import wire_bytes
 
 _JITTER_SIGMA = 0.35
 _M64 = (1 << 64) - 1
+_U64 = np.uint64
+_GOLDEN = 0x9E3779B97F4A7C15
 
 
 def _splitmix64(x: int) -> int:
     """splitmix64 on python ints — cheap deterministic per-session
     randomness (np.random.default_rng construction is ~50us; this is <1us)."""
-    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = (x + _GOLDEN) & _M64
     x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
     x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
     return x ^ (x >> 31)
@@ -41,8 +52,30 @@ _INV53 = 1.0 / float(1 << 53)
 def _uniforms(seed: int, client_id: int, round_idx: int, n: int):
     base = (((seed * 1_000_003 + round_idx) & 0xFFFFFFFF) * 2_654_435_761
             + (client_id & _M64) * 97) & _M64
-    return [(_splitmix64((base + i * 0x9E3779B97F4A7C15) & _M64) >> 11)
+    return [(_splitmix64((base + i * _GOLDEN) & _M64) >> 11)
             * _INV53 for i in range(n)]
+
+
+def _splitmix64_arr(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 on uint64 arrays (wrapping semantics match the
+    masked python-int version bit for bit)."""
+    x = x + _U64(_GOLDEN)
+    x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+    return x ^ (x >> _U64(31))
+
+
+def _uniforms_batch(seed: int, client_ids: np.ndarray, round_idx: int,
+                    n: int) -> np.ndarray:
+    """(B, n) uniforms in [0,1); column i equals the scalar ``_uniforms``
+    draw i for that (seed, client_id, round_idx) exactly."""
+    cid = np.asarray(client_ids).astype(np.uint64)
+    base0 = _U64((seed * 1_000_003 + round_idx) & 0xFFFFFFFF)
+    with np.errstate(over="ignore"):
+        base = base0 * _U64(2_654_435_761) + cid * _U64(97)
+        lanes = np.arange(n, dtype=np.uint64) * _U64(_GOLDEN)
+        vals = _splitmix64_arr(base[:, None] + lanes[None, :])
+    return (vals >> _U64(11)).astype(np.float64) * _INV53
 
 
 def _lognormal(u1: float, u2: float, sigma: float) -> float:
@@ -51,11 +84,24 @@ def _lognormal(u1: float, u2: float, sigma: float) -> float:
     return math.exp(sigma * r * math.cos(2.0 * math.pi * u2))
 
 
+def _lognormal_arr(u1: np.ndarray, u2: np.ndarray,
+                   sigma: float) -> np.ndarray:
+    r = np.sqrt(-2.0 * np.log(np.maximum(u1, 1e-12)))
+    return np.exp(sigma * r * np.cos(2.0 * np.pi * u2))
+
+
 def _pareto_samples(u: float, mean: float = 34.0, shape: float = 1.8) -> int:
     # inverse-CDF Lomax with E = scale/(shape-1)
     scale = mean * (shape - 1.0)
     n = int(scale * ((max(1.0 - u, 1e-12)) ** (-1.0 / shape) - 1.0)) + 1
     return max(2, min(n, 4096))
+
+
+def _pareto_samples_arr(u: np.ndarray, mean: float = 34.0,
+                        shape: float = 1.8) -> np.ndarray:
+    scale = mean * (shape - 1.0)
+    x = scale * (np.maximum(1.0 - u, 1e-12) ** (-1.0 / shape) - 1.0)
+    return np.clip(x.astype(np.int64) + 1, 2, 4096)
 
 
 @dataclass(frozen=True)
@@ -70,6 +116,24 @@ class SessionPlan:
     bytes_down: float
     bytes_up: float
     n_examples: int
+
+
+@dataclass(frozen=True)
+class PlanBatch:
+    """A planned cohort as columns (`device_idx` indexes the sampler's
+    fleet, `country_idx` its country list)."""
+    client_ids: np.ndarray       # int64
+    device_idx: np.ndarray       # int32
+    country_idx: np.ndarray      # int32
+    download_s: np.ndarray       # float64
+    compute_s: np.ndarray
+    upload_s: np.ndarray
+    bytes_down: np.ndarray
+    bytes_up: np.ndarray
+    n_examples: np.ndarray       # int64
+
+    def __len__(self) -> int:
+        return int(self.client_ids.shape[0])
 
 
 class SessionSampler:
@@ -105,8 +169,138 @@ class SessionSampler:
         self._ccum = np.cumsum(cw / cw.sum())
         dw = np.asarray([p.weight for p in fleet], np.float64)
         self._dcum = np.cumsum(dw / dw.sum())
+        self._gflops = np.asarray([p.train_gflops for p in fleet], np.float64)
+        self.device_names: Tuple[str, ...] = tuple(p.name for p in fleet)
+        self.country_names: Tuple[str, ...] = tuple(self._countries)
 
+    # ------------------------------------------------------------ columnar
+    def plan_batch(self, client_ids: Union[np.ndarray, Sequence[int]],
+                   round_idx: int) -> PlanBatch:
+        """Plan a whole cohort in a handful of NumPy ops. Column i of the
+        uniform block matches scalar draw i, so this reproduces
+        ``plan_scalar`` per client bit-for-bit (modulo libm ulps)."""
+        ids = np.asarray(client_ids, np.int64)
+        u = _uniforms_batch(self.fed.seed, ids, round_idx, 8)
+        dev = np.searchsorted(self._dcum, u[:, 0]).astype(np.int32)
+        ctry = np.searchsorted(self._ccum, u[:, 1]).astype(np.int32)
+        n_ex = _pareto_samples_arr(
+            _uniforms_batch(self.fed.seed, ids, 0, 1)[:, 0])
+        tokens = n_ex * (self.seq_len * self.fed.local_epochs)
+        compute_s = (tokens * self.flops_per_token * self.compute_overhead
+                     / (self._gflops[dev] * 1e9)) \
+            * _lognormal_arr(u[:, 2], u[:, 3], _JITTER_SIGMA)
+        download_s = 8.0 * self.bytes_down / self.download_bps \
+            * _lognormal_arr(u[:, 4], u[:, 5], _JITTER_SIGMA)
+        upload_s = 8.0 * self.bytes_up / self.upload_bps \
+            * _lognormal_arr(u[:, 6], u[:, 7], _JITTER_SIGMA)
+        n = len(ids)
+        return PlanBatch(ids, dev, ctry, download_s, compute_s, upload_s,
+                         np.full(n, self.bytes_down),
+                         np.full(n, self.bytes_up), n_ex)
+
+    def resolve_batch(self, pb: PlanBatch, round_idx: int,
+                      start_t: Union[float, np.ndarray],
+                      deadline: Optional[float] = None
+                      ) -> Tuple[SessionBatch, np.ndarray]:
+        """Resolve a planned cohort's outcomes; returns ``(batch, ok)``
+        where ``ok[i]`` is True iff session i completed (contributed).
+
+        start_t may be a scalar or a per-client array of task-clock starts;
+        deadline is the absolute task-clock time after which the round no
+        longer accepts results (sync round close / over-selection cancel).
+        Downlink bytes are prorated by the completed download fraction so a
+        client dropped mid-download isn't charged the full payload."""
+        fed = self.fed
+        n = len(pb)
+        uu = _uniforms_batch(fed.seed, pb.client_ids, round_idx + 1_000_000, 2)
+        full_d, full_c, full_u = pb.download_s, pb.compute_s, pb.upload_s
+        start = np.broadcast_to(np.asarray(start_t, np.float64), (n,))
+        full = full_d + full_c + full_u
+        # same association order as the scalar reference, so the session
+        # whose end DEFINES the round deadline compares equal (not late)
+        end_full = start + full_d + full_c + full_u
+
+        dropped = uu[:, 0] < fed.dropout_rate
+        timeout = ~dropped & (full_c > fed.client_timeout_s)
+        if deadline is not None:
+            late = ~dropped & ~timeout & (end_full > deadline)
+        else:
+            late = np.zeros(n, bool)
+        # burn budget for the cut-short sessions: dropout picks a random
+        # stop point, a deadline cut burns until the round closes
+        burn = uu[:, 1] * full
+        if deadline is not None:
+            burn = np.where(late, np.maximum(0.0, deadline - start), burn)
+        cut = dropped | late
+        d = np.where(cut, np.minimum(full_d, burn), full_d)
+        c = np.where(cut, np.minimum(full_c,
+                                     np.maximum(0.0, burn - full_d)),
+                     full_c)
+        u = np.where(cut, np.minimum(full_u,
+                                     np.maximum(0.0, burn - full_d - full_c)),
+                     full_u)
+        # the 4-minute training timeout truncates compute and skips upload
+        c = np.where(timeout, fed.client_timeout_s, c)
+        u = np.where(timeout, 0.0, u)
+        end = np.where(dropped, start + burn, end_full)
+        end = np.where(timeout, start + full_d + fed.client_timeout_s, end)
+        if deadline is not None:
+            end = np.where(late, deadline, end)
+
+        outcome = np.zeros(n, np.int8)  # completed
+        outcome[cut] = OUTCOME_CODE["dropped"]
+        outcome[timeout] = OUTCOME_CODE["timeout"]
+        ok = outcome == OUTCOME_CODE["completed"]
+        frac_down = np.divide(d, full_d, out=np.zeros(n), where=full_d > 0)
+        batch = SessionBatch(
+            device_names=self.device_names,
+            country_names=self.country_names,
+            client_id=pb.client_ids,
+            round_idx=np.full(n, round_idx, np.int64),
+            device_idx=pb.device_idx, country_idx=pb.country_idx,
+            download_s=d, compute_s=c, upload_s=u,
+            bytes_down=pb.bytes_down * np.minimum(1.0, frac_down),
+            bytes_up=np.where(ok, pb.bytes_up, 0.0),
+            start_t=np.asarray(start, np.float64).copy(),
+            end_t=end, outcome=outcome,
+            staleness=np.zeros(n, np.int32))
+        return batch, ok
+
+    # ------------------------------------------------- scalar (batch of 1)
     def plan(self, client_id: int, round_idx: int) -> SessionPlan:
+        pb = self.plan_batch(np.asarray([client_id], np.int64), round_idx)
+        return SessionPlan(client_id, self.fleet[int(pb.device_idx[0])],
+                           self._countries[int(pb.country_idx[0])],
+                           float(pb.download_s[0]), float(pb.compute_s[0]),
+                           float(pb.upload_s[0]), self.bytes_down,
+                           self.bytes_up, int(pb.n_examples[0]))
+
+    def resolve(self, plan: SessionPlan, round_idx: int, start_t: float,
+                deadline: Optional[float] = None
+                ) -> Tuple[dict, bool]:
+        """Resolve the outcome; returns (session_kwargs, contributed)."""
+        pb = PlanBatch(np.asarray([plan.client_id], np.int64),
+                       np.asarray([self.fleet.index(plan.device)], np.int32),
+                       np.asarray([self._countries.index(plan.country)],
+                                  np.int32),
+                       np.asarray([plan.download_s]),
+                       np.asarray([plan.compute_s]),
+                       np.asarray([plan.upload_s]),
+                       np.asarray([plan.bytes_down]),
+                       np.asarray([plan.bytes_up]),
+                       np.asarray([plan.n_examples], np.int64))
+        b, ok = self.resolve_batch(pb, round_idx, start_t, deadline)
+        s = b.to_sessions()[0]
+        kw = {f: getattr(s, f) for f in
+              ("client_id", "round_idx", "device", "country", "download_s",
+               "compute_s", "upload_s", "bytes_down", "bytes_up", "start_t",
+               "end_t", "outcome")}
+        return kw, bool(ok[0])
+
+    # ------------------------------------------------- reference (scalar)
+    def plan_scalar(self, client_id: int, round_idx: int) -> SessionPlan:
+        """Original pure-Python planner — reference implementation for
+        equivalence tests and the scalar-engine benchmark baseline."""
         u = _uniforms(self.fed.seed, client_id, round_idx, 10)
         device = self.fleet[int(np.searchsorted(self._dcum, u[0]))]
         country = self._countries[int(np.searchsorted(self._ccum, u[1]))]
@@ -123,13 +317,10 @@ class SessionSampler:
         return SessionPlan(client_id, device, country, download_s, compute_s,
                            upload_s, self.bytes_down, self.bytes_up, n_ex)
 
-    def resolve(self, plan: SessionPlan, round_idx: int, start_t: float,
-                deadline: Optional[float] = None
-                ) -> Tuple[dict, bool]:
-        """Resolve the outcome; returns (session_kwargs, contributed).
-
-        deadline: absolute task-clock time after which the round no longer
-        accepts results (sync FL round close / over-selection cancel)."""
+    def resolve_scalar(self, plan: SessionPlan, round_idx: int,
+                       start_t: float, deadline: Optional[float] = None
+                       ) -> Tuple[dict, bool]:
+        """Original pure-Python outcome resolution (see plan_scalar)."""
         fed = self.fed
         uu = _uniforms(fed.seed, plan.client_id, round_idx + 1_000_000, 2)
         full_d, full_c, full_u = plan.download_s, plan.compute_s, plan.upload_s
@@ -160,10 +351,11 @@ class SessionSampler:
             end = deadline
             outcome = "dropped"
 
+        frac_down = d / full_d if full_d > 0 else 0.0
         kw = dict(client_id=plan.client_id, round_idx=round_idx,
                   device=plan.device.name, country=plan.country,
                   download_s=d, compute_s=c, upload_s=u,
-                  bytes_down=plan.bytes_down if d > 0 else 0.0,
+                  bytes_down=plan.bytes_down * min(1.0, frac_down),
                   bytes_up=plan.bytes_up if outcome == "completed" else 0.0,
                   start_t=start_t, end_t=end, outcome=outcome)
         return kw, outcome == "completed"

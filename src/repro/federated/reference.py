@@ -1,0 +1,147 @@
+"""Scalar reference engine — the pre-columnar event loops, kept verbatim.
+
+The production strategies in ``repro.federated.runtime`` are vectorized
+end-to-end (``plan_batch``/``resolve_batch``/``SessionBatch``). This module
+preserves the original per-session Python loops, driven by the sampler's
+``plan_scalar``/``resolve_scalar`` and the estimator's ``estimate_scalar``,
+for two purposes only:
+
+* seed-for-seed equivalence tests (``tests/test_columnar.py``) prove the
+  columnar sync engine reproduces this loop's TaskLog stats and
+  CarbonBreakdown;
+* ``benchmarks/bench_runtime.py`` measures sessions/sec against it, so the
+  vectorization speedup is tracked across PRs.
+
+Do not grow features here — it intentionally trails the real engine except
+where equivalence demands parity (cohort selection, byte proration).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
+from repro.core.estimator import CarbonEstimator
+from repro.core.telemetry import ClientSession, TaskLog
+from repro.federated.events import SessionSampler
+from repro.federated.runtime import (_POPULATION, _SERVER_AGG_S, TaskResult,
+                                     _select_cohort, _Stopper)
+
+
+def run_scalar(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
+               learner, *, seq_len: int = 64,
+               estimator: Optional[CarbonEstimator] = None,
+               sampler: Optional[SessionSampler] = None) -> TaskResult:
+    """Run one FL task through the scalar reference loop for `fed.mode`."""
+    sampler = sampler or SessionSampler(model_cfg, fed, seq_len)
+    est = estimator or CarbonEstimator()
+    log = TaskLog()
+    stop = _Stopper(run)
+    loop = _sync_loop if fed.mode == "sync" else _async_loop
+    t, rounds, ppl = loop(model_cfg, fed, learner, sampler, log, stop)
+    return TaskResult(log, est.estimate_scalar(log), stop.reached, rounds,
+                      t / 3600.0, ppl, stop.smoothed or ppl)
+
+
+def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
+    rng = np.random.default_rng(fed.seed + 1)
+    t = 0.0
+    rounds = 0
+    ppl = float(model_cfg.vocab_size)
+
+    while True:
+        cohort = _select_cohort(rng, fed.concurrency, population=_POPULATION)
+        plans = [sampler.plan_scalar(int(c), rounds) for c in cohort]
+        tentative = [sampler.resolve_scalar(p, rounds, t) for p in plans]
+        ends = sorted(s["end_t"] for s, ok in tentative if ok)
+        goal = min(fed.aggregation_goal, fed.concurrency)
+        if len(ends) >= goal:
+            round_end = ends[goal - 1]
+            failed = False
+        elif ends:
+            round_end = ends[-1]
+            failed = False
+        else:
+            round_end = max((s["end_t"] for s, _ in tentative), default=t)
+            failed = True
+        contributors: List[int] = []
+        for p in plans:
+            kw, ok = sampler.resolve_scalar(p, rounds, t, deadline=round_end)
+            log.log_session(ClientSession(**kw))
+            if ok and len(contributors) < goal:
+                contributors.append(p.client_id)
+        t = round_end + _SERVER_AGG_S
+        rounds += 1
+        if not failed and contributors:
+            if getattr(learner, "real", True):
+                deltas, weights = [], []
+                for c in contributors:
+                    d, w = learner.client_delta(c, None)
+                    deltas.append(d)
+                    weights.append(w)
+            else:
+                deltas, weights = [None], [1.0]
+            learner.apply(deltas, weights, n_contributors=len(contributors))
+            ppl = learner.eval_perplexity()
+            stop.update(ppl)
+        log.log_round(t)
+        log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
+        if stop.reached or stop.out_of_budget(t, rounds):
+            break
+    return t, rounds, ppl
+
+
+def _async_loop(model_cfg, fed, learner, sampler, log, stop):
+    rng = np.random.default_rng(fed.seed + 2)
+    t = 0.0
+    version = 0
+    ppl = float(model_cfg.vocab_size)
+    buffer: List[Tuple[int, int]] = []
+    heap: List[tuple] = []
+    counter = 0
+
+    def dispatch(cid: int, now: float):
+        nonlocal counter
+        plan = sampler.plan_scalar(cid, version)
+        kw, ok = sampler.resolve_scalar(plan, version, now)
+        heapq.heappush(heap, (kw["end_t"], counter, cid, (kw, ok, version)))
+        counter += 1
+
+    for c in _select_cohort(rng, fed.concurrency, population=_POPULATION):
+        dispatch(int(c), t + float(rng.uniform(0, 5.0)))
+
+    while heap:
+        if stop.out_of_budget(t, version):
+            break
+        end, _, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
+        t = max(t, end)
+        log.log_session(ClientSession(staleness=version - ver_sent, **kw))
+        if ok:
+            buffer.append((cid, ver_sent))
+            if len(buffer) >= fed.aggregation_goal:
+                staleness = [version - v for _, v in buffer]
+                if getattr(learner, "real", True):
+                    deltas, weights = [], []
+                    for bc, bv in buffer:
+                        d, w = learner.client_delta(bc, bv)
+                        deltas.append(d)
+                        weights.append(w)
+                    kw_extra = {"staleness": staleness}
+                else:
+                    deltas, weights, kw_extra = [None], [1.0], {}
+                learner.apply(deltas, weights, n_contributors=len(buffer),
+                              mean_staleness=float(np.mean(staleness)),
+                              **kw_extra)
+                buffer = []
+                version += 1
+                t += _SERVER_AGG_S
+                ppl = learner.eval_perplexity()
+                stop.update(ppl)
+                log.log_round(t)
+                log.log_eval(t, version, ppl, stop.smoothed or ppl)
+                if stop.reached or stop.out_of_budget(t, version):
+                    break
+        dispatch(int(rng.choice(_POPULATION)), t)
+    return t, version, ppl

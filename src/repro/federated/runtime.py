@@ -15,11 +15,16 @@ async — `concurrency` clients are always in flight; a finished client's
         `aggregation_goal` arrivals the server updates and later clients
         train on the newer model (FedBuff). Stragglers never block.
 
-The returned TaskLog contains every session's vitals; CarbonEstimator turns
-it into the paper's component breakdown. Strategies emit a ``RoundEvent``
-after every server eval so callers (``repro.api.Experiment``) can stream
-progress. ``run_task`` survives only as a deprecated shim over the
-registry — new code goes through ``repro.api``.
+Both loops are columnar: cohorts are planned/resolved through the
+vectorized ``SessionSampler.plan_batch``/``resolve_batch`` and logged as
+``SessionBatch`` columns (sync: one batch per round; async: one flush at
+the end of the task), so the per-session cost is a few array ops rather
+than Python-object allocation. The returned TaskLog contains every
+session's vitals; CarbonEstimator turns it into the paper's component
+breakdown. Strategies emit a ``RoundEvent`` after every server eval so
+callers (``repro.api.Experiment``) can stream progress. ``run_task``
+survives only as a deprecated shim over the registry — new code goes
+through ``repro.api``.
 """
 from __future__ import annotations
 
@@ -32,10 +37,11 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
 from repro.core.estimator import CarbonBreakdown, CarbonEstimator
-from repro.core.telemetry import ClientSession, TaskLog
+from repro.core.telemetry import SessionBatch, TaskLog
 from repro.federated.events import SessionSampler
 
 _SERVER_AGG_S = 2.0     # server-side aggregation latency per update
+_POPULATION = 5_000_000  # eligible-device pool the coordinator selects from
 
 
 @dataclass
@@ -56,7 +62,7 @@ class TaskResult:
             "perplexity": self.final_perplexity,
             "carbon_total_kg": self.carbon.total_kg,
             **{k: v for k, v in self.carbon.as_dict().items()},
-            "sessions": float(len(self.log.sessions)),
+            "sessions": float(self.log.n_sessions),
         }
 
 
@@ -100,10 +106,13 @@ class _Stopper:
                 or rounds >= self.run.max_rounds)
 
 
-def _select_cohort(rng: np.random.Generator, k: int, population: int,
-                   exclude_eval: int = 10_000_000) -> np.ndarray:
-    """Coordinator client selection: eligible devices, unique per round."""
-    return rng.choice(exclude_eval, size=k, replace=False) % population
+def _select_cohort(rng: np.random.Generator, k: int,
+                   population: int) -> np.ndarray:
+    """Coordinator client selection: eligible devices, unique per round.
+    Sampled without replacement from the population directly (the old
+    sample-from-a-larger-range-then-modulo trick silently reintroduced
+    duplicates and a mild modulo bias)."""
+    return rng.choice(population, size=k, replace=False).astype(np.int64)
 
 
 # ---------------------------------------------------------------------------
@@ -159,11 +168,11 @@ class Strategy:
               on_round: Optional[RoundCallback]) -> Tuple[float, int, float]:
         raise NotImplementedError
 
-    def _emit(self, on_round: Optional[RoundCallback], log: TaskLog,
+    def _emit(self, on_round: Optional[RoundCallback], n_sessions: int,
               round_idx: int, t: float, ppl: float, smoothed: float) -> None:
         if on_round is not None:
             on_round(RoundEvent(round_idx, t, ppl, smoothed,
-                                len(log.sessions), self.mode))
+                                n_sessions, self.mode))
 
 
 @register_strategy("sync")
@@ -176,33 +185,33 @@ class SyncStrategy(Strategy):
         t = 0.0
         rounds = 0
         ppl = float(model_cfg.vocab_size)
+        goal = min(fed.aggregation_goal, fed.concurrency)
 
         while True:
-            cohort = _select_cohort(rng, fed.concurrency, population=5_000_000)
-            plans = [sampler.plan(int(c), rounds) for c in cohort]
-            # pass 1: tentative outcomes, find when the goal-th result arrives
-            tentative = [sampler.resolve(p, rounds, t) for p in plans]
-            ends = sorted(s["end_t"] for s, ok in tentative if ok)
-            goal = min(fed.aggregation_goal, fed.concurrency)
+            cohort = _select_cohort(rng, fed.concurrency,
+                                    population=_POPULATION)
+            pb = sampler.plan_batch(cohort, rounds)
+            # pass 1: tentative outcomes, find when the goal-th result
+            # arrives (a partition on end_t, not a full sort)
+            tb, ok = sampler.resolve_batch(pb, rounds, t)
+            ends = tb.end_t[ok]
             if len(ends) >= goal:
-                round_end = ends[goal - 1]
+                round_end = float(np.partition(ends, goal - 1)[goal - 1])
                 failed = False
-            elif ends:
+            elif len(ends):
                 # dropouts ate the over-selection slack: the round closes at
                 # the last survivor (production would hit the round deadline)
                 # and the server updates with what it received
-                round_end = ends[-1]
+                round_end = float(ends.max())
                 failed = False
             else:
-                round_end = max((s["end_t"] for s, _ in tentative), default=t)
+                round_end = float(tb.end_t.max()) if len(tb) else t
                 failed = True
             # pass 2: sessions against the round deadline (cancel stragglers)
-            contributors: List[int] = []
-            for p in plans:
-                kw, ok = sampler.resolve(p, rounds, t, deadline=round_end)
-                log.log_session(ClientSession(**kw))
-                if ok and len(contributors) < goal:
-                    contributors.append(p.client_id)
+            fb, ok2 = sampler.resolve_batch(pb, rounds, t, deadline=round_end)
+            log.log_batch(fb)
+            contributors: List[int] = \
+                cohort[np.nonzero(ok2)[0][:goal]].tolist()
             t = round_end + _SERVER_AGG_S
             rounds += 1
             if not failed and contributors:
@@ -222,16 +231,78 @@ class SyncStrategy(Strategy):
                 stop.update(ppl)
             log.log_round(t)
             log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
-            self._emit(on_round, log, rounds, t, ppl, stop.smoothed or ppl)
+            self._emit(on_round, log.n_sessions, rounds, t, ppl,
+                       stop.smoothed or ppl)
             if stop.reached or stop.out_of_budget(t, rounds):
                 break
         return t, rounds, ppl
 
 
+class _ReplacementPool:
+    """Batched dispatch for the async loop: replacement client sessions are
+    planned AND resolved `block` at a time against the current server
+    version (outcome randomness depends only on (client_id, version), and
+    durations are start-time-shift-invariant, so resolving at relative
+    start 0 and shifting to the dispatch time is exact). When the version
+    advances, the not-yet-dispatched remainder is re-planned at the new
+    version — exactly what per-pop scalar dispatch would have done."""
+
+    CHUNK = 256   # rows materialized into python tuples at a time
+
+    def __init__(self, sampler: SessionSampler, rng: np.random.Generator,
+                 population: int, block: int = 512):
+        self.sampler = sampler
+        self.rng = rng
+        self.population = population
+        self.block = block
+        self._ids = np.empty(0, np.int64)
+        self._version = -1
+        self._consumed = 0     # rows of the planned block handed out
+        self._mat = 0          # rows of the planned block materialized
+        self._batch = None
+
+    def _plan(self, version: int) -> None:
+        """(Re)plan the pending block at `version`. Not-yet-consumed ids
+        survive a version change and are re-resolved — exactly what per-pop
+        scalar dispatch at the new version would have produced. Fresh ids
+        are drawn `block` at a time; rows are materialized lazily in CHUNK
+        slices so a re-plan never pays tuple-building for rows it drops."""
+        ids = self._ids[self._consumed:]
+        if not len(ids):
+            ids = self.rng.integers(0, self.population, size=self.block)
+        self._ids = np.asarray(ids, np.int64)
+        self._version = version
+        self._consumed = 0
+        self._mat = 0
+        self._batch = self.sampler.resolve_batch(
+            self.sampler.plan_batch(self._ids, version), version, 0.0)
+
+    def chunk(self, version: int, used: int) -> List[tuple]:
+        """Report `used` rows consumed from the previous chunk, then return
+        the next chunk of rows — 11-tuples ``(cid, dev, ctry, download_s,
+        compute_s, upload_s, bytes_down, bytes_up, end_rel, outcome, ok)``
+        resolved at `version` with durations relative to dispatch time."""
+        self._consumed += used
+        if self._version != version or self._consumed >= len(self._ids):
+            self._plan(version)
+        b, ok = self._batch
+        lo, hi = self._mat, min(self._mat + self.CHUNK, len(self._ids))
+        self._mat = hi
+        return list(zip(
+            self._ids[lo:hi].tolist(), b.device_idx[lo:hi].tolist(),
+            b.country_idx[lo:hi].tolist(), b.download_s[lo:hi].tolist(),
+            b.compute_s[lo:hi].tolist(), b.upload_s[lo:hi].tolist(),
+            b.bytes_down[lo:hi].tolist(), b.bytes_up[lo:hi].tolist(),
+            b.end_t[lo:hi].tolist(), b.outcome[lo:hi].tolist(),
+            ok[lo:hi].tolist()))
+
+
 @register_strategy("async")
 class AsyncStrategy(Strategy):
     """FedBuff: always-`concurrency` in-flight clients, buffer size =
-    aggregation_goal, staleness-weighted aggregation."""
+    aggregation_goal, staleness-weighted aggregation. The event heap stays
+    (arrival order is inherently sequential) but sessions are planned and
+    resolved in batches and logged as one SessionBatch at the end."""
 
     def _loop(self, model_cfg, fed, learner, sampler, log, stop, on_round):
         assert fed.mode == "async"
@@ -240,57 +311,127 @@ class AsyncStrategy(Strategy):
         version = 0
         ppl = float(model_cfg.vocab_size)
         buffer: List[Tuple[int, int]] = []        # (client_id, version_sent)
-        heap: List[Tuple[float, int, int, object]] = []  # (end, cid, ver, plan)
+        # heap rows: (end_abs, counter, payload, start_abs, version_sent)
+        # where payload is the pool's 11-tuple (cid, dev, ctry, d, c, u,
+        # bdown, bup, end_rel, outcome_code, ok)
+        heap: List[tuple] = []
         counter = 0
+        pool = _ReplacementPool(
+            sampler, rng, _POPULATION,
+            block=max(256, min(4096, 2 * fed.aggregation_goal)))
+        popped: List[tuple] = []       # heap rows, in arrival order
+        update_pops: List[int] = []    # len(popped) at each server update
+        # hot-loop locals (the pop loop runs once per session)
+        heappop, heappush = heapq.heappop, heapq.heappush
+        popped_append = popped.append
+        goal = fed.aggregation_goal
+        max_t = stop.run.max_hours * 3600.0
+        max_rounds = stop.run.max_rounds
+        blk: List[tuple] = []
+        bpos = 0
 
-        def dispatch(cid: int, now: float):
-            nonlocal counter
-            plan = sampler.plan(cid, version)
-            kw, ok = sampler.resolve(plan, version, now)
-            heapq.heappush(heap, (kw["end_t"], counter, cid, (kw, ok, version)))
+        # initial cohort: one batched plan/resolve with jittered starts
+        cohort = _select_cohort(rng, fed.concurrency, population=_POPULATION)
+        starts = rng.uniform(0, 5.0, size=fed.concurrency)
+        b0, ok0 = sampler.resolve_batch(
+            sampler.plan_batch(cohort, version), version, starts)
+        for end0, start0, payload in zip(
+                b0.end_t.tolist(), b0.start_t.tolist(),
+                zip(cohort.tolist(), b0.device_idx.tolist(),
+                    b0.country_idx.tolist(), b0.download_s.tolist(),
+                    b0.compute_s.tolist(), b0.upload_s.tolist(),
+                    b0.bytes_down.tolist(), b0.bytes_up.tolist(),
+                    b0.end_t.tolist(), b0.outcome.tolist(), ok0.tolist())):
+            heapq.heappush(heap, (end0, counter, payload, start0, version))
             counter += 1
 
-        for c in _select_cohort(rng, fed.concurrency, population=5_000_000):
-            dispatch(int(c), t + float(rng.uniform(0, 5.0)))
-
+        is_real = getattr(learner, "real", True)
+        buf_append = buffer.append
+        blk_n = 0
+        if version >= max_rounds:
+            heap = []
         while heap:
-            if stop.out_of_budget(t, version):
+            # the version budget can only trip right after an update, where
+            # it is checked before the loop resumes — only time stays here
+            if t >= max_t:
                 break
-            end, _, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
-            t = max(t, end)
-            log.log_session(ClientSession(staleness=version - ver_sent, **kw))
-            if ok:
-                buffer.append((cid, ver_sent))
-                if len(buffer) >= fed.aggregation_goal:
-                    staleness = [version - v for _, v in buffer]
-                    deltas, weights = [], []
-                    is_real = getattr(learner, "real", True)
+            row = heappop(heap)
+            end = row[0]
+            if end > t:
+                t = end
+            popped_append(row)
+            payload = row[2]
+            if payload[10]:  # ok -> contributes to the aggregation buffer
+                buf_append((payload[0], row[4]))
+                if len(buffer) >= goal:
                     if is_real:
+                        staleness = [version - v for _, v in buffer]
+                        deltas, weights = [], []
                         for bc, bv in buffer:
-                            d, w = learner.client_delta(bc, bv)
-                            deltas.append(d)
+                            dd, w = learner.client_delta(bc, bv)
+                            deltas.append(dd)
                             weights.append(w)
+                        kw_extra = {"staleness": staleness}
+                        mean_st = float(np.mean(staleness))
                     else:
-                        deltas, weights = [None], [1.0]
-                    kw_extra = {"staleness": staleness} if is_real else {}
+                        deltas, weights, kw_extra = [None], [1.0], {}
+                        mean_st = version - (sum(v for _, v in buffer)
+                                             / len(buffer))
                     learner.apply(deltas, weights,
                                   n_contributors=len(buffer),
-                                  mean_staleness=float(np.mean(staleness)),
-                                  **kw_extra)
-                    buffer = []
+                                  mean_staleness=mean_st, **kw_extra)
+                    buffer.clear()
                     version += 1
+                    blk_n = bpos       # force a chunk refresh (new version)
                     t += _SERVER_AGG_S
+                    update_pops.append(len(popped))
                     ppl = learner.eval_perplexity()
                     stop.update(ppl)
                     log.log_round(t)
                     log.log_eval(t, version, ppl, stop.smoothed or ppl)
-                    self._emit(on_round, log, version, t, ppl,
-                               stop.smoothed or ppl)
+                    self._emit(on_round, len(popped), version, t,
+                               ppl, stop.smoothed or ppl)
                     if stop.reached or stop.out_of_budget(t, version):
                         break
             # keep concurrency in-flight: replace this client immediately
-            nxt = int(rng.choice(5_000_000))
-            dispatch(nxt, t)
+            # (inlined pool fast path: one pre-resolved row per dispatch;
+            # blk_n is forced to bpos on version bumps to refresh the chunk)
+            if bpos >= blk_n:
+                blk = pool.chunk(version, bpos)
+                blk_n = len(blk)
+                bpos = 0
+            r = blk[bpos]
+            bpos += 1
+            heappush(heap, (t + r[8], counter, r, t, version))
+            counter += 1
+
+        if popped:
+            # transpose the arrival-ordered heap rows into columns; the
+            # server version at each arrival is recovered from the update
+            # boundaries (update_pops) instead of a per-pop append
+            end_c, _, payload_c, st_c, ver_c = zip(*popped)
+            (cid_c, dev_c, ctry_c, d_c, c_c, u_c, bd_c, bu_c, _,
+             out_c, _) = zip(*payload_c)
+            ver_sent = np.asarray(ver_c, np.int64)
+            ver_at_pop = np.searchsorted(
+                np.asarray(update_pops, np.int64),
+                np.arange(len(popped), dtype=np.int64), side="right")
+            log.log_batch(SessionBatch(
+                device_names=sampler.device_names,
+                country_names=sampler.country_names,
+                client_id=np.asarray(cid_c, np.int64),
+                round_idx=ver_sent,
+                device_idx=np.asarray(dev_c, np.int32),
+                country_idx=np.asarray(ctry_c, np.int32),
+                download_s=np.asarray(d_c),
+                compute_s=np.asarray(c_c),
+                upload_s=np.asarray(u_c),
+                bytes_down=np.asarray(bd_c),
+                bytes_up=np.asarray(bu_c),
+                start_t=np.asarray(st_c),
+                end_t=np.asarray(end_c),
+                outcome=np.asarray(out_c, np.int8),
+                staleness=(ver_at_pop - ver_sent).astype(np.int32)))
         return t, version, ppl
 
 

@@ -1,0 +1,199 @@
+"""Columnar engine equivalence: the vectorized sampler / estimator /
+strategies must reproduce the scalar reference path seed-for-seed (to
+float tolerance), plus golden summary numbers for one sync and one async
+spec so engine drift is caught across PRs."""
+import numpy as np
+import pytest
+
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.estimator import CarbonEstimator
+from repro.core.telemetry import (OUTCOMES, ClientSession, SessionBatch,
+                                  TaskLog)
+from repro.federated.events import SessionSampler
+from repro.federated.reference import run_scalar
+from repro.federated.runtime import get_strategy
+from repro.federated.surrogate import SurrogateLearner
+
+CFG = get_config("paper-charlm")
+RUN = RunConfig(target_perplexity=175.0)
+
+
+def _sampler(**fed_kw):
+    fed_kw.setdefault("aggregation_goal",
+                      max(1, int(fed_kw.get("concurrency", 100) * 0.8)))
+    fed = FederatedConfig(**fed_kw)
+    return SessionSampler(CFG, fed, 64), fed
+
+
+def _ids(n=512, seed=7):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 5_000_000, size=n).astype(np.int64)
+
+
+# ------------------------------------------------------- sampler equivalence
+@pytest.mark.parametrize("fed_kw", [dict(), dict(compression="int8"),
+                                    dict(local_epochs=5, seed=3)])
+def test_plan_batch_matches_scalar(fed_kw):
+    s, _ = _sampler(**fed_kw)
+    ids = _ids()
+    pb = s.plan_batch(ids, round_idx=4)
+    for i in (0, 1, 17, 100, 511):
+        ref = s.plan_scalar(int(ids[i]), 4)
+        assert s.fleet[pb.device_idx[i]] is ref.device
+        assert s.country_names[pb.country_idx[i]] == ref.country
+        assert int(pb.n_examples[i]) == ref.n_examples
+        np.testing.assert_allclose(
+            [pb.download_s[i], pb.compute_s[i], pb.upload_s[i]],
+            [ref.download_s, ref.compute_s, ref.upload_s], rtol=1e-12)
+
+
+@pytest.mark.parametrize("deadline", [None, 2000.0])
+def test_resolve_batch_matches_scalar(deadline):
+    s, _ = _sampler(dropout_rate=0.2)     # force plenty of drop branches
+    ids = _ids()
+    pb = s.plan_batch(ids, 4)
+    batch, ok = s.resolve_batch(pb, 4, 100.0, deadline=deadline)
+    outcomes = set()
+    for i in range(len(ids)):
+        kw, ok_ref = s.resolve_scalar(s.plan_scalar(int(ids[i]), 4), 4,
+                                      100.0, deadline=deadline)
+        assert OUTCOMES[batch.outcome[i]] == kw["outcome"]
+        assert bool(ok[i]) == ok_ref
+        outcomes.add(kw["outcome"])
+        np.testing.assert_allclose(
+            [batch.download_s[i], batch.compute_s[i], batch.upload_s[i],
+             batch.bytes_down[i], batch.bytes_up[i], batch.end_t[i]],
+            [kw["download_s"], kw["compute_s"], kw["upload_s"],
+             kw["bytes_down"], kw["bytes_up"], kw["end_t"]],
+            rtol=1e-9, atol=1e-9)
+    assert "completed" in outcomes and "dropped" in outcomes
+
+
+def test_scalar_plan_resolve_wrappers_are_batch_of_one():
+    s, _ = _sampler()
+    for cid in (0, 99, 4_999_999):
+        p_b, p_s = s.plan(cid, 2), s.plan_scalar(cid, 2)
+        assert (p_b.device, p_b.country, p_b.n_examples) == \
+            (p_s.device, p_s.country, p_s.n_examples)
+        for f in ("download_s", "compute_s", "upload_s"):
+            assert getattr(p_b, f) == pytest.approx(getattr(p_s, f),
+                                                    rel=1e-12)
+        kw_b, ok_b = s.resolve(s.plan(cid, 2), 2, 10.0)
+        kw_s, ok_s = s.resolve_scalar(s.plan_scalar(cid, 2), 2, 10.0)
+        assert ok_b == ok_s
+        assert kw_b.keys() == kw_s.keys()
+        for k in kw_s:
+            if isinstance(kw_s[k], float):
+                assert kw_b[k] == pytest.approx(kw_s[k], rel=1e-9)
+            else:
+                assert kw_b[k] == kw_s[k]
+
+
+def test_dropped_mid_download_prorates_bytes_down():
+    """Satellite fix: a client cut mid-download is charged only the
+    downloaded fraction, not the full payload."""
+    s, _ = _sampler(dropout_rate=0.0)
+    pb = s.plan_batch(_ids(64), 0)
+    # a deadline inside the first download cuts everyone mid-download
+    cut = float(pb.download_s.min()) * 0.5
+    batch, ok = s.resolve_batch(pb, 0, 0.0, deadline=cut)
+    assert not ok.any()
+    # sessions that hit the compute timeout finished their download first
+    # and are rightly charged in full; the deadline-dropped ones prorate
+    dropped = batch.outcome == OUTCOMES.index("dropped")
+    assert dropped.any()
+    frac = batch.download_s / pb.download_s
+    np.testing.assert_allclose(batch.bytes_down, pb.bytes_down * frac,
+                               rtol=1e-12)
+    assert (batch.bytes_down[dropped] < pb.bytes_down[dropped]).all()
+    assert (batch.bytes_up == 0).all()
+
+
+# ----------------------------------------------------- estimator equivalence
+def test_vectorized_estimator_matches_scalar_loop():
+    s, fed = _sampler(dropout_rate=0.15)
+    log = TaskLog()
+    for r in range(3):
+        batch, _ = s.resolve_batch(s.plan_batch(_ids(256, seed=r), r), r,
+                                   100.0 * r, deadline=100.0 * r + 5000.0)
+        log.log_batch(batch)
+    log.duration_s = 5000.0
+    est = CarbonEstimator()
+    vec, ref = est.estimate(log), est.estimate_scalar(log)
+    for k, v in vec.as_dict().items():
+        assert v == pytest.approx(ref.as_dict()[k], rel=1e-9)
+    assert vec.total_kg > 0
+
+
+def test_estimator_handles_row_oriented_and_empty_logs():
+    est = CarbonEstimator()
+    log = TaskLog()
+    assert est.estimate(log).total_kg == 0.0
+    log.log_session(ClientSession(
+        client_id=1, round_idx=0, device="pixel-3", country="US",
+        download_s=10.0, compute_s=60.0, upload_s=30.0, bytes_down=64e6,
+        bytes_up=64e6, start_t=0.0, end_t=100.0, outcome="completed"))
+    log.duration_s = 3600.0
+    vec, ref = est.estimate(log), est.estimate_scalar(log)
+    assert vec.total_kg == pytest.approx(ref.total_kg, rel=1e-9)
+
+
+# ------------------------------------------------------ strategy equivalence
+@pytest.mark.parametrize("mode,conc", [("sync", 120), ("async", 120)])
+def test_strategy_matches_scalar_reference_engine(mode, conc):
+    fed = FederatedConfig(mode=mode, concurrency=conc,
+                          aggregation_goal=int(conc * 0.8))
+    vec = get_strategy(mode).run(CFG, fed, RUN,
+                                 SurrogateLearner(CFG, fed, RUN))
+    ref = run_scalar(CFG, fed, RUN, SurrogateLearner(CFG, fed, RUN))
+    assert vec.rounds == ref.rounds
+    assert vec.log.n_sessions == ref.log.n_sessions
+    assert vec.log.participation() == ref.log.participation()
+    assert vec.carbon.total_kg == pytest.approx(ref.carbon.total_kg,
+                                                rel=1e-9)
+    for k, v in vec.carbon.as_dict().items():
+        assert v == pytest.approx(ref.carbon.as_dict()[k], rel=1e-9)
+    assert vec.duration_h == pytest.approx(ref.duration_h, rel=1e-9)
+    assert vec.log.mean_staleness() == pytest.approx(
+        ref.log.mean_staleness(), rel=1e-9)
+
+
+# ------------------------------------------------------------ golden numbers
+def test_golden_sync_summary():
+    fed = FederatedConfig(mode="sync", concurrency=100, aggregation_goal=80)
+    res = get_strategy("sync").run(CFG, fed, RUN,
+                                   SurrogateLearner(CFG, fed, RUN))
+    s = res.summary()
+    assert s["rounds"] == 503
+    assert s["sessions"] == 50300.0
+    assert s["carbon_total_kg"] == pytest.approx(4.232699224439, rel=1e-6)
+    assert s["duration_h"] == pytest.approx(37.612267073554, rel=1e-6)
+
+
+def test_golden_async_summary():
+    fed = FederatedConfig(mode="async", concurrency=100, aggregation_goal=80)
+    res = get_strategy("async").run(CFG, fed, RUN,
+                                    SurrogateLearner(CFG, fed, RUN))
+    s = res.summary()
+    assert s["rounds"] == 599
+    assert s["sessions"] == 56733.0
+    assert s["carbon_total_kg"] == pytest.approx(4.149319672258, rel=1e-6)
+    assert s["duration_h"] == pytest.approx(23.728930396052, rel=1e-6)
+
+
+# ----------------------------------------------------------- columnar store
+def test_sessionbatch_roundtrip_and_concat():
+    s, _ = _sampler()
+    b1, _ = s.resolve_batch(s.plan_batch(_ids(32, seed=1), 0), 0, 0.0)
+    b2, _ = s.resolve_batch(s.plan_batch(_ids(32, seed=2), 1), 1, 50.0)
+    cat = SessionBatch.concat([b1, b2])
+    assert len(cat) == 64
+    rebuilt = SessionBatch.from_sessions(cat.to_sessions())
+    assert rebuilt.to_sessions() == cat.to_sessions()
+    log = TaskLog()
+    log.log_batch(b1)
+    log.log_session(b2.to_sessions()[0])     # mixed columnar + row appends
+    assert log.n_sessions == 33
+    assert len(log.sessions) == 33
+    assert log.sessions[32] == b2.to_sessions()[0]
+    assert sum(log.participation().values()) == 33
