@@ -12,19 +12,24 @@ concurrency = aggregation goal) through BOTH engines:
 Both engines produce seed-for-seed identical TaskLogs, so sessions/sec is
 an apples-to-apples measure of the same simulated workload. Results land
 in ``BENCH_runtime.json`` (committed at the repo root) so the speedup is
-tracked across PRs; ``--check`` compares the fresh numbers against the
-committed baseline and fails on a >2x throughput regression. The gate is
-deliberately loose: baselines are wall-clock on whatever machine last
-passed, so 2x absorbs hardware variance — and because each passing run
-re-baselines, it catches cliffs, not slow drift (track the committed
-JSON's history for that).
+tracked across PRs, and every successful run appends a row to
+``BENCH_history.json`` — the throughput trajectory across PRs/machines.
+``--check`` compares the fresh numbers against the committed baseline and
+fails on a >2x throughput regression, overall AND per mode (sync and
+async are gated separately so one mode's win can't mask the other's
+cliff). The gate is deliberately loose: baselines are wall-clock on
+whatever machine last passed, so 2x absorbs hardware variance — and
+because each passing run re-baselines, it catches cliffs, not slow drift
+(BENCH_history.json is the record for drift).
 
     PYTHONPATH=src python benchmarks/bench_runtime.py [--quick] [--check]
 
-Known asymmetry: the sync engine is fully array-parallel per round and
-clears 20x comfortably; the async engine keeps its (inherently
-sequential) event heap, so its single-thread speedup is bounded by the
-per-pop Python cost even though dispatch/resolve are batched.
+Full (non-quick) runs also record an ``async_stress`` point — the async
+engine alone at goal == concurrency == 1000 (the fig5 frontier point,
+maximum chained-replacement pressure on the window-batched merge).
+Both engines are fully vectorized: sync closes rounds with a partition
+on end_t; async runs the window-batched merge over per-slot
+replacement-id streams (PR 3) instead of a per-session event heap.
 """
 from __future__ import annotations
 
@@ -41,6 +46,8 @@ from repro.federated.surrogate import SurrogateLearner
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_runtime.json")
+HISTORY_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_history.json")
 REGRESSION_FACTOR = 2.0
 
 
@@ -85,6 +92,28 @@ def _run_engine(engine: str, points: List[Dict]) -> Dict:
     return out
 
 
+def _run_async_stress() -> Dict:
+    """Columnar-only async point at goal == concurrency == 1000: the fig5
+    frontier workload with maximum chained-replacement pressure on the
+    window-batched merge (the scalar engine would take ~10s here, and the
+    per-mode gate already covers the comparison)."""
+    cfg = get_config("paper-charlm")
+    cfg.param_count()
+    fed = FederatedConfig(mode="async", concurrency=1000,
+                          aggregation_goal=1000)
+    run = RunConfig(target_perplexity=175.0)
+    learner = SurrogateLearner(cfg, fed, run)
+    t0 = time.time()
+    res = get_strategy("async").run(cfg, fed, run, learner)
+    wall = time.time() - t0
+    n = res.log.n_sessions
+    return {"concurrency": 1000, "aggregation_goal": 1000,
+            "sessions": n, "wall_s": round(wall, 4),
+            "sessions_per_s": round(n / max(wall, 1e-9)),
+            "rounds": res.rounds,
+            "carbon_total_kg": res.carbon.total_kg}
+
+
 def run_bench(quick: bool) -> Dict:
     points = sweep_points(quick)
     columnar = _run_engine("columnar", points)
@@ -107,20 +136,66 @@ def run_bench(quick: bool) -> Dict:
         assert c["rounds"] == s["rounds"], (m, c, s)
         assert abs(c["carbon_total_kg"] - s["carbon_total_kg"]) \
             <= 1e-9 * abs(s["carbon_total_kg"]), (m, c, s)
+    if not quick:
+        result["async_stress"] = _run_async_stress()
     return result
 
 
 def check_regression(fresh: Dict, baseline: Dict) -> int:
     """Exit status 1 if the columnar throughput regressed more than
-    REGRESSION_FACTOR against the recorded baseline for this workload."""
-    old = baseline.get("columnar", {}).get("sessions_per_s", 0)
-    new = fresh["columnar"]["sessions_per_s"]
-    if old and new * REGRESSION_FACTOR < old:
-        print(f"bench: REGRESSION — columnar engine {new:,} sessions/s vs "
-              f"baseline {old:,} (>{REGRESSION_FACTOR}x slower)")
-        return 1
-    print(f"bench: columnar {new:,} sessions/s vs baseline {old:,} — ok")
-    return 0
+    REGRESSION_FACTOR against the recorded baseline for this workload —
+    overall, or in any individual mode (per-mode gates keep one mode's
+    speedup from masking the other's regression)."""
+    status = 0
+    gates = [("columnar", baseline.get("columnar", {}).get("sessions_per_s", 0),
+              fresh["columnar"]["sessions_per_s"])]
+    for m, fm in fresh["columnar"]["per_mode"].items():
+        old_m = baseline.get("columnar", {}).get("per_mode", {}) \
+            .get(m, {}).get("sessions_per_s", 0)
+        gates.append((f"columnar[{m}]", old_m, fm["sessions_per_s"]))
+    for name, old, new in gates:
+        if old and new * REGRESSION_FACTOR < old:
+            print(f"bench: REGRESSION — {name} {new:,} sessions/s vs "
+                  f"baseline {old:,} (>{REGRESSION_FACTOR}x slower)")
+            status = 1
+        else:
+            print(f"bench: {name} {new:,} sessions/s vs baseline "
+                  f"{old:,} — ok")
+    return status
+
+
+def append_history(key: str, fresh: Dict, path: str) -> None:
+    """One trajectory row per successful run: the per-mode throughputs and
+    speedups, so regressions that stay inside the 2x gate are still
+    visible across PRs."""
+    history: List[Dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+        except (json.JSONDecodeError, ValueError):
+            # a run killed mid-rewrite leaves truncated JSON; restart the
+            # trajectory rather than failing every future bench/smoke run
+            print(f"bench: WARNING — {os.path.relpath(path)} was corrupt; "
+                  "restarting the trajectory")
+            history = []
+    row = {
+        "ts": round(time.time(), 1),
+        "workload": key,
+        "columnar_sessions_per_s": fresh["columnar"]["sessions_per_s"],
+        "scalar_sessions_per_s": fresh["scalar"]["sessions_per_s"],
+        "per_mode": {m: v["sessions_per_s"]
+                     for m, v in fresh["columnar"]["per_mode"].items()},
+        "speedup": fresh["speedup"],
+        "speedup_per_mode": fresh["speedup_per_mode"],
+    }
+    if "async_stress" in fresh:
+        row["async_stress_sessions_per_s"] = \
+            fresh["async_stress"]["sessions_per_s"]
+    history.append(row)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+        f.write("\n")
 
 
 def main() -> int:
@@ -130,6 +205,7 @@ def main() -> int:
     ap.add_argument("--check", action="store_true",
                     help="fail on >2x regression vs committed baseline")
     ap.add_argument("--out", default=BENCH_PATH)
+    ap.add_argument("--history", default=HISTORY_PATH)
     args = ap.parse_args()
 
     # BENCH_runtime.json holds one section per workload ("full" / "quick")
@@ -147,6 +223,7 @@ def main() -> int:
         with open(args.out, "w") as f:
             json.dump(book, f, indent=1)
             f.write("\n")
+        append_history(key, fresh, args.history)
     print(json.dumps({k: fresh[k] for k in
                       ("speedup", "speedup_per_mode")}, indent=1))
     print(f"[{key}] columnar: {fresh['columnar']['sessions_per_s']:,} "

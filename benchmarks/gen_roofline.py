@@ -1,7 +1,18 @@
-"""Generate results/roofline_table.md from the three dry-run JSONs."""
-import json, sys
-sys.path.insert(0, "src")
-from benchmarks.roofline_report import markdown_table
+"""Generate results/roofline_table.md from the three dry-run JSONs.
+
+Run from anywhere; paths resolve against the repo root:
+
+    PYTHONPATH=src python benchmarks/gen_roofline.py
+"""
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks.roofline_report import markdown_table  # noqa: E402
 
 out = []
 for title, f in [("Single pod 16x16 (baseline)", "results/dryrun_single_pod.json"),
@@ -9,12 +20,12 @@ for title, f in [("Single pod 16x16 (baseline)", "results/dryrun_single_pod.json
                  ("Single pod 16x16 (OPTIMIZED serving: --variant flash_decode)",
                   "results/dryrun_single_pod_optimized.json")]:
     try:
-        rows = json.load(open(f))
+        rows = json.load(open(os.path.join(_ROOT, f)))
     except FileNotFoundError:
         continue
     clean = []
     for r in rows:
         clean.append({k: v for k, v in r.items() if not isinstance(v, dict)})
     out.append(f"### {title}\n\n" + markdown_table(clean) + "\n")
-open("results/roofline_table.md", "w").write("\n".join(out))
+open(os.path.join(_ROOT, "results/roofline_table.md"), "w").write("\n".join(out))
 print("wrote results/roofline_table.md")

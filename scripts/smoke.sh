@@ -1,16 +1,19 @@
 #!/usr/bin/env bash
-# CI smoke: tier-1 test suite + an ExperimentSpec JSON dry-run end-to-end
+# CI smoke: tier-1 test suite + ExperimentSpec JSON dry-runs end-to-end
 # + the simulation-engine runtime benchmark.
 #
 #   bash scripts/smoke.sh            # from the repo root
 #
-# Step 2 loads the committed spec artifact, runs it, then re-serializes,
-# reloads and re-runs it, asserting both runs produce the identical
-# Result.summary() — the repro.api reproducibility contract.
+# Step 2 loads the committed spec artifacts (one sync, one async), runs
+# each, then re-serializes, reloads and re-runs, asserting both runs
+# produce the identical Result.summary() — the repro.api reproducibility
+# contract, exercised on BOTH event loops.
 #
 # Step 3 runs the quick fig5-style engine benchmark (columnar vs scalar),
-# refreshes BENCH_runtime.json, and FAILS if the columnar engine's quick
-# sessions/sec regressed more than 2x against the recorded baseline.
+# refreshes BENCH_runtime.json + BENCH_history.json, and FAILS if the
+# columnar engine's quick sessions/sec regressed more than 2x against the
+# recorded baseline — overall or in either mode (sync and async are gated
+# separately).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,11 +22,13 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== smoke 1/3: tier-1 test suite =="
 python -m pytest -x -q
 
-echo "== smoke 2/3: ExperimentSpec JSON dry-run (with round-trip check) =="
+echo "== smoke 2/3: ExperimentSpec JSON dry-runs (with round-trip check) =="
 python -m repro.api examples/specs/charlm_sync_small.json \
     --roundtrip-check --quiet
+python -m repro.api examples/specs/charlm_async_small.json \
+    --roundtrip-check --quiet
 
-echo "== smoke 3/3: runtime benchmark (quick, 2x regression gate) =="
+echo "== smoke 3/3: runtime benchmark (quick, per-mode 2x regression gate) =="
 python benchmarks/bench_runtime.py --quick --check
 
 echo "smoke OK"

@@ -2,10 +2,11 @@
 
 Each FL session produces the vitals the paper's production logger captures:
 device model, connecting country, download/compute/upload durations, bytes
-moved, and the outcome (completed, dropped mid-round, or timed out at 4
-minutes). Dropped/timed-out clients still burned energy — the estimator
-charges them (paper: "our methodology also accounts for the clients that
-drop out or time out").
+moved, and the outcome (completed, dropped mid-round, timed out at 4
+minutes, or cancelled because the task itself ended while the session was
+in flight). Dropped/timed-out/cancelled clients still burned energy — the
+estimator charges them (paper: "our methodology also accounts for the
+clients that drop out or time out").
 
 Storage is struct-of-arrays: strategies append one ``SessionBatch`` (a
 bundle of NumPy columns plus small device/country vocabularies) per round
@@ -22,7 +23,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-OUTCOMES: Tuple[str, ...] = ("completed", "dropped", "timeout")
+OUTCOMES: Tuple[str, ...] = ("completed", "dropped", "timeout", "cancelled")
 OUTCOME_CODE: Dict[str, int] = {name: i for i, name in enumerate(OUTCOMES)}
 
 
@@ -41,7 +42,7 @@ class ClientSession:
     bytes_up: float
     start_t: float               # task clock, seconds
     end_t: float
-    outcome: str                 # "completed" | "dropped" | "timeout"
+    outcome: str                 # "completed"|"dropped"|"timeout"|"cancelled"
     staleness: int = 0           # async: server updates since model was sent
 
     @property
@@ -162,6 +163,51 @@ class SessionBatch:
             end_t=float(self.end_t[i]),
             outcome=OUTCOMES[self.outcome[i]],
             staleness=int(self.staleness[i])) for i in range(len(self))]
+
+
+_ACC_DTYPES = {"client_id": np.int64, "round_idx": np.int64,
+               "device_idx": np.int32, "country_idx": np.int32,
+               "download_s": np.float64, "compute_s": np.float64,
+               "upload_s": np.float64, "bytes_down": np.float64,
+               "bytes_up": np.float64, "start_t": np.float64,
+               "end_t": np.float64, "outcome": np.int8,
+               "staleness": np.int32}
+
+
+class BatchAccumulator:
+    """Arrival-ordered columnar batch assembly for strategies that log in
+    windows: each window appends one block of already-ordered columns, and
+    ``to_batch`` concatenates the blocks into a single ``SessionBatch`` —
+    no per-session Python objects anywhere on the path."""
+
+    def __init__(self, device_names: Tuple[str, ...],
+                 country_names: Tuple[str, ...]):
+        self.device_names = device_names
+        self.country_names = country_names
+        self._parts: Dict[str, List[np.ndarray]] = \
+            {f: [] for f in _ACC_DTYPES}
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def append(self, **cols: np.ndarray) -> None:
+        """Append one block; ``cols`` must cover every SessionBatch column
+        except the vocabularies (fixed at construction)."""
+        assert cols.keys() == self._parts.keys(), sorted(cols)
+        n = len(cols["client_id"])
+        for f, arr in cols.items():
+            self._parts[f].append(np.asarray(arr, _ACC_DTYPES[f]))
+        self._n += n
+
+    def to_batch(self) -> SessionBatch:
+        if not self._n:
+            return SessionBatch.empty()
+        return SessionBatch(
+            device_names=self.device_names,
+            country_names=self.country_names,
+            **{f: np.concatenate(parts) if len(parts) > 1 else parts[0]
+               for f, parts in self._parts.items()})
 
 
 class TaskLog:

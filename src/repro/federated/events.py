@@ -65,6 +65,17 @@ def _splitmix64_arr(x: np.ndarray) -> np.ndarray:
     return x ^ (x >> _U64(31))
 
 
+_LANES: dict = {}
+
+
+def _lane_offsets(n: int) -> np.ndarray:
+    try:
+        return _LANES[n]
+    except KeyError:
+        _LANES[n] = np.arange(n, dtype=np.uint64) * _U64(_GOLDEN)
+        return _LANES[n]
+
+
 def _uniforms_batch(seed: int, client_ids: np.ndarray, round_idx: int,
                     n: int) -> np.ndarray:
     """(B, n) uniforms in [0,1); column i equals the scalar ``_uniforms``
@@ -73,9 +84,59 @@ def _uniforms_batch(seed: int, client_ids: np.ndarray, round_idx: int,
     base0 = _U64((seed * 1_000_003 + round_idx) & 0xFFFFFFFF)
     with np.errstate(over="ignore"):
         base = base0 * _U64(2_654_435_761) + cid * _U64(97)
-        lanes = np.arange(n, dtype=np.uint64) * _U64(_GOLDEN)
+        lanes = _lane_offsets(n)
         vals = _splitmix64_arr(base[:, None] + lanes[None, :])
     return (vals >> _U64(11)).astype(np.float64) * _INV53
+
+
+def _plan_uniforms(seed: int, cid: np.ndarray, round_idx: int) -> np.ndarray:
+    """The planner's 9 uniforms in one splitmix pass: columns 0..7 are the
+    (seed, cid, round_idx) draws 0..7, column 8 is the (seed, cid, 0)
+    draw 0 (the round-independent data-volume draw). Bit-identical to the
+    two separate ``_uniforms_batch`` calls it replaces — one array pass
+    instead of two matters because the async window merge issues many
+    small dispatch batches."""
+    with np.errstate(over="ignore"):
+        base_r = _U64((seed * 1_000_003 + round_idx) & 0xFFFFFFFF) \
+            * _U64(2_654_435_761) + cid * _U64(97)
+        base_0 = _U64((seed * 1_000_003) & 0xFFFFFFFF) \
+            * _U64(2_654_435_761) + cid * _U64(97)
+        keys = np.empty((len(cid), 9), np.uint64)
+        keys[:, :8] = base_r[:, None] + _lane_offsets(8)[None, :]
+        keys[:, 8] = base_0
+        vals = _splitmix64_arr(keys)
+    return (vals >> _U64(11)).astype(np.float64) * _INV53
+
+
+_SLOT_MIX = 0xD1342543DE82EF95   # per-slot lane spacing (distinct from _GOLDEN)
+
+
+def slot_stream_ids(seed: int, slots: Union[np.ndarray, Sequence[int]],
+                    generations: Union[np.ndarray, Sequence[int]],
+                    population: int) -> np.ndarray:
+    """Counter-based replacement-id streams for the async engine: the g-th
+    replacement dispatched into in-flight slot s draws client id
+    ``splitmix64((seed, s, g))`` — a deterministic function of the slot and
+    its replacement count alone. Identity never depends on global arrival
+    order, which is what lets ``AsyncStrategy`` resolve whole windows of
+    chained replacements columnar-ly instead of popping a heap."""
+    s = np.asarray(slots, dtype=np.uint64)
+    g = np.asarray(generations, dtype=np.uint64)
+    base0 = _U64(((seed & 0xFFFFFFFF) * 0x9E3779B9 + 0x7F4A7C15) & _M64)
+    with np.errstate(over="ignore"):
+        h = _splitmix64_arr(base0 + s * _U64(_SLOT_MIX) + g * _U64(_GOLDEN))
+    u = (h >> _U64(11)).astype(np.float64) * _INV53
+    return (u * population).astype(np.int64)
+
+
+def slot_stream_id(seed: int, slot: int, generation: int,
+                   population: int) -> int:
+    """Scalar twin of ``slot_stream_ids`` (used by the reference oracle);
+    pure python-int splitmix so the scalar engine stays numpy-free on its
+    per-pop path — bit-identical to the batch version."""
+    base = ((seed & 0xFFFFFFFF) * 0x9E3779B9 + 0x7F4A7C15) & _M64
+    h = _splitmix64((base + slot * _SLOT_MIX + generation * _GOLDEN) & _M64)
+    return int((h >> 11) * _INV53 * population)
 
 
 def _lognormal(u1: float, u2: float, sigma: float) -> float:
@@ -180,19 +241,18 @@ class SessionSampler:
         uniform block matches scalar draw i, so this reproduces
         ``plan_scalar`` per client bit-for-bit (modulo libm ulps)."""
         ids = np.asarray(client_ids, np.int64)
-        u = _uniforms_batch(self.fed.seed, ids, round_idx, 8)
+        u = _plan_uniforms(self.fed.seed, ids.astype(np.uint64), round_idx)
         dev = np.searchsorted(self._dcum, u[:, 0]).astype(np.int32)
         ctry = np.searchsorted(self._ccum, u[:, 1]).astype(np.int32)
-        n_ex = _pareto_samples_arr(
-            _uniforms_batch(self.fed.seed, ids, 0, 1)[:, 0])
+        n_ex = _pareto_samples_arr(u[:, 8])
         tokens = n_ex * (self.seq_len * self.fed.local_epochs)
+        # one Box-Muller pass over the three (u1, u2) jitter pairs —
+        # columns (2,3) compute, (4,5) download, (6,7) upload
+        jit = _lognormal_arr(u[:, 2:8:2], u[:, 3:8:2], _JITTER_SIGMA)
         compute_s = (tokens * self.flops_per_token * self.compute_overhead
-                     / (self._gflops[dev] * 1e9)) \
-            * _lognormal_arr(u[:, 2], u[:, 3], _JITTER_SIGMA)
-        download_s = 8.0 * self.bytes_down / self.download_bps \
-            * _lognormal_arr(u[:, 4], u[:, 5], _JITTER_SIGMA)
-        upload_s = 8.0 * self.bytes_up / self.upload_bps \
-            * _lognormal_arr(u[:, 6], u[:, 7], _JITTER_SIGMA)
+                     / (self._gflops[dev] * 1e9)) * jit[:, 0]
+        download_s = 8.0 * self.bytes_down / self.download_bps * jit[:, 1]
+        upload_s = 8.0 * self.bytes_up / self.upload_bps * jit[:, 2]
         n = len(ids)
         return PlanBatch(ids, dev, ctry, download_s, compute_s, upload_s,
                          np.full(n, self.bytes_down),

@@ -7,13 +7,21 @@ preserves the original per-session Python loops, driven by the sampler's
 for two purposes only:
 
 * seed-for-seed equivalence tests (``tests/test_columnar.py``) prove the
-  columnar sync engine reproduces this loop's TaskLog stats and
+  columnar sync AND async engines reproduce this loop's TaskLog stats and
   CarbonBreakdown;
 * ``benchmarks/bench_runtime.py`` measures sessions/sec against it, so the
   vectorization speedup is tracked across PRs.
 
+The async loop here still pops a heap one session at a time, but it is
+keyed the same way as the vectorized window merge: heap order is
+``(end_t, slot, generation)`` and replacement client ids come from the
+per-slot counter-based splitmix64 streams (``slot_stream_id``) rather
+than the shared rng — identity decoupled from pop rank is exactly what
+makes the columnar engine's batched merge reproduce this loop.
+
 Do not grow features here — it intentionally trails the real engine except
-where equivalence demands parity (cohort selection, byte proration).
+where equivalence demands parity (cohort selection, byte proration, the
+cancelled-session flush at task end).
 """
 from __future__ import annotations
 
@@ -25,7 +33,7 @@ import numpy as np
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
 from repro.core.estimator import CarbonEstimator
 from repro.core.telemetry import ClientSession, TaskLog
-from repro.federated.events import SessionSampler
+from repro.federated.events import SessionSampler, slot_stream_id
 from repro.federated.runtime import (_POPULATION, _SERVER_AGG_S, TaskResult,
                                      _select_cohort, _Stopper)
 
@@ -93,29 +101,49 @@ def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
     return t, rounds, ppl
 
 
+def _cancel_scalar(kw: dict, t_final: float) -> dict:
+    """Scalar twin of the columnar engine's ``_truncate_cancelled``: an
+    in-flight session at task end burns until the final clock, downlink
+    bytes prorate, uplink bytes zero (never reached the server)."""
+    d, c, u = kw["download_s"], kw["compute_s"], kw["upload_s"]
+    cap = max(0.0, t_final - kw["start_t"])
+    nd = min(d, cap)
+    nc = min(c, max(0.0, cap - d))
+    nu = min(u, max(0.0, cap - d - c))
+    frac = nd / d if d > 0 else 0.0
+    out = dict(kw)
+    out.update(download_s=nd, compute_s=nc, upload_s=nu,
+               bytes_down=kw["bytes_down"] * frac, bytes_up=0.0,
+               end_t=min(kw["end_t"], t_final), outcome="cancelled")
+    return out
+
+
 def _async_loop(model_cfg, fed, learner, sampler, log, stop):
     rng = np.random.default_rng(fed.seed + 2)
     t = 0.0
     version = 0
     ppl = float(model_cfg.vocab_size)
     buffer: List[Tuple[int, int]] = []
+    # heap rows ordered by (end_t, slot, generation) — the same key the
+    # vectorized window merge sorts on. Replacement ids come from the
+    # per-slot counter-based streams (slot_stream_id), NOT from `rng`, so
+    # identity is independent of pop order in both engines.
     heap: List[tuple] = []
-    counter = 0
 
-    def dispatch(cid: int, now: float):
-        nonlocal counter
+    def dispatch(slot: int, gen: int, cid: int, now: float):
         plan = sampler.plan_scalar(cid, version)
         kw, ok = sampler.resolve_scalar(plan, version, now)
-        heapq.heappush(heap, (kw["end_t"], counter, cid, (kw, ok, version)))
-        counter += 1
+        heapq.heappush(heap, (kw["end_t"], slot, gen, cid,
+                              (kw, ok, version)))
 
-    for c in _select_cohort(rng, fed.concurrency, population=_POPULATION):
-        dispatch(int(c), t + float(rng.uniform(0, 5.0)))
+    for slot, c in enumerate(_select_cohort(rng, fed.concurrency,
+                                            population=_POPULATION)):
+        dispatch(slot, 0, int(c), t + float(rng.uniform(0, 5.0)))
 
     while heap:
         if stop.out_of_budget(t, version):
             break
-        end, _, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
+        end, slot, gen, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
         t = max(t, end)
         log.log_session(ClientSession(staleness=version - ver_sent, **kw))
         if ok:
@@ -143,5 +171,12 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop):
                 log.log_eval(t, version, ppl, stop.smoothed or ppl)
                 if stop.reached or stop.out_of_budget(t, version):
                     break
-        dispatch(int(rng.choice(_POPULATION)), t)
+        nid = slot_stream_id(fed.seed, slot, gen + 1, _POPULATION)
+        dispatch(slot, gen + 1, nid, t)
+    # task end: sessions still in flight are logged as cancelled,
+    # truncated at the final clock (keeps energy accounting complete)
+    for end, slot, gen, cid, (kw, ok, ver_sent) in sorted(
+            heap, key=lambda r: r[1]):
+        log.log_session(ClientSession(staleness=version - ver_sent,
+                                      **_cancel_scalar(kw, t)))
     return t, version, ppl

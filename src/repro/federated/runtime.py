@@ -15,20 +15,23 @@ async — `concurrency` clients are always in flight; a finished client's
         `aggregation_goal` arrivals the server updates and later clients
         train on the newer model (FedBuff). Stragglers never block.
 
-Both loops are columnar: cohorts are planned/resolved through the
-vectorized ``SessionSampler.plan_batch``/``resolve_batch`` and logged as
-``SessionBatch`` columns (sync: one batch per round; async: one flush at
-the end of the task), so the per-session cost is a few array ops rather
-than Python-object allocation. The returned TaskLog contains every
-session's vitals; CarbonEstimator turns it into the paper's component
-breakdown. Strategies emit a ``RoundEvent`` after every server eval so
-callers (``repro.api.Experiment``) can stream progress. ``run_task``
-survives only as a deprecated shim over the registry — new code goes
-through ``repro.api``.
+Both loops are columnar end-to-end: cohorts are planned/resolved through
+the vectorized ``SessionSampler.plan_batch``/``resolve_batch`` and logged
+as ``SessionBatch`` columns, so the per-session cost is a few array ops
+rather than Python-object allocation. Sync closes each round with a
+partition on end_t; async is a window-batched exact merge — per-slot
+splitmix64 replacement-id streams (``slot_stream_ids``) decouple
+replacement identity from arrival order, so the span between two server
+updates resolves as arrays instead of a per-session heap pop (see
+``AsyncStrategy``). The returned TaskLog contains every session's vitals;
+CarbonEstimator turns it into the paper's component breakdown. Strategies
+emit a ``RoundEvent`` after every server eval so callers
+(``repro.api.Experiment``) can stream progress. ``run_task`` survives
+only as a deprecated shim over the registry — new code goes through
+``repro.api``.
 """
 from __future__ import annotations
 
-import heapq
 import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple, Type
@@ -37,8 +40,9 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
 from repro.core.estimator import CarbonBreakdown, CarbonEstimator
-from repro.core.telemetry import SessionBatch, TaskLog
-from repro.federated.events import SessionSampler
+from repro.core.telemetry import (OUTCOME_CODE, BatchAccumulator,
+                                  SessionBatch, TaskLog)
+from repro.federated.events import SessionSampler, slot_stream_ids
 
 _SERVER_AGG_S = 2.0     # server-side aggregation latency per update
 _POPULATION = 5_000_000  # eligible-device pool the coordinator selects from
@@ -238,200 +242,253 @@ class SyncStrategy(Strategy):
         return t, rounds, ppl
 
 
-class _ReplacementPool:
-    """Batched dispatch for the async loop: replacement client sessions are
-    planned AND resolved `block` at a time against the current server
-    version (outcome randomness depends only on (client_id, version), and
-    durations are start-time-shift-invariant, so resolving at relative
-    start 0 and shifting to the dispatch time is exact). When the version
-    advances, the not-yet-dispatched remainder is re-planned at the new
-    version — exactly what per-pop scalar dispatch would have done."""
+# async pool fields that only the window close needs (the expansion phase
+# works on slot/gen/end/ok alone, so these stay as per-generation blocks
+# and are concatenated once per window)
+_DEFERRED = ("cid", "ver", "start", "d", "c", "u", "bd", "bu",
+             "dev", "ctry", "out")
 
-    CHUNK = 256   # rows materialized into python tuples at a time
 
-    def __init__(self, sampler: SessionSampler, rng: np.random.Generator,
-                 population: int, block: int = 512):
-        self.sampler = sampler
-        self.rng = rng
-        self.population = population
-        self.block = block
-        self._ids = np.empty(0, np.int64)
-        self._version = -1
-        self._consumed = 0     # rows of the planned block handed out
-        self._mat = 0          # rows of the planned block materialized
-        self._batch = None
+def _async_rows(slots: np.ndarray, gens: np.ndarray, version: int,
+                batch: SessionBatch, ok: np.ndarray) -> Dict[str, np.ndarray]:
+    """One column block of dispatched async sessions (slot + generation
+    identify the session; everything else comes from ``resolve_batch``)."""
+    n = len(ok)
+    return dict(slot=np.asarray(slots, np.int64),
+                gen=np.asarray(gens, np.int64),
+                cid=batch.client_id,
+                ver=np.full(n, version, np.int64),
+                start=batch.start_t, end=batch.end_t,
+                d=batch.download_s, c=batch.compute_s, u=batch.upload_s,
+                bd=batch.bytes_down, bu=batch.bytes_up,
+                dev=batch.device_idx, ctry=batch.country_idx,
+                out=batch.outcome, ok=ok)
 
-    def _plan(self, version: int) -> None:
-        """(Re)plan the pending block at `version`. Not-yet-consumed ids
-        survive a version change and are re-resolved — exactly what per-pop
-        scalar dispatch at the new version would have produced. Fresh ids
-        are drawn `block` at a time; rows are materialized lazily in CHUNK
-        slices so a re-plan never pays tuple-building for rows it drops."""
-        ids = self._ids[self._consumed:]
-        if not len(ids):
-            ids = self.rng.integers(0, self.population, size=self.block)
-        self._ids = np.asarray(ids, np.int64)
-        self._version = version
-        self._consumed = 0
-        self._mat = 0
-        self._batch = self.sampler.resolve_batch(
-            self.sampler.plan_batch(self._ids, version), version, 0.0)
 
-    def chunk(self, version: int, used: int) -> List[tuple]:
-        """Report `used` rows consumed from the previous chunk, then return
-        the next chunk of rows — 11-tuples ``(cid, dev, ctry, download_s,
-        compute_s, upload_s, bytes_down, bytes_up, end_rel, outcome, ok)``
-        resolved at `version` with durations relative to dispatch time."""
-        self._consumed += used
-        if self._version != version or self._consumed >= len(self._ids):
-            self._plan(version)
-        b, ok = self._batch
-        lo, hi = self._mat, min(self._mat + self.CHUNK, len(self._ids))
-        self._mat = hi
-        return list(zip(
-            self._ids[lo:hi].tolist(), b.device_idx[lo:hi].tolist(),
-            b.country_idx[lo:hi].tolist(), b.download_s[lo:hi].tolist(),
-            b.compute_s[lo:hi].tolist(), b.upload_s[lo:hi].tolist(),
-            b.bytes_down[lo:hi].tolist(), b.bytes_up[lo:hi].tolist(),
-            b.end_t[lo:hi].tolist(), b.outcome[lo:hi].tolist(),
-            ok[lo:hi].tolist()))
+def _truncate_cancelled(flight: Dict[str, np.ndarray], idx: np.ndarray,
+                        t_final: float) -> Dict[str, np.ndarray]:
+    """In-flight sessions at task end: truncate the burned phases at the
+    final task clock (a device stops the moment the task is torn down),
+    prorate downlink bytes to the downloaded fraction, and zero uplink
+    bytes (the result never reached the server). Mirrored scalar-ly by the
+    reference oracle's flush — keep the two numerically identical."""
+    d, c, u = flight["d"][idx], flight["c"][idx], flight["u"][idx]
+    cap = np.maximum(0.0, t_final - flight["start"][idx])
+    nd = np.minimum(d, cap)
+    nc = np.minimum(c, np.maximum(0.0, cap - d))
+    nu = np.minimum(u, np.maximum(0.0, cap - d - c))
+    frac = np.divide(nd, d, out=np.zeros(len(idx)), where=d > 0)
+    return dict(download_s=nd, compute_s=nc, upload_s=nu,
+                bytes_down=flight["bd"][idx] * frac,
+                bytes_up=np.zeros(len(idx)),
+                end_t=np.minimum(flight["end"][idx], t_final))
 
 
 @register_strategy("async")
 class AsyncStrategy(Strategy):
     """FedBuff: always-`concurrency` in-flight clients, buffer size =
-    aggregation_goal, staleness-weighted aggregation. The event heap stays
-    (arrival order is inherently sequential) but sessions are planned and
-    resolved in batches and logged as one SessionBatch at the end."""
+    aggregation_goal, staleness-weighted aggregation — vectorized as a
+    window-batched exact merge (no event heap).
+
+    Two facts make the merge exact:
+
+    * arrivals are globally sorted by ``(end_t, slot, generation)``: every
+      dispatch happens at the then-current clock, so a replacement's end
+      never precedes its predecessor's — the old heap's pop order IS this
+      sort order;
+    * replacement *identity* is decoupled from pop *rank*: slot s draws
+      its g-th replacement id from a counter-based splitmix64 stream
+      (``slot_stream_ids``), so chained replacements inside a window can
+      be planned/resolved as arrays without knowing global arrival order
+      first (the circularity that previously forced per-pop dispatch).
+
+    Each window (the span between two server updates) resolves all
+    candidate arrivals columnar-ly, finds the update boundary with a
+    cumsum over ok flags (the ``aggregation_goal``-th ok arrival), and
+    expands chained replacements generation-by-generation until no
+    undiscovered arrival precedes the boundary. A speculative chain row
+    can never move the boundary wrongly: any row with key <= boundary has
+    its whole ancestor chain at strictly smaller keys, so the ancestors
+    all pop and the row is validly dispatched. Sessions still in flight
+    when the task ends are logged as ``cancelled``, truncated at the
+    final clock.
+    """
 
     def _loop(self, model_cfg, fed, learner, sampler, log, stop, on_round):
         assert fed.mode == "async"
         rng = np.random.default_rng(fed.seed + 2)
+        conc = fed.concurrency
+        goal = fed.aggregation_goal
+        seed = fed.seed
         t = 0.0
         version = 0
         ppl = float(model_cfg.vocab_size)
-        buffer: List[Tuple[int, int]] = []        # (client_id, version_sent)
-        # heap rows: (end_abs, counter, payload, start_abs, version_sent)
-        # where payload is the pool's 11-tuple (cid, dev, ctry, d, c, u,
-        # bdown, bup, end_rel, outcome_code, ok)
-        heap: List[tuple] = []
-        counter = 0
-        pool = _ReplacementPool(
-            sampler, rng, _POPULATION,
-            block=max(256, min(4096, 2 * fed.aggregation_goal)))
-        popped: List[tuple] = []       # heap rows, in arrival order
-        update_pops: List[int] = []    # len(popped) at each server update
-        # hot-loop locals (the pop loop runs once per session)
-        heappop, heappush = heapq.heappop, heapq.heappush
-        popped_append = popped.append
-        goal = fed.aggregation_goal
         max_t = stop.run.max_hours * 3600.0
-        max_rounds = stop.run.max_rounds
-        blk: List[tuple] = []
-        bpos = 0
-
-        # initial cohort: one batched plan/resolve with jittered starts
-        cohort = _select_cohort(rng, fed.concurrency, population=_POPULATION)
-        starts = rng.uniform(0, 5.0, size=fed.concurrency)
-        b0, ok0 = sampler.resolve_batch(
-            sampler.plan_batch(cohort, version), version, starts)
-        for end0, start0, payload in zip(
-                b0.end_t.tolist(), b0.start_t.tolist(),
-                zip(cohort.tolist(), b0.device_idx.tolist(),
-                    b0.country_idx.tolist(), b0.download_s.tolist(),
-                    b0.compute_s.tolist(), b0.upload_s.tolist(),
-                    b0.bytes_down.tolist(), b0.bytes_up.tolist(),
-                    b0.end_t.tolist(), b0.outcome.tolist(), ok0.tolist())):
-            heapq.heappush(heap, (end0, counter, payload, start0, version))
-            counter += 1
-
         is_real = getattr(learner, "real", True)
-        buf_append = buffer.append
-        blk_n = 0
-        if version >= max_rounds:
-            heap = []
-        while heap:
-            # the version budget can only trip right after an update, where
-            # it is checked before the loop resumes — only time stays here
-            if t >= max_t:
-                break
-            row = heappop(heap)
-            end = row[0]
-            if end > t:
-                t = end
-            popped_append(row)
-            payload = row[2]
-            if payload[10]:  # ok -> contributes to the aggregation buffer
-                buf_append((payload[0], row[4]))
-                if len(buffer) >= goal:
-                    if is_real:
-                        staleness = [version - v for _, v in buffer]
-                        deltas, weights = [], []
-                        for bc, bv in buffer:
-                            dd, w = learner.client_delta(bc, bv)
-                            deltas.append(dd)
-                            weights.append(w)
-                        kw_extra = {"staleness": staleness}
-                        mean_st = float(np.mean(staleness))
-                    else:
-                        deltas, weights, kw_extra = [None], [1.0], {}
-                        mean_st = version - (sum(v for _, v in buffer)
-                                             / len(buffer))
-                    learner.apply(deltas, weights,
-                                  n_contributors=len(buffer),
-                                  mean_staleness=mean_st, **kw_extra)
-                    buffer.clear()
-                    version += 1
-                    blk_n = bpos       # force a chunk refresh (new version)
-                    t += _SERVER_AGG_S
-                    update_pops.append(len(popped))
-                    ppl = learner.eval_perplexity()
-                    stop.update(ppl)
-                    log.log_round(t)
-                    log.log_eval(t, version, ppl, stop.smoothed or ppl)
-                    self._emit(on_round, len(popped), version, t,
-                               ppl, stop.smoothed or ppl)
-                    if stop.reached or stop.out_of_budget(t, version):
-                        break
-            # keep concurrency in-flight: replace this client immediately
-            # (inlined pool fast path: one pre-resolved row per dispatch;
-            # blk_n is forced to bpos on version bumps to refresh the chunk)
-            if bpos >= blk_n:
-                blk = pool.chunk(version, bpos)
-                blk_n = len(blk)
-                bpos = 0
-            r = blk[bpos]
-            bpos += 1
-            heappush(heap, (t + r[8], counter, r, t, version))
-            counter += 1
+        acc = BatchAccumulator(sampler.device_names, sampler.country_names)
 
-        if popped:
-            # transpose the arrival-ordered heap rows into columns; the
-            # server version at each arrival is recovered from the update
-            # boundaries (update_pops) instead of a per-pop append
-            end_c, _, payload_c, st_c, ver_c = zip(*popped)
-            (cid_c, dev_c, ctry_c, d_c, c_c, u_c, bd_c, bu_c, _,
-             out_c, _) = zip(*payload_c)
-            ver_sent = np.asarray(ver_c, np.int64)
-            ver_at_pop = np.searchsorted(
-                np.asarray(update_pops, np.int64),
-                np.arange(len(popped), dtype=np.int64), side="right")
-            log.log_batch(SessionBatch(
-                device_names=sampler.device_names,
-                country_names=sampler.country_names,
-                client_id=np.asarray(cid_c, np.int64),
-                round_idx=ver_sent,
-                device_idx=np.asarray(dev_c, np.int32),
-                country_idx=np.asarray(ctry_c, np.int32),
-                download_s=np.asarray(d_c),
-                compute_s=np.asarray(c_c),
-                upload_s=np.asarray(u_c),
-                bytes_down=np.asarray(bd_c),
-                bytes_up=np.asarray(bu_c),
-                start_t=np.asarray(st_c),
-                end_t=np.asarray(end_c),
-                outcome=np.asarray(out_c, np.int8),
-                staleness=(ver_at_pop - ver_sent).astype(np.int32)))
+        # initial cohort: one batched plan/resolve with jittered starts;
+        # slot s starts out running cohort[s] at generation 0
+        cohort = _select_cohort(rng, conc, population=_POPULATION)
+        starts0 = rng.uniform(0, 5.0, size=conc)
+        b0, ok0 = sampler.resolve_batch(sampler.plan_batch(cohort, version),
+                                        version, starts0)
+        flight = _async_rows(np.arange(conc, dtype=np.int64),
+                             np.zeros(conc, np.int64), version, b0, ok0)
+        alive = np.ones(conc, bool)
+
+        while True:
+            if t >= max_t or version >= stop.run.max_rounds:
+                break
+            t0 = t
+            # ---- expansion phase: discover this window's arrivals -------
+            # Chains are expanded against a cheap upper bound on the window
+            # end — the goal-th smallest ok end (a partition, not a sort)
+            # and/or the first end at/past the time budget. The bound only
+            # tightens as rows join, so "every unexpanded row sits past the
+            # bound" is a sound fixed point; the single exact lexsort below
+            # then settles the boundary.
+            slot_all, gen_all = flight["slot"], flight["gen"]
+            end_all, ok_all = flight["end"], flight["ok"]
+            parts: Dict[str, List[np.ndarray]] = \
+                {f: [flight[f]] for f in _DEFERRED}
+            succ = np.full(conc, -1, np.int64)   # row -> successor row
+            n_rows = conc
+            while True:
+                bound = np.inf
+                if int(np.count_nonzero(ok_all)) >= goal:
+                    bound = float(np.partition(end_all[ok_all],
+                                               goal - 1)[goal - 1])
+                over = end_all[end_all >= max_t]
+                if len(over):
+                    # the budget check runs before each pop against the
+                    # PREVIOUS arrival's clock, so the first arrival at/past
+                    # max_t still pops before the loop stops
+                    bound = min(bound, float(over.min()))
+                frontier = succ < 0
+                if not np.isinf(bound):
+                    frontier &= end_all <= bound
+                    if not frontier.any():
+                        break
+                need = np.nonzero(frontier)[0]
+                slots_n = slot_all[need]
+                gens_n = gen_all[need] + 1
+                ids_n = slot_stream_ids(seed, slots_n, gens_n, _POPULATION)
+                starts_n = np.maximum(t0, end_all[need])
+                bn, okn = sampler.resolve_batch(
+                    sampler.plan_batch(ids_n, version), version, starts_n)
+                succ[need] = n_rows + np.arange(len(need))
+                n_rows += len(need)
+                succ = np.concatenate(
+                    [succ, np.full(len(need), -1, np.int64)])
+                slot_all = np.concatenate([slot_all, slots_n])
+                gen_all = np.concatenate([gen_all, gens_n])
+                end_all = np.concatenate([end_all, bn.end_t])
+                ok_all = np.concatenate([ok_all, okn])
+                new = _async_rows(slots_n, gens_n, version, bn, okn)
+                for f in _DEFERRED:
+                    parts[f].append(new[f])
+            # ---- exact close: one lexsort settles the boundary ----------
+            order = np.lexsort((gen_all, slot_all, end_all))
+            ends_sorted = end_all[order]
+            cum = np.cumsum(ok_all[order])
+            b_pos = int(np.searchsorted(cum, goal)) \
+                if cum[-1] >= goal else -1
+            cut = int(np.searchsorted(ends_sorted, max_t, side="left"))
+            if 0 <= b_pos <= cut:
+                pops_to, closes = b_pos, "update"
+            else:
+                pops_to, closes = cut, "budget"   # cut < n_rows: bound was
+            pop_idx = order[:pops_to + 1]         # finite via max_t
+            # every pop precedes the bound, so its chain was expanded
+            assert succ[pop_idx].min() >= 0
+            A = {"slot": slot_all, "gen": gen_all,
+                 "end": end_all, "ok": ok_all,
+                 **{f: np.concatenate(p) if len(p) > 1 else p[0]
+                    for f, p in parts.items()}}
+            # ---- log pops, advance per-slot chains ----------------------
+            okm = A["ok"][pop_idx]
+            acc.append(client_id=A["cid"][pop_idx],
+                       round_idx=A["ver"][pop_idx],
+                       device_idx=A["dev"][pop_idx],
+                       country_idx=A["ctry"][pop_idx],
+                       download_s=A["d"][pop_idx],
+                       compute_s=A["c"][pop_idx],
+                       upload_s=A["u"][pop_idx],
+                       bytes_down=A["bd"][pop_idx],
+                       bytes_up=A["bu"][pop_idx],
+                       start_t=A["start"][pop_idx],
+                       end_t=A["end"][pop_idx],
+                       outcome=A["out"][pop_idx],
+                       staleness=version - A["ver"][pop_idx])
+            # per-slot chain tip among the pops -> its successor goes
+            # in-flight (fancy-index write is made unique by the tip mask)
+            sl, gn = A["slot"][pop_idx], A["gen"][pop_idx]
+            best = np.full(conc, -1, np.int64)
+            np.maximum.at(best, sl, gn)
+            is_tip = gn == best[sl]
+            tip_slots = sl[is_tip]
+            repl_rows = succ[pop_idx[is_tip]]
+            for f in flight:
+                flight[f][tip_slots] = A[f][repl_rows]
+            if closes == "budget":
+                t = max(t0, float(ends_sorted[pops_to]))
+                break
+            # ---- server update at the boundary arrival ------------------
+            b_row = int(pop_idx[-1])
+            vers_ok = A["ver"][pop_idx][okm]
+            if is_real:
+                staleness = (version - vers_ok).tolist()
+                deltas, weights = [], []
+                for bc, bv in zip(A["cid"][pop_idx][okm].tolist(),
+                                  vers_ok.tolist()):
+                    dd, w = learner.client_delta(bc, bv)
+                    deltas.append(dd)
+                    weights.append(w)
+                kw_extra = {"staleness": staleness}
+                mean_st = float(np.mean(staleness))
+            else:
+                deltas, weights, kw_extra = [None], [1.0], {}
+                mean_st = version - (vers_ok.sum() / len(vers_ok))
+            learner.apply(deltas, weights, n_contributors=len(vers_ok),
+                          mean_staleness=mean_st, **kw_extra)
+            version += 1
+            t = max(t0, float(A["end"][b_row])) + _SERVER_AGG_S
+            ppl = learner.eval_perplexity()
+            stop.update(ppl)
+            log.log_round(t)
+            log.log_eval(t, version, ppl, stop.smoothed or ppl)
+            self._emit(on_round, len(acc), version, t, ppl,
+                       stop.smoothed or ppl)
+            b_slot = int(A["slot"][b_row])
+            if stop.reached or stop.out_of_budget(t, version):
+                alive[b_slot] = False   # its replacement never went out
+                break
+            # the boundary slot's replacement goes out AFTER the update,
+            # against the new model version (same slot-stream id either way)
+            b_gen = int(A["gen"][b_row]) + 1
+            nid = slot_stream_ids(seed, [b_slot], [b_gen], _POPULATION)
+            b1, okb = sampler.resolve_batch(
+                sampler.plan_batch(nid, version), version, t)
+            row = _async_rows(np.asarray([b_slot], np.int64),
+                              np.asarray([b_gen], np.int64), version, b1, okb)
+            for f in flight:
+                flight[f][b_slot] = row[f][0]
+
+        # ---- task end: in-flight sessions are logged as cancelled -------
+        idx = np.nonzero(alive)[0]
+        if len(idx):
+            acc.append(client_id=flight["cid"][idx],
+                       round_idx=flight["ver"][idx],
+                       device_idx=flight["dev"][idx],
+                       country_idx=flight["ctry"][idx],
+                       start_t=flight["start"][idx],
+                       outcome=np.full(len(idx), OUTCOME_CODE["cancelled"],
+                                       np.int8),
+                       staleness=version - flight["ver"][idx],
+                       **_truncate_cancelled(flight, idx, t))
+        if len(acc):
+            log.log_batch(acc.to_batch())
         return t, version, ppl
 
 

@@ -83,13 +83,28 @@ def test_register_strategy_decorator():
 
 
 def test_run_task_shim_warns_and_matches_api():
-    import warnings
     from repro.federated import SurrogateLearner, run_task
     spec = _spec(conc=30)
     cfg = spec.model.resolve()
     with pytest.warns(DeprecationWarning):
         tr = run_task(cfg, spec.federated, spec.run,
                       SurrogateLearner(cfg, spec.federated, spec.run))
+    assert tr.summary() == Experiment(spec).run().summary()
+
+
+@pytest.mark.parametrize("shim_name,mode", [("run_sync", "sync"),
+                                            ("run_async", "async")])
+def test_run_sync_async_shims_warn_and_match_api(shim_name, mode):
+    """The pre-`repro.api` free functions survive only as deprecated
+    shims: they must warn and reproduce the Experiment result exactly."""
+    import repro.federated as fed_pkg
+    from repro.federated import SurrogateLearner
+    spec = _spec(mode=mode, conc=30, max_rounds=40)
+    cfg = spec.model.resolve()
+    shim = getattr(fed_pkg, shim_name)
+    with pytest.warns(DeprecationWarning, match=shim_name):
+        tr = shim(cfg, spec.federated, spec.run,
+                  SurrogateLearner(cfg, spec.federated, spec.run))
     assert tr.summary() == Experiment(spec).run().summary()
 
 
@@ -115,6 +130,34 @@ def test_callback_ordering(mode):
         assert b.n_sessions >= a.n_sessions
     assert calls[0][1] is spec
     assert calls[-1][1].summary() == res.summary()
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_round_event_fields(mode):
+    """RoundEvent is the streaming contract: every field must be populated
+    and internally consistent on both strategies."""
+    from repro.federated import RoundEvent
+    spec = _spec(mode=mode, conc=25, max_rounds=20)
+    events = []
+    res = Experiment(spec).run(on_round=events.append)
+    assert events and all(isinstance(ev, RoundEvent) for ev in events)
+    for ev in events:
+        assert ev.mode == mode
+        assert ev.t_s > 0.0
+        assert ev.perplexity > 0.0
+        assert ev.smoothed_perplexity > 0.0
+        assert 0 < ev.n_sessions <= res.log.n_sessions
+    # the last event matches the final result (modulo the cancelled
+    # sessions flushed after the final update)
+    last = events[-1]
+    assert last.round_idx == res.rounds
+    assert last.t_s == pytest.approx(res.duration_h * 3600.0)
+    assert last.smoothed_perplexity == pytest.approx(
+        res.smoothed_perplexity)
+    # smoothing is an EWMA of the raw stream: first event's smoothed value
+    # equals its raw perplexity
+    assert events[0].smoothed_perplexity == pytest.approx(
+        events[0].perplexity)
 
 
 # ------------------------------------------------------------ environment
