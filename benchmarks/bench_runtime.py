@@ -30,6 +30,31 @@ maximum chained-replacement pressure on the window-batched merge).
 Both engines are fully vectorized: sync closes rounds with a partition
 on end_t; async runs the window-batched merge over per-slot
 replacement-id streams (PR 3) instead of a per-session event heap.
+
+Artifact schemas
+----------------
+
+``BENCH_runtime.json`` (repo root) is a book with one section per
+workload so CI quick runs never clobber the full baseline:
+
+* ``"full"`` / ``"quick"`` — this benchmark: ``workload`` (the swept
+  points), ``columnar`` and ``scalar`` engine sections (each with
+  ``per_mode{sync,async} -> {sessions, wall_s, sessions_per_s, rounds,
+  carbon_total_kg}`` plus the pooled ``sessions/wall_s/sessions_per_s``),
+  ``speedup`` and ``speedup_per_mode``; full runs add ``async_stress``.
+* ``"sweep"`` — ``benchmarks/bench_sweep.py``: per key ("quick"/"full")
+  the design-space grid size (``points``), ``serial`` and ``lane``
+  sections (``wall_s``, ``points_per_s``, ``sessions``) and
+  ``speedup_vs_serial`` (lane-batched vs ``sweep(workers=1)``).
+
+``BENCH_history.json`` (repo root) is the append-only trajectory: one
+row per passing bench run, ``{ts, workload, host: {cpus, numpy},
+...bench-specific throughput fields}`` — ``workload`` is
+"quick"/"full" for this benchmark and "sweep-quick"/"sweep-full" for
+the sweep benchmark. The per-run regression gates are deliberately
+loose 2x cliffs (baselines are wall-clock on whatever box last passed);
+the history rows, with their host metadata, are what make slow drift
+visible and gates comparable across machines.
 """
 from __future__ import annotations
 
@@ -164,10 +189,16 @@ def check_regression(fresh: Dict, baseline: Dict) -> int:
     return status
 
 
-def append_history(key: str, fresh: Dict, path: str) -> None:
-    """One trajectory row per successful run: the per-mode throughputs and
-    speedups, so regressions that stay inside the 2x gate are still
-    visible across PRs."""
+def host_meta() -> Dict:
+    """Host metadata stamped on every history row, so throughput gates
+    stay comparable across boxes (a 2-core CI runner and a 32-core dev
+    machine should never be read as a regression of each other)."""
+    import numpy
+    return {"cpus": os.cpu_count(), "numpy": numpy.__version__}
+
+
+def append_history_row(row: Dict, path: str) -> None:
+    """Append one trajectory row (shared by bench_runtime/bench_sweep)."""
     history: List[Dict] = []
     if os.path.exists(path):
         try:
@@ -179,9 +210,20 @@ def append_history(key: str, fresh: Dict, path: str) -> None:
             print(f"bench: WARNING — {os.path.relpath(path)} was corrupt; "
                   "restarting the trajectory")
             history = []
+    history.append(row)
+    with open(path, "w") as f:
+        json.dump(history, f, indent=1)
+        f.write("\n")
+
+
+def append_history(key: str, fresh: Dict, path: str) -> None:
+    """One trajectory row per successful run: the per-mode throughputs and
+    speedups, so regressions that stay inside the 2x gate are still
+    visible across PRs."""
     row = {
         "ts": round(time.time(), 1),
         "workload": key,
+        "host": host_meta(),
         "columnar_sessions_per_s": fresh["columnar"]["sessions_per_s"],
         "scalar_sessions_per_s": fresh["scalar"]["sessions_per_s"],
         "per_mode": {m: v["sessions_per_s"]
@@ -192,10 +234,7 @@ def append_history(key: str, fresh: Dict, path: str) -> None:
     if "async_stress" in fresh:
         row["async_stress_sessions_per_s"] = \
             fresh["async_stress"]["sessions_per_s"]
-    history.append(row)
-    with open(path, "w") as f:
-        json.dump(history, f, indent=1)
-        f.write("\n")
+    append_history_row(row, path)
 
 
 def main() -> int:

@@ -1,0 +1,172 @@
+"""Design-space sweep throughput: lane-batched engine vs serial sweep.
+
+The paper's headline deliverables are design-space grids (Fig. 1 carbon
+vs time, Fig. 7 concurrency, Fig. 10 async design space) — dozens of
+*small* runs, the regime where per-call fixed costs dominate the
+columnar engine and a process pool caps out near the core count. This
+benchmark runs one quick fig1-style grid (concurrency x client_lr x
+local_epochs, sync AND async so both lane engines are exercised) two
+ways:
+
+* **serial** — ``repro.api.sweep(specs, workers=1)``: one
+  ``Experiment(spec).run()`` after another (the pre-lane baseline);
+* **lane** — ``sweep(specs, vectorize=True, workers=1)``: the specs
+  grouped into lane packs and advanced in lockstep as one columnar
+  simulation per mode (PR 4).
+
+The two sides must produce **identical** summaries (the lane engine is
+seed-for-seed exact, enforced here and in tests/test_lanes.py), so
+points/sec is an apples-to-apples measure of the same simulated sweep.
+Results land under the ``"sweep"`` key of ``BENCH_runtime.json`` (see
+``benchmarks/bench_runtime.py`` for both artifact schemas) and every
+passing run appends a ``sweep-quick``/``sweep-full`` row to
+``BENCH_history.json``. ``--check`` fails on a >2x lane-throughput
+regression against the committed baseline (the same loose-cliff gate
+the runtime bench uses).
+
+    PYTHONPATH=src python benchmarks/bench_sweep.py [--quick] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+try:
+    from benchmarks.bench_runtime import (BENCH_PATH, HISTORY_PATH,
+                                          REGRESSION_FACTOR,
+                                          append_history_row, host_meta)
+except ImportError:      # run as `python benchmarks/bench_sweep.py`
+    from bench_runtime import (BENCH_PATH, HISTORY_PATH, REGRESSION_FACTOR,
+                               append_history_row, host_meta)
+from repro.api import ExperimentSpec, ModelRef, sweep
+from repro.configs import FederatedConfig, RunConfig, get_config
+
+
+def grid_specs(quick: bool) -> List[ExperimentSpec]:
+    """A fig1-style design grid over both event loops. Quick keeps the
+    runs small (low concurrency, wide lr axis, capped rounds) so CI
+    measures dispatch overhead — exactly the many-small-runs regime lane
+    batching amortizes; full sweeps the paper-scale concurrencies to
+    convergence."""
+    concs = (25, 50) if quick else (50, 100, 200, 400)
+    lrs = (0.003, 0.01, 0.03, 0.1, 0.3, 1.0) if quick \
+        else (0.01, 0.03, 0.1, 0.3)
+    run_kw: Dict = dict(target_perplexity=175.0)
+    if quick:
+        run_kw["max_rounds"] = 150
+    return [ExperimentSpec(
+                model=ModelRef("paper-charlm"),
+                federated=FederatedConfig(
+                    mode=mode, concurrency=conc,
+                    aggregation_goal=int(conc * 0.8),
+                    client_lr=lr, local_epochs=ep),
+                run=RunConfig(**run_kw), learner="surrogate")
+            for mode in ("sync", "async")
+            for conc in concs
+            for lr in lrs
+            for ep in (1, 3)]
+
+
+def run_bench(quick: bool) -> Dict:
+    specs = grid_specs(quick)
+    get_config("paper-charlm").param_count()   # warm the jax shape cache
+    # warm both paths on a small prefix (allocator, import, lane buffers)
+    # so the timed sections compare engines, not first-touch costs
+    sweep(specs[:4], workers=1)
+    sweep(specs[:4], workers=1, vectorize=True)
+    # best-of-N walls: the lane side is sub-second, so a single stray
+    # scheduler stall (shared CI hosts steal whole cores for stretches)
+    # would dominate its measurement; both sides get the same treatment
+    reps = 3 if quick else 1
+    wall_serial = wall_lane = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        serial = sweep(specs, workers=1)
+        wall_serial = min(wall_serial, time.time() - t0)
+        t0 = time.time()
+        lane = sweep(specs, workers=1, vectorize=True)
+        wall_lane = min(wall_lane, time.time() - t0)
+    # the lane engine must simulate the identical sweep, seed for seed
+    for rs, rl in zip(serial, lane):
+        assert rs.summary() == rl.summary(), (rs.spec.federated,
+                                              rs.summary(), rl.summary())
+    sessions = sum(r.log.n_sessions for r in serial)
+    n = len(specs)
+    return {
+        "workload": {"style": "fig1+fig10 design grid", "quick": quick,
+                     "points": n,
+                     "modes": ["sync", "async"]},
+        "points": n,
+        "sessions": sessions,
+        "serial": {"wall_s": round(wall_serial, 4),
+                   "points_per_s": round(n / max(wall_serial, 1e-9), 3),
+                   "sessions_per_s": round(sessions
+                                           / max(wall_serial, 1e-9))},
+        "lane": {"wall_s": round(wall_lane, 4),
+                 "points_per_s": round(n / max(wall_lane, 1e-9), 3),
+                 "sessions_per_s": round(sessions / max(wall_lane, 1e-9))},
+        "speedup_vs_serial": round(wall_serial / max(wall_lane, 1e-9), 2),
+    }
+
+
+def check_regression(fresh: Dict, baseline: Dict) -> int:
+    """Exit 1 if lane-batched sweep throughput regressed more than
+    REGRESSION_FACTOR against the committed baseline for this grid."""
+    old = baseline.get("lane", {}).get("points_per_s", 0)
+    new = fresh["lane"]["points_per_s"]
+    if old and new * REGRESSION_FACTOR < old:
+        print(f"bench_sweep: REGRESSION — lane {new} points/s vs baseline "
+              f"{old} (>{REGRESSION_FACTOR}x slower)")
+        return 1
+    print(f"bench_sweep: lane {new} points/s vs baseline {old} — ok "
+          f"(speedup vs serial: {fresh['speedup_vs_serial']}x)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small grid for CI (conc<=100, capped rounds)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on >2x lane-throughput regression")
+    ap.add_argument("--out", default=BENCH_PATH)
+    ap.add_argument("--history", default=HISTORY_PATH)
+    args = ap.parse_args()
+
+    book: Dict = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            book = json.load(f)
+    key = "quick" if args.quick else "full"
+    fresh = run_bench(args.quick)
+    baseline = book.get("sweep", {}).get(key, {})
+    status = check_regression(fresh, baseline) if args.check else 0
+    if status == 0:
+        # a failed gate keeps the old baseline, so a rerun can't self-pass
+        book.setdefault("sweep", {})[key] = fresh
+        with open(args.out, "w") as f:
+            json.dump(book, f, indent=1)
+            f.write("\n")
+        append_history_row({
+            "ts": round(time.time(), 1),
+            "workload": f"sweep-{key}",
+            "host": host_meta(),
+            "points": fresh["points"],
+            "serial_points_per_s": fresh["serial"]["points_per_s"],
+            "lane_points_per_s": fresh["lane"]["points_per_s"],
+            "speedup_vs_serial": fresh["speedup_vs_serial"],
+        }, args.history)
+    print(json.dumps({k: fresh[k] for k in
+                      ("points", "speedup_vs_serial")}, indent=1))
+    wrote = f"wrote {os.path.relpath(args.out)}" if status == 0 \
+        else "baseline kept (gate failed)"
+    print(f"[sweep-{key}] lane: {fresh['lane']['points_per_s']} points/s "
+          f"({fresh['speedup_vs_serial']}x vs serial) | {wrote}")
+    return status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,9 +1,13 @@
 """Shared benchmark helpers: parallel grid runner + CSV emission.
 
 Sweeps go through ``repro.api.sweep`` — build the specs with
-``make_spec``, run them all with ``run_points(points, workers=N)`` (a
-process-pool fan-out; ``workers=1`` for serial), and get back the same
-flat summary rows ``run_point`` produces."""
+``make_spec``, run them all with ``run_points(points, workers=N)``, and
+get back the same flat summary rows ``run_point`` produces. By default
+compatible points are lane-batched (``sweep(..., vectorize=True)``, PR
+4) and the packs fan out across a process pool; results are
+seed-for-seed identical to per-point serial runs either way. Set
+``BENCH_VECTORIZE=0`` to force the pre-lane per-spec pool and
+``BENCH_WORKERS=N`` to bound the pool."""
 from __future__ import annotations
 
 import csv
@@ -23,6 +27,9 @@ MODEL = ModelRef("paper-charlm")
 
 # benchmark-wide worker count: BENCH_WORKERS env var, default all cores
 WORKERS = int(os.environ.get("BENCH_WORKERS", "0")) or None
+# lane-batch compatible sweep points by default (BENCH_VECTORIZE=0 opts out)
+VECTORIZE = os.environ.get("BENCH_VECTORIZE", "1").lower() \
+    not in ("0", "false", "no")
 
 
 def make_spec(run: RunConfig | None = None,
@@ -60,12 +67,15 @@ def run_point(run: RunConfig | None = None,
 
 def run_points(points: Sequence[Dict], run: RunConfig | None = None,
                environment: Environment | None = None,
-               workers: Optional[int] = WORKERS) -> List[Dict[str, float]]:
+               workers: Optional[int] = WORKERS,
+               vectorize: bool = VECTORIZE) -> List[Dict[str, float]]:
     """Run a list of sweep points (dicts of FederatedConfig overrides; a
-    point may carry its own "run"=RunConfig) across a process pool."""
+    point may carry its own "run"=RunConfig) — lane-batched by default,
+    with packs fanned out across a process pool."""
     specs = [make_spec(p.pop("run", None) or run, environment, **p)
              for p in (dict(p) for p in points)]
-    return [point_row(r) for r in sweep(specs, workers=workers)]
+    return [point_row(r)
+            for r in sweep(specs, workers=workers, vectorize=vectorize)]
 
 
 def grid(**axes: Sequence) -> Iterable[Dict]:

@@ -14,21 +14,29 @@
 # columnar engine's quick sessions/sec regressed more than 2x against the
 # recorded baseline — overall or in either mode (sync and async are gated
 # separately).
+#
+# Step 4 runs the quick design-space sweep benchmark (lane-batched packs
+# vs sweep(workers=1) serial; summaries must match seed-for-seed) and
+# FAILS on a >2x lane-throughput regression against the recorded
+# baseline under BENCH_runtime.json's "sweep" key.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== smoke 1/3: tier-1 test suite =="
+echo "== smoke 1/4: tier-1 test suite =="
 python -m pytest -x -q
 
-echo "== smoke 2/3: ExperimentSpec JSON dry-runs (with round-trip check) =="
+echo "== smoke 2/4: ExperimentSpec JSON dry-runs (with round-trip check) =="
 python -m repro.api examples/specs/charlm_sync_small.json \
     --roundtrip-check --quiet
 python -m repro.api examples/specs/charlm_async_small.json \
     --roundtrip-check --quiet
 
-echo "== smoke 3/3: runtime benchmark (quick, per-mode 2x regression gate) =="
+echo "== smoke 3/4: runtime benchmark (quick, per-mode 2x regression gate) =="
 python benchmarks/bench_runtime.py --quick --check
+
+echo "== smoke 4/4: sweep benchmark (quick, lane 2x regression gate) =="
+python benchmarks/bench_sweep.py --quick --check
 
 echo "smoke OK"

@@ -16,11 +16,12 @@ from repro.api.environment import Environment
 from repro.api.experiment import Experiment, Result, run_spec
 from repro.api.spec import ExperimentSpec, ModelRef
 from repro.api.sweep import sweep
-from repro.federated.runtime import (STRATEGIES, RoundEvent, Strategy,
-                                     get_strategy, register_strategy)
+from repro.federated.runtime import (STRATEGIES, LaneRunner, LaneTask,
+                                     RoundEvent, Strategy, get_strategy,
+                                     register_strategy)
 
 __all__ = [
-    "Environment", "Experiment", "ExperimentSpec", "ModelRef", "Result",
-    "RoundEvent", "STRATEGIES", "Strategy", "get_strategy",
-    "register_strategy", "run_spec", "sweep",
+    "Environment", "Experiment", "ExperimentSpec", "LaneRunner", "LaneTask",
+    "ModelRef", "Result", "RoundEvent", "STRATEGIES", "Strategy",
+    "get_strategy", "register_strategy", "run_spec", "sweep",
 ]

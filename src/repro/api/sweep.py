@@ -1,7 +1,8 @@
 """`repro.api.sweep` — run independent ExperimentSpecs across a process
-pool.
+pool, or lane-batched as a handful of columnar simulations.
 
     results = sweep([spec_a, spec_b, ...], workers=8)
+    results = sweep(specs, vectorize=True)      # lane-batched packs
 
 Every spec is self-contained and JSON-serializable (that was the point of
 the `repro.api` layer), so a sweep is embarrassingly parallel: each worker
@@ -13,17 +14,53 @@ caller in completion order for progress display.
 `workers=None` picks min(n_specs, cpu_count); `workers<=1` (or a single
 spec) runs serially in-process — no pool, no pickling — which is also the
 fallback when a pool cannot be spawned (restricted environments).
+
+Lane-batched mode (``vectorize=True``)
+--------------------------------------
+
+Design-space sweeps are dozens-to-hundreds of *small* runs, exactly where
+the per-call fixed cost of small columnar dispatches dominates and a
+process pool caps out near the core count. ``vectorize=True`` groups
+compatible specs into *lane packs* and advances each pack in lockstep as
+ONE columnar simulation (`repro.federated.runtime.LaneRunner`): sampler
+draws become (lane, batch)-shaped arrays keyed per lane, telemetry lands
+in one lane-columnar store, and the estimator reduces per-lane segments.
+
+Pack-compatibility rules — specs pack together iff they share:
+
+* ``federated.mode`` (one lockstep window shape per pack), where the
+  registered strategy implements ``lane_loop`` ("sync" and "async" do;
+  custom strategies without it run per-spec);
+* ``learner == "surrogate"`` (a real JAX learner gains nothing from
+  lockstep batching; real-learner specs run per-spec).
+
+Everything else may differ per lane: concurrency, aggregation goal,
+seeds, model size, run budgets, and every ``Environment`` knob (fleet,
+country mix, bandwidths, intensity tables, network model, PUE). Results
+are **seed-for-seed identical** to per-spec serial runs — same summary
+scalars, same session columns — because lanes share no RNG state (all
+randomness is counter-keyed on each lane's own seed).
+
+With ``workers > 1`` each pack is chunked into up to ``workers``
+sub-packs that fan out across the process pool, so lane batching and
+multi-core parallelism compose (a chunk still amortizes dispatch over
+its lanes); pool failures fall back to running the remaining jobs
+serially in-process, delivering ``on_result`` exactly once per spec
+either way.
 """
 from __future__ import annotations
 
 import os
+import time
 from concurrent.futures import BrokenExecutor
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.api.experiment import Result, run_spec
+from repro.api.experiment import Experiment, Result, run_spec
 from repro.api.spec import ExperimentSpec
 
 ResultCallback = Callable[[int, Result], None]
+
+_POOL_ERRORS = (ImportError, OSError, PermissionError, BrokenExecutor)
 
 
 class _TaskFailed(Exception):
@@ -37,65 +74,166 @@ class _TaskFailed(Exception):
         self.error = error
 
 
-def _run_spec_safe(spec: ExperimentSpec):
-    try:
-        return ("ok", run_spec(spec))
-    except Exception as e:                       # noqa: BLE001
-        return ("err", e)
-
-
 def _n_workers(n_specs: int, workers: Optional[int]) -> int:
     if workers is None:
         workers = os.cpu_count() or 1
     return max(1, min(int(workers), n_specs))
 
 
+# ---------------------------------------------------------------------------
+# Lane packs
+# ---------------------------------------------------------------------------
+
+def _pack_key(spec: ExperimentSpec) -> Optional[str]:
+    """Lane-pack compatibility key, or None when the spec must run
+    per-spec (see the module docstring for the rules). A strategy joins
+    packs only by defining ``lane_loop`` on ITSELF: a registered subclass
+    that overrides ``_loop`` but inherits the parent's ``lane_loop``
+    would be silently lane-batched with the parent's semantics, breaking
+    the lane==serial invariant — so inheritance does not opt in."""
+    if spec.learner != "surrogate":
+        return None
+    from repro.federated.runtime import STRATEGIES
+    mode = spec.federated.mode
+    cls = STRATEGIES.get(mode)
+    if cls is None or "lane_loop" not in cls.__dict__:
+        return None
+    return mode
+
+
+def _group_packs(specs: Sequence[ExperimentSpec]
+                 ) -> List[Tuple[str, List[int]]]:
+    """Partition spec indices into jobs: ("pack", [i...]) lane packs and
+    ("spec", [i]) per-spec leftovers, preserving first-seen order."""
+    packs: Dict[str, List[int]] = {}
+    jobs: List[Tuple[str, List[int]]] = []
+    for idx, spec in enumerate(specs):
+        key = _pack_key(spec)
+        if key is None:
+            jobs.append(("spec", [idx]))
+        elif key in packs:
+            packs[key].append(idx)
+        else:
+            packs[key] = [idx]
+            jobs.append(("pack", packs[key]))
+    return jobs
+
+
+def _chunk_packs(jobs: List[Tuple[str, List[int]]],
+                 n_chunks: int) -> List[Tuple[str, List[int]]]:
+    """Split each lane pack into up to ``n_chunks`` sub-packs so packs
+    fan out across the process pool instead of pinning one core per mode
+    (each chunk keeps enough lanes to amortize dispatch; lanes are
+    independent, so any partition is equivalence-preserving)."""
+    if n_chunks <= 1:
+        return jobs
+    out: List[Tuple[str, List[int]]] = []
+    for kind, idxs in jobs:
+        if kind != "pack" or len(idxs) <= 1:
+            out.append((kind, idxs))
+            continue
+        size = -(-len(idxs) // min(n_chunks, len(idxs)))   # ceil division
+        out.extend(("pack", idxs[i:i + size])
+                   for i in range(0, len(idxs), size))
+    return out
+
+
+def _run_pack(specs: List[ExperimentSpec]) -> List[Result]:
+    """Run one lane pack through LaneRunner; Results in pack order.
+    ``wall_s`` records each lane's amortized share of the pack wall."""
+    from repro.federated.runtime import LaneRunner, LaneTask
+    t0 = time.time()
+    tasks = []
+    for spec in specs:
+        exp = Experiment(spec)
+        cfg = exp.model_config
+        env = spec.environment
+        tasks.append(LaneTask(
+            model_cfg=cfg, fed=spec.federated, run=spec.run,
+            learner=exp.build_learner(),
+            sampler=env.sampler(cfg, spec.federated, spec.seq_len),
+            estimator=env.estimator()))
+    trs = LaneRunner(specs[0].federated.mode).run(tasks)
+    wall = (time.time() - t0) / len(specs)
+    return [Result.from_task_result(spec, tr, wall_s=wall)
+            for spec, tr in zip(specs, trs)]
+
+
+def _run_job(kind: str, specs: List[ExperimentSpec]) -> List[Result]:
+    if kind == "pack":
+        return _run_pack(specs)
+    return [run_spec(specs[0])]
+
+
+def _run_job_safe(kind: str, specs: List[ExperimentSpec]):
+    try:
+        return ("ok", _run_job(kind, specs))
+    except Exception as e:                       # noqa: BLE001
+        return ("err", e)
+
+
+# ---------------------------------------------------------------------------
+# The sweep entry point
+# ---------------------------------------------------------------------------
+
 def sweep(specs: Sequence[ExperimentSpec], workers: Optional[int] = None,
-          on_result: Optional[ResultCallback] = None) -> List[Result]:
+          on_result: Optional[ResultCallback] = None,
+          vectorize: bool = False) -> List[Result]:
     """Run every spec; return Results in spec order.
 
     on_result(index, result) fires in completion order as workers finish
-    (or after each run when serial)."""
+    (or after each run/pack when serial). ``vectorize=True`` lane-batches
+    compatible specs into lockstep packs (see module docstring); the
+    per-spec path is the degenerate one-spec-per-job case of the same
+    machinery."""
     specs = list(specs)
     if not specs:
         return []
+    if vectorize:
+        jobs = _chunk_packs(_group_packs(specs),
+                            _n_workers(len(specs), workers))
+    else:
+        jobs = [("spec", [i]) for i in range(len(specs))]
     results: List[Optional[Result]] = [None] * len(specs)
-    n = _n_workers(len(specs), workers)
-    if n > 1 and len(specs) > 1:
+
+    def deliver(idxs: List[int], rs: List[Result]) -> None:
+        for i, r in zip(idxs, rs):
+            results[i] = r
+            if on_result is not None:
+                on_result(i, r)
+
+    n = _n_workers(len(jobs), workers)
+    if n > 1 and len(jobs) > 1:
         try:
-            _sweep_pool(specs, n, results, on_result)
+            _sweep_pool(jobs, specs, n, deliver)
         except _TaskFailed as tf:
             raise tf.error                # an experiment itself failed
-        except (ImportError, OSError, PermissionError, BrokenExecutor) as e:
+        except _POOL_ERRORS as e:
             # restricted environments (no /dev/shm, no fork / broken pool)
-            # fall back to serial — only for the specs the pool never
+            # fall back to in-process — only for the jobs the pool never
             # finished, so on_result fires exactly once per spec
             import warnings
             done = sum(r is not None for r in results)
             warnings.warn(
                 f"sweep: process pool unavailable ({e!r}); running the "
-                f"remaining {len(specs) - done}/{len(specs)} specs serially",
-                RuntimeWarning, stacklevel=2)
-    for i, spec in enumerate(specs):
-        if results[i] is None:
-            results[i] = run_spec(spec)
-            if on_result is not None:
-                on_result(i, results[i])
+                f"remaining {len(specs) - done}/{len(specs)} specs "
+                "in-process", RuntimeWarning, stacklevel=2)
+    for kind, idxs in jobs:
+        if results[idxs[0]] is None:      # packs deliver all-or-nothing
+            deliver(idxs, _run_job(kind, [specs[i] for i in idxs]))
     return results  # type: ignore[return-value]
 
 
-def _sweep_pool(specs: List[ExperimentSpec], n: int,
-                results: List[Optional[Result]],
-                on_result: Optional[ResultCallback]) -> None:
+def _sweep_pool(jobs: List[Tuple[str, List[int]]],
+                specs: List[ExperimentSpec], n: int,
+                deliver: Callable[[List[int], List[Result]], None]) -> None:
     from concurrent.futures import ProcessPoolExecutor, as_completed
     with ProcessPoolExecutor(max_workers=n) as pool:
-        futures = {pool.submit(_run_spec_safe, spec): i
-                   for i, spec in enumerate(specs)}
+        futures = {pool.submit(_run_job_safe, kind,
+                               [specs[i] for i in idxs]): idxs
+                   for kind, idxs in jobs}
         for fut in as_completed(futures):
-            i = futures[fut]
             status, payload = fut.result()
             if status == "err":
                 raise _TaskFailed(payload)
-            results[i] = payload
-            if on_result is not None:
-                on_result(i, results[i])
+            deliver(futures[fut], payload)

@@ -13,7 +13,7 @@ client). Dropped / timed-out sessions are charged for whatever they burned.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -85,35 +85,29 @@ class CarbonEstimator:
 
     def batch_carbon(self, b: SessionBatch) -> Dict[str, float]:
         """Fig. 5 component sums for a whole SessionBatch via group-by-
-        device/country array reductions (no per-session loop)."""
+        device/country array reductions (no per-session loop). The three
+        component energies land in one (3, n) matrix so the grid-intensity
+        conversion is a single fused pass instead of three, and dropped/
+        timed-out/cancelled rows need no masks — their truncated durations
+        and prorated bytes already carry the burned-energy accounting."""
         if not len(b):
             return {"client_compute_kg": 0.0, "upload_kg": 0.0,
                     "download_kg": 0.0}
-        profs = [self.profiles[n] for n in b.device_names]
-        cpu_w = np.asarray([p.cpu_power_w for p in profs])[b.device_idx]
-        tx_w = np.asarray([p.wifi_tx_power_w for p in profs])[b.device_idx]
-        rx_w = np.asarray([p.wifi_rx_power_w for p in profs])[b.device_idx]
-        ci = np.asarray([self.intensity.intensity(c)
-                         for c in b.country_names])[b.country_idx]
-        epb = self.network.energy_per_bit_j
-        # co2e_kg is plain arithmetic, so it broadcasts over the per-row
-        # energy/intensity columns — IntensityModel overrides stay honored
-        co2e = self.intensity.co2e_kg
-        return {
-            "client_compute_kg": float(
-                co2e(cpu_w * b.compute_s, ci).sum()),
-            "upload_kg": float(
-                co2e(tx_w * b.upload_s + 8.0 * b.bytes_up * epb, ci).sum()),
-            "download_kg": float(
-                co2e(rx_w * b.download_s + 8.0 * b.bytes_down * epb,
-                     ci).sum()),
-        }
+        kg = _kg_rows(self, b.device_names, b.device_idx, b.country_names,
+                      b.country_idx, b.compute_s, b.upload_s, b.download_s,
+                      b.bytes_up, b.bytes_down)
+        return {"client_compute_kg": float(kg[0].sum()),
+                "upload_kg": float(kg[1].sum()),
+                "download_kg": float(kg[2].sum())}
 
-    def _server_kg(self, log: TaskLog) -> float:
-        srv_j = server_energy_j(log.duration_s, pue=self.intensity.pue,
+    def _server_kg_s(self, duration_s: float) -> float:
+        srv_j = server_energy_j(duration_s, pue=self.intensity.pue,
                                 power_w=self.server_power_w)
         return self.intensity.co2e_kg(srv_j,
                                       self.intensity.datacenter_intensity())
+
+    def _server_kg(self, log: TaskLog) -> float:
+        return self._server_kg_s(log.duration_s)
 
     def estimate(self, log: TaskLog) -> CarbonBreakdown:
         d = self.batch_carbon(log.columns() if hasattr(log, "columns")
@@ -131,3 +125,68 @@ class CarbonEstimator:
             up += d["upload_kg"]
             dn += d["download_kg"]
         return CarbonBreakdown(cc, up, dn, self._server_kg(log))
+
+
+def _kg_rows(est: CarbonEstimator, device_names, device_idx, country_names,
+             country_idx, compute_s, upload_s, download_s, bytes_up,
+             bytes_down) -> np.ndarray:
+    """Per-row (3, n) kg matrix — rows: client_compute / upload / download.
+    ``co2e_kg`` is plain arithmetic, so it broadcasts over the per-row
+    energy/intensity columns — IntensityModel overrides stay honored.
+    (Lane packs with differing network/intensity models are handled by
+    calling this once per lane with that lane's estimator.)"""
+    profs = [est.profiles[n] for n in device_names]
+    cpu_w = np.asarray([p.cpu_power_w for p in profs])[device_idx]
+    tx_w = np.asarray([p.wifi_tx_power_w for p in profs])[device_idx]
+    rx_w = np.asarray([p.wifi_rx_power_w for p in profs])[device_idx]
+    ci = np.asarray([est.intensity.intensity(c)
+                     for c in country_names])[country_idx]
+    epb = est.network.energy_per_bit_j
+    e = np.empty((3, len(ci)))
+    e[0] = cpu_w * compute_s
+    e[1] = tx_w * upload_s + 8.0 * bytes_up * epb
+    e[2] = rx_w * download_s + 8.0 * bytes_down * epb
+    return est.intensity.co2e_kg(e, ci)
+
+
+def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
+                estimators: Sequence[CarbonEstimator],
+                device_names: Sequence[Tuple[str, ...]],
+                country_names: Sequence[Tuple[str, ...]],
+                durations_s: Sequence[float]) -> List[CarbonBreakdown]:
+    """Per-lane CarbonBreakdowns from one shared lane-columnar session
+    store (the lane-batched sweep engine's ``LaneAccumulator``), as
+    segment reductions over the lane-sorted columns instead of S
+    independent estimator passes.
+
+    One stable argsort groups the rows by lane; each lane's contiguous
+    segment then goes through its own estimator's ``_kg_rows`` + pairwise
+    ``ndarray.sum``. Deliberately NOT ``np.add.reduceat``: reduceat sums
+    sequentially, which would break the bit-for-bit match with the
+    per-lane ``batch_carbon`` pairwise sums that the lane-equivalence
+    invariant (lane-batched == serial, seed for seed) is tested against.
+    Per-lane estimators may differ in any Environment knob — profiles,
+    intensity tables, network model, PUE, server power."""
+    order = np.argsort(lane, kind="stable")
+    bounds = np.searchsorted(lane[order], np.arange(len(estimators) + 1))
+    dev_s = cols["device_idx"][order]
+    ctry_s = cols["country_idx"][order]
+    comp_s = cols["compute_s"][order]
+    up_s = cols["upload_s"][order]
+    down_s = cols["download_s"][order]
+    bu_s = cols["bytes_up"][order]
+    bd_s = cols["bytes_down"][order]
+    out: List[CarbonBreakdown] = []
+    for i, est in enumerate(estimators):
+        sl = slice(int(bounds[i]), int(bounds[i + 1]))
+        if sl.start == sl.stop:
+            out.append(CarbonBreakdown(0.0, 0.0, 0.0,
+                                       est._server_kg_s(durations_s[i])))
+            continue
+        kg = _kg_rows(est, device_names[i], dev_s[sl], country_names[i],
+                      ctry_s[sl], comp_s[sl], up_s[sl], down_s[sl],
+                      bu_s[sl], bd_s[sl])
+        out.append(CarbonBreakdown(float(kg[0].sum()), float(kg[1].sum()),
+                                   float(kg[2].sum()),
+                                   est._server_kg_s(durations_s[i])))
+    return out

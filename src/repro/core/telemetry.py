@@ -176,38 +176,131 @@ _ACC_DTYPES = {"client_id": np.int64, "round_idx": np.int64,
 
 class BatchAccumulator:
     """Arrival-ordered columnar batch assembly for strategies that log in
-    windows: each window appends one block of already-ordered columns, and
-    ``to_batch`` concatenates the blocks into a single ``SessionBatch`` —
-    no per-session Python objects anywhere on the path."""
+    windows: ``append`` is O(1) (it keeps block references), and
+    consolidation lazily writes every block exactly once into
+    amortized-doubling preallocated buffers sized exactly on first use —
+    so repeated ``to_batch`` calls re-copy only the blocks appended since
+    the last one, instead of re-concatenating every column from scratch
+    each time (the old list+``np.concatenate`` scheme made window-per-
+    window accumulation with periodic snapshots quadratic). Snapshots are
+    copy-on-write: handing out buffer views freezes the store, and the
+    next consolidation reallocates rather than mutating what a caller
+    holds. Appended blocks are adopted — callers must not mutate them
+    afterwards (both engines hand over freshly built arrays)."""
+
+    # subclasses may ride extra columns in the same buffers (LaneAccumulator)
+    _EXTRA_DTYPES: Dict[str, type] = {}
 
     def __init__(self, device_names: Tuple[str, ...],
                  country_names: Tuple[str, ...]):
         self.device_names = device_names
         self.country_names = country_names
-        self._parts: Dict[str, List[np.ndarray]] = \
-            {f: [] for f in _ACC_DTYPES}
-        self._n = 0
+        self._dtypes = {**_ACC_DTYPES, **self._EXTRA_DTYPES}
+        self._cols: Dict[str, np.ndarray] = {}
+        self._pending: List[Dict[str, np.ndarray]] = []
+        self._cap = 0
+        self._n = 0         # rows appended (incl. pending blocks)
+        self._n_buf = 0     # rows already consolidated into the buffers
+        self._frozen = False
 
     def __len__(self) -> int:
         return self._n
 
     def append(self, **cols: np.ndarray) -> None:
         """Append one block; ``cols`` must cover every SessionBatch column
-        except the vocabularies (fixed at construction)."""
-        assert cols.keys() == self._parts.keys(), sorted(cols)
-        n = len(cols["client_id"])
-        for f, arr in cols.items():
-            self._parts[f].append(np.asarray(arr, _ACC_DTYPES[f]))
-        self._n += n
+        except the vocabularies (fixed at construction). Values may be
+        scalars (broadcast) as long as ``client_id`` is an array."""
+        assert cols.keys() == self._dtypes.keys(), sorted(cols)
+        self._pending.append(cols)
+        self._n += len(cols["client_id"])
+
+    def _consolidate(self) -> None:
+        """Write pending blocks into the buffers (dtype-casting like
+        ``np.asarray``); grows by doubling, but the first allocation is
+        exact-size so the accumulate-once/consolidate-once pattern copies
+        each value exactly once."""
+        if not self._pending:
+            return              # nothing new; existing views stay valid
+        if self._n > self._cap or self._frozen:
+            # grow only when out of space (exact on first allocation, then
+            # doubling); a freeze-triggered copy-on-write keeps capacity
+            if self._n <= self._cap:
+                cap = self._cap
+            else:
+                cap = self._n if self._cap == 0 \
+                    else max(self._n, 2 * self._cap)
+            for f, dt in self._dtypes.items():
+                buf = np.empty(cap, dt)
+                if self._n_buf:
+                    buf[:self._n_buf] = self._cols[f][:self._n_buf]
+                self._cols[f] = buf
+            self._cap = cap
+            self._frozen = False
+        pos = self._n_buf
+        for block in self._pending:
+            n = len(block["client_id"])
+            for f, arr in block.items():
+                self._cols[f][pos:pos + n] = arr
+            pos += n
+        self._pending = []
+        self._n_buf = pos
 
     def to_batch(self) -> SessionBatch:
+        """Consolidated views of every appended row (the store freezes; a
+        later append copies on write, so the snapshot stays immutable)."""
         if not self._n:
             return SessionBatch.empty()
+        self._consolidate()
+        self._frozen = True
         return SessionBatch(
             device_names=self.device_names,
             country_names=self.country_names,
-            **{f: np.concatenate(parts) if len(parts) > 1 else parts[0]
-               for f, parts in self._parts.items()})
+            **{f: self._cols[f][:self._n] for f in _ACC_DTYPES})
+
+
+class LaneAccumulator(BatchAccumulator):
+    """``BatchAccumulator`` with a per-row ``lane`` column: one shared
+    struct-of-arrays store for a whole lane pack (the lane-batched sweep
+    engine). ``split`` slices each lane's ``SessionBatch`` back out — rows
+    keep append order within a lane, which is exactly that lane's serial
+    log order, and each lane gets its own device/country vocabularies
+    (indices in the store are lane-local)."""
+
+    _EXTRA_DTYPES = {"lane": np.int32}
+
+    def __init__(self, device_names_per_lane: Sequence[Tuple[str, ...]],
+                 country_names_per_lane: Sequence[Tuple[str, ...]]):
+        super().__init__((), ())
+        self._dev_names = list(device_names_per_lane)
+        self._ctry_names = list(country_names_per_lane)
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self._dev_names)
+
+    def raw(self) -> Dict[str, np.ndarray]:
+        """Trimmed views of every column (lane included) — for segment
+        reductions over the whole pack (``estimator.lane_carbon``) with
+        no per-lane copying. Freezes like ``to_batch``."""
+        if not self._n:
+            return {f: np.zeros(0, dt) for f, dt in self._dtypes.items()}
+        self._consolidate()
+        self._frozen = True
+        return {f: self._cols[f][:self._n] for f in self._dtypes}
+
+    def split(self) -> List[SessionBatch]:
+        if not self._n:
+            return [SessionBatch.empty() for _ in self._dev_names]
+        self._consolidate()
+        lane = self._cols["lane"][:self._n]
+        out = []
+        for i in range(self.n_lanes):
+            idx = np.flatnonzero(lane == i)
+            out.append(SessionBatch(
+                device_names=self._dev_names[i],
+                country_names=self._ctry_names[i],
+                **{f: self._cols[f][:self._n][idx] for f in _ACC_DTYPES}))
+        return out
 
 
 class TaskLog:

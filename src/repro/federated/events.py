@@ -14,13 +14,19 @@ return a ``PlanBatch``/``SessionBatch`` of columns. The scalar ``plan``/
 ``resolve`` are thin wrappers over batch size 1; ``plan_scalar``/
 ``resolve_scalar`` keep the original pure-Python path as the reference
 implementation for equivalence tests and the runtime benchmark baseline.
+
+``LaneSampler`` lifts the same columnar pass across the *spec* axis: L
+compatible samplers (one per sweep lane, each with its own seed and
+environment constants) plan/resolve as one ``(lane, batch)``-shaped batch,
+bit-identical per row to each lane's own sampler — the substrate of the
+lane-batched sweep engine in ``repro.federated.runtime``.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Mapping, Optional, Sequence, Tuple, Union
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -104,6 +110,58 @@ def _plan_uniforms(seed: int, cid: np.ndarray, round_idx: int) -> np.ndarray:
         keys = np.empty((len(cid), 9), np.uint64)
         keys[:, :8] = base_r[:, None] + _lane_offsets(8)[None, :]
         keys[:, 8] = base_0
+        vals = _splitmix64_arr(keys)
+    return (vals >> _U64(11)).astype(np.float64) * _INV53
+
+
+def _plan_uniforms_rows(seeds: np.ndarray, cid: np.ndarray,
+                        round_idx: int) -> np.ndarray:
+    """``_plan_uniforms`` with a per-row seed (uint64): the lane-batched
+    engine keys every row's randomness on its lane's seed, so one splitmix
+    pass plans a whole lane pack. Bit-identical per row to the scalar-seed
+    version — uint64 wraparound is mod 2**64 and ``& 0xFFFFFFFF`` of a
+    Python int picks the same low 32 bits."""
+    with np.errstate(over="ignore"):
+        base_r = ((seeds * _U64(1_000_003) + _U64(round_idx))
+                  & _U64(0xFFFFFFFF)) * _U64(2_654_435_761) + cid * _U64(97)
+        base_0 = ((seeds * _U64(1_000_003))
+                  & _U64(0xFFFFFFFF)) * _U64(2_654_435_761) + cid * _U64(97)
+        keys = np.empty((len(cid), 9), np.uint64)
+        keys[:, :8] = base_r[:, None] + _lane_offsets(8)[None, :]
+        keys[:, 8] = base_0
+        vals = _splitmix64_arr(keys)
+    return (vals >> _U64(11)).astype(np.float64) * _INV53
+
+
+def _uniforms_batch_rows(seeds: np.ndarray, client_ids: np.ndarray,
+                         round_idx: int, n: int) -> np.ndarray:
+    """``_uniforms_batch`` with a per-row seed (see _plan_uniforms_rows)."""
+    cid = np.asarray(client_ids).astype(np.uint64)
+    with np.errstate(over="ignore"):
+        base = ((seeds * _U64(1_000_003) + _U64(round_idx))
+                & _U64(0xFFFFFFFF)) * _U64(2_654_435_761) + cid * _U64(97)
+        vals = _splitmix64_arr(base[:, None] + _lane_offsets(n)[None, :])
+    return (vals >> _U64(11)).astype(np.float64) * _INV53
+
+
+def _fused_uniforms_rows(seeds: np.ndarray, cid: np.ndarray,
+                         round_idx: int) -> np.ndarray:
+    """Plan + resolve uniforms in ONE splitmix pass: columns 0..8 are the
+    planner draws (see ``_plan_uniforms``), columns 9..10 the outcome
+    draws (key base ``round_idx + 1_000_000``). Bit-identical per column
+    to the two separate passes — every lane-loop dispatch plans and
+    resolves back-to-back, so fusing halves the per-call fixed cost."""
+    with np.errstate(over="ignore"):
+        base_r = ((seeds * _U64(1_000_003) + _U64(round_idx))
+                  & _U64(0xFFFFFFFF)) * _U64(2_654_435_761) + cid * _U64(97)
+        base_0 = ((seeds * _U64(1_000_003))
+                  & _U64(0xFFFFFFFF)) * _U64(2_654_435_761) + cid * _U64(97)
+        base_v = ((seeds * _U64(1_000_003) + _U64(round_idx + 1_000_000))
+                  & _U64(0xFFFFFFFF)) * _U64(2_654_435_761) + cid * _U64(97)
+        keys = np.empty((len(cid), 11), np.uint64)
+        keys[:, :8] = base_r[:, None] + _lane_offsets(8)[None, :]
+        keys[:, 8] = base_0
+        keys[:, 9:11] = base_v[:, None] + _lane_offsets(2)[None, :]
         vals = _splitmix64_arr(keys)
     return (vals >> _U64(11)).astype(np.float64) * _INV53
 
@@ -419,3 +477,231 @@ class SessionSampler:
                   bytes_up=plan.bytes_up if outcome == "completed" else 0.0,
                   start_t=start_t, end_t=end, outcome=outcome)
         return kw, outcome == "completed"
+
+
+# ---------------------------------------------------------------------------
+# Lane-batched sampling: many compatible samplers, one columnar pass
+# ---------------------------------------------------------------------------
+
+def _pad2(rows: Sequence[np.ndarray], pad: float) -> np.ndarray:
+    """Stack ragged per-lane 1-D tables into one (L, max_len) array."""
+    width = max((len(r) for r in rows), default=0) or 1
+    out = np.full((len(rows), width), pad, np.float64)
+    for i, r in enumerate(rows):
+        out[i, :len(r)] = r
+    return out
+
+
+class LaneSampler:
+    """L independent ``SessionSampler``s advanced as ONE columnar batch.
+
+    Every row of a plan/resolve call carries a ``lane`` id that selects
+    that lane's seed and environment constants (fleet tables, country mix,
+    bandwidths, payload bytes, model FLOPs). Because all per-session
+    randomness is counter-based splitmix64 keyed on ``(seed, client_id,
+    round_idx)`` — never on shared mutable RNG state — batching rows from
+    many lanes into one array pass reproduces each lane's own
+    ``SessionSampler.plan_batch``/``resolve_batch`` bit for bit; only the
+    array shapes change. This is what turns S small sweep runs into one
+    (S*B)-row simulation (the lane-batched sweep engine).
+
+    Device/country indices stay *lane-local* (each lane keeps its own
+    vocabularies, mirrored in ``device_names``/``country_names``), so a
+    per-lane slice of the output columns is directly comparable to that
+    lane's serial ``SessionBatch``.
+    """
+
+    def __init__(self, samplers: Sequence[SessionSampler]):
+        self.samplers = list(samplers)
+        self.n_lanes = len(self.samplers)
+        assert self.n_lanes > 0
+        ss = self.samplers
+        self.seeds = np.asarray([s.fed.seed for s in ss], np.uint64)
+        self.dropout_rate = np.asarray([s.fed.dropout_rate for s in ss])
+        self.timeout_s = np.asarray([s.fed.client_timeout_s for s in ss])
+        self.bytes_down = np.asarray([s.bytes_down for s in ss])
+        self.bytes_up = np.asarray([s.bytes_up for s in ss])
+        self.overhead = np.asarray([s.compute_overhead for s in ss])
+        self.fpt = np.asarray([s.flops_per_token for s in ss])
+        self.tokens_per_ex = np.asarray(
+            [s.seq_len * s.fed.local_epochs for s in ss], np.int64)
+        self.down_bps = np.asarray([s.download_bps for s in ss])
+        self.up_bps = np.asarray([s.upload_bps for s in ss])
+        self.device_names = [s.device_names for s in ss]
+        self.country_names = [s.country_names for s in ss]
+        # per-lane cumulative-weight / throughput tables, padded so one
+        # fancy-indexed comparison replaces L searchsorted calls (pad 2.0
+        # can never sit below a uniform in [0,1), so pads never count)
+        self._dcum2 = _pad2([s._dcum for s in ss], 2.0)
+        self._ccum2 = _pad2([s._ccum for s in ss], 2.0)
+        self._gfl2 = _pad2([s._gflops for s in ss], 1.0)
+
+    # ------------------------------------------------------------- planning
+    def _plan_from_u(self, lane: np.ndarray, ids: np.ndarray,
+                     u: np.ndarray) -> PlanBatch:
+        """Plan math over a uniforms block (columns 0..8, see
+        ``_plan_uniforms``)."""
+        # count-of-strictly-less == np.searchsorted(cum, u, side="left")
+        dev = (self._dcum2[lane] < u[:, 0:1]).sum(axis=1).astype(np.int32)
+        ctry = (self._ccum2[lane] < u[:, 1:2]).sum(axis=1).astype(np.int32)
+        n_ex = _pareto_samples_arr(u[:, 8])
+        tokens = n_ex * self.tokens_per_ex[lane]
+        jit = _lognormal_arr(u[:, 2:8:2], u[:, 3:8:2], _JITTER_SIGMA)
+        compute_s = (tokens * self.fpt[lane] * self.overhead[lane]
+                     / (self._gfl2[lane, dev] * 1e9)) * jit[:, 0]
+        download_s = 8.0 * self.bytes_down[lane] / self.down_bps[lane] \
+            * jit[:, 1]
+        upload_s = 8.0 * self.bytes_up[lane] / self.up_bps[lane] * jit[:, 2]
+        return PlanBatch(ids, dev, ctry, download_s, compute_s, upload_s,
+                         self.bytes_down[lane], self.bytes_up[lane], n_ex)
+
+    def plan_batch(self, lane: np.ndarray,
+                   client_ids: Union[np.ndarray, Sequence[int]],
+                   round_idx: int) -> PlanBatch:
+        """Plan one row per (lane, client): the lane column selects each
+        row's seed and environment constants. Matches each lane's own
+        ``SessionSampler.plan_batch`` bit for bit."""
+        ids = np.asarray(client_ids, np.int64)
+        lane = np.asarray(lane, np.intp)
+        u = _plan_uniforms_rows(self.seeds[lane], ids.astype(np.uint64),
+                                round_idx)
+        return self._plan_from_u(lane, ids, u)
+
+    # ------------------------------------------------------------ resolving
+    def plan_resolve(self, lane: np.ndarray,
+                     client_ids: Union[np.ndarray, Sequence[int]],
+                     round_idx: int, start_t: Union[float, np.ndarray]
+                     ) -> Tuple[PlanBatch, Dict[str, np.ndarray],
+                                np.ndarray]:
+        """Plan AND resolve one row per (lane, client) off a single fused
+        splitmix pass — the lane loops' dispatch fast path (they always
+        resolve what they just planned). Returns ``(pb, cols, ok)``,
+        bit-identical to ``plan_batch`` + ``resolve_batch``."""
+        ids = np.asarray(client_ids, np.int64)
+        lane = np.asarray(lane, np.intp)
+        u = _fused_uniforms_rows(self.seeds[lane], ids.astype(np.uint64),
+                                 round_idx)
+        pb = self._plan_from_u(lane, ids, u)
+        cols, ok = self._resolve_from_u(pb, lane, round_idx, start_t,
+                                        u[:, 9:11], copy_start=False)
+        return pb, cols, ok
+
+    def resolve_batch(self, pb: PlanBatch, lane: np.ndarray, round_idx: int,
+                      start_t: Union[float, np.ndarray],
+                      deadline: Optional[np.ndarray] = None
+                      ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Resolve a lane-planned cohort; returns ``(cols, ok)`` where
+        ``cols`` holds every SessionBatch column (device/country indices
+        lane-local, ``staleness`` zeroed) keyed for a ``LaneAccumulator``
+        append. ``deadline`` may be a per-row array (each lane closes its
+        own round)."""
+        lane = np.asarray(lane, np.intp)
+        uu = _uniforms_batch_rows(self.seeds[lane], pb.client_ids,
+                                  round_idx + 1_000_000, 2)
+        return self._resolve_from_u(pb, lane, round_idx, start_t, uu,
+                                    deadline=deadline)
+
+    def _resolve_from_u(self, pb: PlanBatch, lane: np.ndarray,
+                        round_idx: int, start_t: Union[float, np.ndarray],
+                        uu: np.ndarray,
+                        deadline: Optional[np.ndarray] = None,
+                        copy_start: bool = True
+                        ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Outcome math over a resolve-uniforms block (2 columns).
+        ``copy_start=False`` lets a caller that hands over a fresh start
+        array skip the defensive copy."""
+        n = len(pb)
+        full_d, full_c, full_u = pb.download_s, pb.compute_s, pb.upload_s
+        start_arr = np.asarray(start_t, np.float64)
+        start = np.broadcast_to(start_arr, (n,))
+        full = full_d + full_c + full_u
+        end_full = start + full_d + full_c + full_u
+
+        timeout_s = self.timeout_s[lane]
+        dropped = uu[:, 0] < self.dropout_rate[lane]
+        timeout = ~dropped & (full_c > timeout_s)
+        if deadline is not None:
+            late = ~dropped & ~timeout & (end_full > deadline)
+        else:
+            late = np.zeros(n, bool)
+        burn = uu[:, 1] * full
+        if deadline is not None:
+            burn = np.where(late, np.maximum(0.0, deadline - start), burn)
+        cut = dropped | late
+        d = np.where(cut, np.minimum(full_d, burn), full_d)
+        c = np.where(cut, np.minimum(full_c,
+                                     np.maximum(0.0, burn - full_d)),
+                     full_c)
+        u = np.where(cut, np.minimum(full_u,
+                                     np.maximum(0.0, burn - full_d - full_c)),
+                     full_u)
+        c = np.where(timeout, timeout_s, c)
+        u = np.where(timeout, 0.0, u)
+        end = np.where(dropped, start + burn, end_full)
+        end = np.where(timeout, start + full_d + timeout_s, end)
+        if deadline is not None:
+            end = np.where(late, deadline, end)
+
+        outcome = np.zeros(n, np.int8)  # completed
+        outcome[cut] = OUTCOME_CODE["dropped"]
+        outcome[timeout] = OUTCOME_CODE["timeout"]
+        ok = outcome == OUTCOME_CODE["completed"]
+        frac_down = np.divide(d, full_d, out=np.zeros(n), where=full_d > 0)
+        cols = dict(
+            client_id=pb.client_ids,
+            round_idx=np.full(n, round_idx, np.int64),
+            device_idx=pb.device_idx, country_idx=pb.country_idx,
+            download_s=d, compute_s=c, upload_s=u,
+            bytes_down=pb.bytes_down * np.minimum(1.0, frac_down),
+            bytes_up=np.where(ok, pb.bytes_up, 0.0),
+            start_t=start_arr if (not copy_start
+                                 and start_arr.shape == (n,)
+                                 and start_arr.flags.writeable)
+            else np.asarray(start, np.float64).copy(),
+            end_t=end, outcome=outcome,
+            staleness=np.zeros(n, np.int32))
+        return cols, ok
+
+    def apply_deadline(self, pb: PlanBatch, cols: Dict[str, np.ndarray],
+                       ok: np.ndarray, deadline: np.ndarray) -> None:
+        """Patch a no-deadline resolve into its with-deadline twin, in
+        place: only rows that completed past the deadline change (they
+        burn budget until the round closes and drop), every other row is
+        untouched — so the sync lane round needs ONE resolve pass instead
+        of two. Bit-identical to ``resolve_batch(..., deadline=...)``:
+        dropped/timeout rows never depend on the deadline, and a completed
+        row's ``end_t`` equals its full-duration end."""
+        idx = np.flatnonzero(ok & (cols["end_t"] > deadline))
+        if not len(idx):
+            return
+        dl = deadline[idx]
+        burn = np.maximum(0.0, dl - cols["start_t"][idx])
+        fd, fc, fu = pb.download_s[idx], pb.compute_s[idx], pb.upload_s[idx]
+        d = np.minimum(fd, burn)
+        c = np.minimum(fc, np.maximum(0.0, burn - fd))
+        u = np.minimum(fu, np.maximum(0.0, burn - fd - fc))
+        frac = np.divide(d, fd, out=np.zeros(len(idx)), where=fd > 0)
+        cols["download_s"][idx] = d
+        cols["compute_s"][idx] = c
+        cols["upload_s"][idx] = u
+        cols["bytes_down"][idx] = pb.bytes_down[idx] * np.minimum(1.0, frac)
+        cols["bytes_up"][idx] = 0.0
+        cols["end_t"][idx] = dl
+        cols["outcome"][idx] = OUTCOME_CODE["dropped"]
+        ok[idx] = False
+
+    # --------------------------------------------------- replacement streams
+    def slot_stream_ids(self, lane: np.ndarray, slots: np.ndarray,
+                        generations: np.ndarray, population: int
+                        ) -> np.ndarray:
+        """Per-row-seed twin of the module-level ``slot_stream_ids``."""
+        lane = np.asarray(lane, np.intp)
+        s = np.asarray(slots, dtype=np.uint64)
+        g = np.asarray(generations, dtype=np.uint64)
+        with np.errstate(over="ignore"):
+            base0 = (self.seeds[lane] & _U64(0xFFFFFFFF)) \
+                * _U64(0x9E3779B9) + _U64(0x7F4A7C15)
+            h = _splitmix64_arr(base0 + s * _U64(_SLOT_MIX)
+                                + g * _U64(_GOLDEN))
+        u_ = (h >> _U64(11)).astype(np.float64) * _INV53
+        return (u_ * population).astype(np.int64)

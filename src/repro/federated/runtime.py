@@ -29,20 +29,32 @@ emit a ``RoundEvent`` after every server eval so callers
 (``repro.api.Experiment``) can stream progress. ``run_task`` survives
 only as a deprecated shim over the registry — new code goes through
 ``repro.api``.
+
+The engine also vectorizes across the *spec* axis: ``LaneRunner`` packs
+compatible experiments (same mode; any mix of concurrency, goals, seeds,
+models, budgets, Environments) and both strategies implement
+``lane_loop`` — a lockstep twin of ``_loop`` where every sampler call is
+``(lane, batch)``-shaped (``events.LaneSampler``), sessions land in one
+``telemetry.LaneAccumulator`` store with a lane column, and the
+estimator reduces per-lane segments (``estimator.lane_carbon``).
+Lane-batched results are seed-for-seed identical to per-spec runs;
+``repro.api.sweep(specs, vectorize=True)`` is the front end.
 """
 from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple, Type
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
-from repro.core.estimator import CarbonBreakdown, CarbonEstimator
+from repro.core.estimator import (CarbonBreakdown, CarbonEstimator,
+                                  lane_carbon)
 from repro.core.telemetry import (OUTCOME_CODE, BatchAccumulator,
-                                  SessionBatch, TaskLog)
-from repro.federated.events import SessionSampler, slot_stream_ids
+                                  LaneAccumulator, SessionBatch, TaskLog)
+from repro.federated.events import (LaneSampler, SessionSampler,
+                                    slot_stream_ids)
 
 _SERVER_AGG_S = 2.0     # server-side aggregation latency per update
 _POPULATION = 5_000_000  # eligible-device pool the coordinator selects from
@@ -117,6 +129,46 @@ def _select_cohort(rng: np.random.Generator, k: int,
     sample-from-a-larger-range-then-modulo trick silently reintroduced
     duplicates and a mild modulo bias)."""
     return rng.choice(population, size=k, replace=False).astype(np.int64)
+
+
+def _sync_server_update(learner, contributors: List[int]) -> float:
+    """One FedAvg server update from a round's contributor list; returns
+    the fresh eval perplexity (shared by the serial and lane loops)."""
+    deltas, weights = [], []
+    if getattr(learner, "real", True):
+        if hasattr(learner, "client_deltas"):
+            deltas, weights = learner.client_deltas(contributors)
+        else:
+            for c in contributors:
+                d, w = learner.client_delta(c, None)
+                deltas.append(d)
+                weights.append(w)
+    else:
+        deltas, weights = [None], [1.0]
+    learner.apply(deltas, weights, n_contributors=len(contributors))
+    return learner.eval_perplexity()
+
+
+def _async_server_update(learner, cids: np.ndarray, vers_ok: np.ndarray,
+                         version: int) -> float:
+    """One FedBuff server update from the buffer's contributing arrivals;
+    returns the fresh eval perplexity (shared by the serial and lane
+    loops)."""
+    if getattr(learner, "real", True):
+        staleness = (version - vers_ok).tolist()
+        deltas, weights = [], []
+        for bc, bv in zip(cids.tolist(), vers_ok.tolist()):
+            dd, w = learner.client_delta(bc, bv)
+            deltas.append(dd)
+            weights.append(w)
+        kw_extra = {"staleness": staleness}
+        mean_st = float(np.mean(staleness))
+    else:
+        deltas, weights, kw_extra = [None], [1.0], {}
+        mean_st = version - (vers_ok.sum() / len(vers_ok))
+    learner.apply(deltas, weights, n_contributors=len(vers_ok),
+                  mean_staleness=mean_st, **kw_extra)
+    return learner.eval_perplexity()
 
 
 # ---------------------------------------------------------------------------
@@ -219,19 +271,7 @@ class SyncStrategy(Strategy):
             t = round_end + _SERVER_AGG_S
             rounds += 1
             if not failed and contributors:
-                deltas, weights = [], []
-                if getattr(learner, "real", True):
-                    if hasattr(learner, "client_deltas"):
-                        deltas, weights = learner.client_deltas(contributors)
-                    else:
-                        for c in contributors:
-                            d, w = learner.client_delta(c, None)
-                            deltas.append(d)
-                            weights.append(w)
-                else:
-                    deltas, weights = [None], [1.0]
-                learner.apply(deltas, weights, n_contributors=len(contributors))
-                ppl = learner.eval_perplexity()
+                ppl = _sync_server_update(learner, contributors)
                 stop.update(ppl)
             log.log_round(t)
             log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
@@ -240,6 +280,70 @@ class SyncStrategy(Strategy):
             if stop.reached or stop.out_of_budget(t, rounds):
                 break
         return t, rounds, ppl
+
+    def lane_loop(self, pack: "_LanePack") -> None:
+        """Lockstep lane-batched twin of ``_loop``: one plan/resolve pass
+        covers every active lane's cohort (rows keyed per lane through
+        ``LaneSampler``), the per-lane round close stays a partition on
+        that lane's ``end_t`` slice, and learner/stopper bookkeeping runs
+        per lane on scalars. Active lanes always share the lockstep round
+        index ``k`` (every window closes exactly one round per lane), so
+        ``round_idx`` stays a scalar in the sampler keys. Seed-for-seed
+        identical to running each lane alone — cohort selection consumes
+        each lane's own rng exactly as the serial loop does, and lanes
+        share no other RNG state."""
+        lanes = pack.lanes
+        rngs = [np.random.default_rng(f.seed + 1) for f in pack.feds]
+        concs = [f.concurrency for f in pack.feds]
+        goals = [min(f.aggregation_goal, f.concurrency) for f in pack.feds]
+        k = 0                        # == every active lane's `rounds`
+        while pack.active.any():
+            act = np.flatnonzero(pack.active)
+            cohorts = [_select_cohort(rngs[i], concs[i], _POPULATION)
+                       for i in act]
+            sizes = np.asarray([concs[i] for i in act], np.int64)
+            offs = np.concatenate([[0], np.cumsum(sizes)])
+            lane_row = np.repeat(act, sizes)
+            start = pack.t[lane_row]
+            pb, fb, ok = lanes.plan_resolve(lane_row,
+                                            np.concatenate(cohorts), k,
+                                            start)
+            end_t = fb["end_t"]
+            round_end = np.empty(len(act))
+            failed = np.zeros(len(act), bool)
+            for j, i in enumerate(act):
+                sl = slice(offs[j], offs[j + 1])
+                ends = end_t[sl][ok[sl]]
+                g = goals[i]
+                if len(ends) >= g:
+                    round_end[j] = np.partition(ends, g - 1)[g - 1]
+                elif len(ends):
+                    round_end[j] = ends.max()
+                else:
+                    seg = end_t[sl]
+                    round_end[j] = seg.max() if len(seg) else pack.t[i]
+                    failed[j] = True
+            # pass 2 of the serial loop collapses to a masked patch of the
+            # stragglers (cancel-at-deadline); everything else is reused
+            ok2 = ok
+            lanes.apply_deadline(pb, fb, ok2, np.repeat(round_end, sizes))
+            pack.acc.append(lane=lane_row, **fb)
+            k += 1
+            for j, i in enumerate(act):
+                sl = slice(offs[j], offs[j + 1])
+                contributors: List[int] = \
+                    cohorts[j][np.flatnonzero(ok2[sl])[:goals[i]]].tolist()
+                pack.t[i] = round_end[j] + _SERVER_AGG_S
+                pack.rounds[i] = k
+                stop = pack.stoppers[i]
+                if not failed[j] and contributors:
+                    pack.ppl[i] = _sync_server_update(pack.learners[i],
+                                                      contributors)
+                    stop.update(pack.ppl[i])
+                pack.n_logged[i] += int(sizes[j])
+                pack.close_round(i, k, self.mode)
+                if stop.reached or stop.out_of_budget(pack.t[i], k):
+                    pack.active[i] = False
 
 
 # async pool fields that only the window close needs (the expansion phase
@@ -263,6 +367,24 @@ def _async_rows(slots: np.ndarray, gens: np.ndarray, version: int,
                 bd=batch.bytes_down, bu=batch.bytes_up,
                 dev=batch.device_idx, ctry=batch.country_idx,
                 out=batch.outcome, ok=ok)
+
+
+def _async_rows_cols(slots: np.ndarray, gens: np.ndarray, version: int,
+                     cols: Dict[str, np.ndarray],
+                     ok: np.ndarray) -> Dict[str, np.ndarray]:
+    """``_async_rows`` over a LaneSampler column dict instead of a
+    SessionBatch (the lane-batched async loop's dispatch format)."""
+    n = len(ok)
+    return dict(slot=np.asarray(slots, np.int64),
+                gen=np.asarray(gens, np.int64),
+                cid=cols["client_id"],
+                ver=np.full(n, version, np.int64),
+                start=cols["start_t"], end=cols["end_t"],
+                d=cols["download_s"], c=cols["compute_s"],
+                u=cols["upload_s"],
+                bd=cols["bytes_down"], bu=cols["bytes_up"],
+                dev=cols["device_idx"], ctry=cols["country_idx"],
+                out=cols["outcome"], ok=ok)
 
 
 def _truncate_cancelled(flight: Dict[str, np.ndarray], idx: np.ndarray,
@@ -324,7 +446,6 @@ class AsyncStrategy(Strategy):
         version = 0
         ppl = float(model_cfg.vocab_size)
         max_t = stop.run.max_hours * 3600.0
-        is_real = getattr(learner, "real", True)
         acc = BatchAccumulator(sampler.device_names, sampler.country_names)
 
         # initial cohort: one batched plan/resolve with jittered starts;
@@ -437,24 +558,10 @@ class AsyncStrategy(Strategy):
             # ---- server update at the boundary arrival ------------------
             b_row = int(pop_idx[-1])
             vers_ok = A["ver"][pop_idx][okm]
-            if is_real:
-                staleness = (version - vers_ok).tolist()
-                deltas, weights = [], []
-                for bc, bv in zip(A["cid"][pop_idx][okm].tolist(),
-                                  vers_ok.tolist()):
-                    dd, w = learner.client_delta(bc, bv)
-                    deltas.append(dd)
-                    weights.append(w)
-                kw_extra = {"staleness": staleness}
-                mean_st = float(np.mean(staleness))
-            else:
-                deltas, weights, kw_extra = [None], [1.0], {}
-                mean_st = version - (vers_ok.sum() / len(vers_ok))
-            learner.apply(deltas, weights, n_contributors=len(vers_ok),
-                          mean_staleness=mean_st, **kw_extra)
+            ppl = _async_server_update(learner, A["cid"][pop_idx][okm],
+                                       vers_ok, version)
             version += 1
             t = max(t0, float(A["end"][b_row])) + _SERVER_AGG_S
-            ppl = learner.eval_perplexity()
             stop.update(ppl)
             log.log_round(t)
             log.log_eval(t, version, ppl, stop.smoothed or ppl)
@@ -490,6 +597,382 @@ class AsyncStrategy(Strategy):
         if len(acc):
             log.log_batch(acc.to_batch())
         return t, version, ppl
+
+    def lane_loop(self, pack: "_LanePack") -> None:
+        """Lockstep lane-batched twin of ``_loop``: every iteration closes
+        one window (one server update) per active lane. The per-lane flight
+        state lives in one concatenated array store (``offsets`` maps lane
+        -> slot block); the expansion fixed point interleaves all lanes'
+        chain discovery so each inner iteration issues ONE batched
+        plan/resolve for every lane's frontier, and the post-update
+        boundary redispatches batch into a single L-row call — the two
+        per-window fixed costs that dominate small-concurrency sweeps.
+        Per-lane bounds/lexsort/boundary bookkeeping are unchanged from the
+        serial loop, just applied to lane slices, so the merge stays exact
+        per lane. Active lanes always share the lockstep version ``k``."""
+        lanes = pack.lanes
+        feds = pack.feds
+        L = pack.n_lanes
+        concs = np.asarray([f.concurrency for f in feds], np.int64)
+        goals = [f.aggregation_goal for f in feds]
+        offsets = np.concatenate([[0], np.cumsum(concs)])
+        max_ts = [r.max_hours * 3600.0 for r in pack.runs]
+        max_rounds = [r.max_rounds for r in pack.runs]
+        # ---- initial cohorts: one batched resolve across all lanes ------
+        rngs = [np.random.default_rng(f.seed + 2) for f in feds]
+        cohorts, starts0 = [], []
+        for i, f in enumerate(feds):
+            cohorts.append(_select_cohort(rngs[i], f.concurrency,
+                                          _POPULATION))
+            starts0.append(rngs[i].uniform(0, 5.0, size=f.concurrency))
+        lane_of = np.repeat(np.arange(L, dtype=np.intp), concs)
+        slot_of = np.concatenate(
+            [np.arange(c, dtype=np.int64) for c in concs])
+        _, b0, ok0 = lanes.plan_resolve(lane_of, np.concatenate(cohorts), 0,
+                                        np.concatenate(starts0))
+        flight = _async_rows_cols(slot_of, np.zeros(len(slot_of), np.int64),
+                                  0, b0, ok0)
+        alive = np.ones(int(offsets[-1]), bool)
+        k = 0                        # == every active lane's `version`
+
+        def _flush_cancelled(i: int, t_final: float, version_i: int) -> None:
+            """Lane i is done: log its in-flight slots as cancelled
+            (truncated at its final clock) and deactivate it."""
+            lo, hi = int(offsets[i]), int(offsets[i + 1])
+            idx = lo + np.flatnonzero(alive[lo:hi])
+            if len(idx):
+                pack.acc.append(lane=np.full(len(idx), i, np.int32),
+                                client_id=flight["cid"][idx],
+                                round_idx=flight["ver"][idx],
+                                device_idx=flight["dev"][idx],
+                                country_idx=flight["ctry"][idx],
+                                start_t=flight["start"][idx],
+                                outcome=np.full(len(idx),
+                                                OUTCOME_CODE["cancelled"],
+                                                np.int8),
+                                staleness=version_i - flight["ver"][idx],
+                                **_truncate_cancelled(flight, idx, t_final))
+                pack.n_logged[i] += len(idx)
+            pack.active[i] = False
+
+        while True:
+            for i in np.flatnonzero(pack.active):
+                if pack.t[i] >= max_ts[i] or k >= max_rounds[i]:
+                    _flush_cancelled(i, float(pack.t[i]), k)
+            act = np.flatnonzero(pack.active)
+            if not len(act):
+                break
+            t0 = pack.t.copy()
+            # ---- expansion: all active lanes' windows discover at once --
+            rows_idx = np.concatenate(
+                [np.arange(offsets[i], offsets[i + 1]) for i in act])
+            win_lane = lane_of[rows_idx]
+            slot_all = flight["slot"][rows_idx]
+            gen_all = flight["gen"][rows_idx]
+            end_all = flight["end"][rows_idx]
+            ok_all = flight["ok"][rows_idx]
+            parts: Dict[str, List[np.ndarray]] = \
+                {f: [flight[f][rows_idx]] for f in _DEFERRED}
+            succ = np.full(len(rows_idx), -1, np.int64)
+            n_rows = len(rows_idx)
+            # Expansion bounds are SOUND, not tight: a lane's bound only
+            # has to sit at/above its final boundary, because rows beyond
+            # the boundary are speculative — never popped, never logged,
+            # never in flight (only popped tips' successors survive). So
+            # unlike the serial loop, the goal-bound partition runs ONCE
+            # per lane per window (not per inner iteration) over the rows
+            # present at computation time — it can only be looser than the
+            # serial re-tightened bound, trading a few extra speculative
+            # resolves (batched, cheap) for per-lane Python (expensive at
+            # lane-pack scale). Lanes below goal recheck as arrivals join;
+            # the over-budget fallback min updates vectorized.
+            goal_bound = np.full(L, np.inf)
+            over_min = np.full(L, np.inf)
+            max_t_arr = np.asarray(max_ts)
+            goals_arr = np.asarray(goals, np.int64)
+            n_ok_lane = np.bincount(win_lane[ok_all], minlength=L)
+            ov0 = end_all >= max_t_arr[win_lane]
+            if ov0.any():
+                np.minimum.at(over_min, win_lane[ov0], end_all[ov0])
+            below: List[int] = []
+            pos = 0
+            for i in act:
+                sl = slice(pos, pos + int(concs[i]))
+                pos += int(concs[i])
+                if n_ok_lane[i] >= goals[i]:
+                    e_i, o_i = end_all[sl], ok_all[sl]
+                    goal_bound[i] = np.partition(e_i[o_i],
+                                                 goals[i] - 1)[goals[i] - 1]
+                else:
+                    below.append(i)
+            unexp = np.arange(n_rows, dtype=np.int64)
+            while True:
+                if below:
+                    for i in list(below):
+                        if n_ok_lane[i] >= goals[i]:
+                            m_i = win_lane == i
+                            e_i = end_all[m_i]
+                            goal_bound[i] = np.partition(
+                                e_i[ok_all[m_i]],
+                                goals[i] - 1)[goals[i] - 1]
+                            below.remove(i)
+                bound_row = np.minimum(goal_bound,
+                                       over_min)[win_lane[unexp]]
+                m = end_all[unexp] <= bound_row   # inf bound passes all
+                need = unexp[m]
+                if not len(need):
+                    break
+                unexp = unexp[~m]
+                lanes_n = win_lane[need]
+                slots_n = slot_all[need]
+                gens_n = gen_all[need] + 1
+                ids_n = lanes.slot_stream_ids(lanes_n, slots_n, gens_n,
+                                              _POPULATION)
+                starts_n = np.maximum(t0[lanes_n], end_all[need])
+                _, bn, okn = lanes.plan_resolve(lanes_n, ids_n, k, starts_n)
+                end_n = bn["end_t"]
+                succ[need] = n_rows + np.arange(len(need))
+                unexp = np.concatenate(
+                    [unexp, np.arange(n_rows, n_rows + len(need),
+                                      dtype=np.int64)])
+                n_rows += len(need)
+                succ = np.concatenate(
+                    [succ, np.full(len(need), -1, np.int64)])
+                win_lane = np.concatenate([win_lane, lanes_n])
+                slot_all = np.concatenate([slot_all, slots_n])
+                gen_all = np.concatenate([gen_all, gens_n])
+                end_all = np.concatenate([end_all, end_n])
+                ok_all = np.concatenate([ok_all, okn])
+                new = _async_rows_cols(slots_n, gens_n, k, bn, okn)
+                for f in _DEFERRED:
+                    parts[f].append(new[f])
+                if below:
+                    n_ok_lane = n_ok_lane + np.bincount(lanes_n[okn],
+                                                        minlength=L)
+                ov = end_n >= max_t_arr[lanes_n]
+                if ov.any():
+                    np.minimum.at(over_min, lanes_n[ov], end_n[ov])
+            # ---- per-lane exact close (unchanged serial logic on slices)
+            A = {"slot": slot_all, "gen": gen_all,
+                 "end": end_all, "ok": ok_all,
+                 **{f: np.concatenate(p) if len(p) > 1 else p[0]
+                    for f, p in parts.items()}}
+            # ONE lexsort settles every lane's boundary: keying by (lane,
+            # end, slot, gen) makes each lane's segment contiguous AND
+            # internally sorted exactly like the serial per-lane lexsort
+            # ((slot, gen) is unique within a lane); a global cumsum then
+            # gives each lane's ok-count prefix via one base subtraction
+            order = np.lexsort((gen_all, slot_all, end_all, win_lane))
+            lane_sorted = win_lane[order]
+            ends_s = end_all[order]
+            cum_pad = np.concatenate(([0], np.cumsum(ok_all[order])))
+            seg = np.searchsorted(lane_sorted, act, side="left")
+            seg = np.append(seg, len(lane_sorted))
+            # vectorized boundary search: the global ok-cumsum is monotone,
+            # so one searchsorted per window finds every lane's goal-th ok
+            # arrival (b_pos), with per-lane bases read off the segment
+            # starts
+            bases = cum_pad[seg[:-1]]
+            tot_ok = cum_pad[seg[1:]] - bases
+            b_glob = np.searchsorted(cum_pad[1:], bases + goals_arr[act])
+            pops_to_arr = np.empty(len(act), np.int64)
+            closes_upd = np.zeros(len(act), bool)
+            for j, i in enumerate(act):
+                lo = int(seg[j])
+                b_pos = int(b_glob[j]) - lo if tot_ok[j] >= goals[i] else -1
+                cut = int(np.searchsorted(ends_s[lo:int(seg[j + 1])],
+                                          max_ts[i], side="left"))
+                if 0 <= b_pos <= cut:
+                    pops_to_arr[j], closes_upd[j] = b_pos, True
+                else:
+                    pops_to_arr[j] = cut
+            # one batched gather serves the tip updates, the log append
+            # and the per-lane server updates (views into the pop block)
+            pop_parts = [order[int(seg[j]):int(seg[j]) + int(p) + 1]
+                         for j, p in enumerate(pops_to_arr)]
+            pops = np.concatenate(pop_parts) \
+                if len(pop_parts) > 1 else pop_parts[0]
+            sizes_p = np.asarray([len(p) for p in pop_parts])
+            offs_p = np.concatenate([[0], np.cumsum(sizes_p)])
+            pop_lane_rep = np.repeat(act, sizes_p)
+            # every pop precedes its lane's bound, so its chain expanded
+            assert succ[pops].min() >= 0
+            ok_p = A["ok"][pops]
+            ver_p = A["ver"][pops]
+            cid_p = A["cid"][pops]
+            end_p = A["end"][pops]
+            slot_p = A["slot"][pops]
+            gen_p = A["gen"][pops]
+            # per-slot chain tips (slots disjoint across lanes, so one
+            # global maximum.at replaces L per-lane passes) -> successors
+            # go in flight before the cancelled flushes read it
+            slots_glob = offsets[pop_lane_rep] + slot_p
+            best = np.full(int(offsets[-1]), -1, np.int64)
+            np.maximum.at(best, slots_glob, gen_p)
+            is_tip = gen_p == best[slots_glob]
+            tip_rows = slots_glob[is_tip]
+            repl_rows = succ[pops[is_tip]]
+            for f in flight:
+                flight[f][tip_rows] = A[f][repl_rows]
+            # one batched append logs every lane's pops for this window
+            # (within-lane order is pop order, which is all that matters);
+            # cancelled flushes follow so a closing lane's store order
+            # stays pops-then-cancelled like the serial loop's
+            pack.acc.append(lane=pop_lane_rep,
+                            client_id=cid_p,
+                            round_idx=ver_p,
+                            device_idx=A["dev"][pops],
+                            country_idx=A["ctry"][pops],
+                            download_s=A["d"][pops],
+                            compute_s=A["c"][pops],
+                            upload_s=A["u"][pops],
+                            bytes_down=A["bd"][pops],
+                            bytes_up=A["bu"][pops],
+                            start_t=A["start"][pops],
+                            end_t=end_p,
+                            outcome=A["out"][pops],
+                            staleness=k - ver_p)
+            redis: List[Tuple[int, int, int]] = []   # (lane, slot, gen)
+            flush_q: List[Tuple[int, float, int]] = []
+            for j, i in enumerate(act):
+                sl = slice(int(offs_p[j]), int(offs_p[j + 1]))
+                pack.n_logged[i] += sl.stop - sl.start
+                if not closes_upd[j]:
+                    pack.t[i] = max(float(t0[i]), float(end_p[sl.stop - 1]))
+                    flush_q.append((i, float(pack.t[i]), k))
+                    continue
+                # ---- server update at the boundary arrival --------------
+                okm = ok_p[sl]
+                vers_ok = ver_p[sl][okm]
+                pack.ppl[i] = _async_server_update(
+                    pack.learners[i], cid_p[sl][okm], vers_ok, k)
+                pack.t[i] = max(float(t0[i]),
+                                float(end_p[sl.stop - 1])) + _SERVER_AGG_S
+                stop = pack.stoppers[i]
+                stop.update(pack.ppl[i])
+                pack.rounds[i] = k + 1
+                pack.close_round(i, k + 1, self.mode)
+                b_slot = int(slot_p[sl.stop - 1])
+                if stop.reached or stop.out_of_budget(pack.t[i], k + 1):
+                    alive[int(offsets[i]) + b_slot] = False
+                    flush_q.append((i, float(pack.t[i]), k + 1))
+                    continue
+                redis.append((i, b_slot, int(gen_p[sl.stop - 1]) + 1))
+            for i, t_fin, ver_fin in flush_q:
+                _flush_cancelled(i, t_fin, ver_fin)
+            # ---- boundary slots redispatch after the update, batched ----
+            if redis:
+                rl = np.asarray([r[0] for r in redis], np.intp)
+                rs = np.asarray([r[1] for r in redis], np.int64)
+                rg = np.asarray([r[2] for r in redis], np.int64)
+                nid = lanes.slot_stream_ids(rl, rs, rg, _POPULATION)
+                _, bb, okb = lanes.plan_resolve(rl, nid, k + 1, pack.t[rl])
+                row = _async_rows_cols(rs, rg, k + 1, bb, okb)
+                fl_rows = offsets[rl] + rs
+                for f in flight:
+                    flight[f][fl_rows] = row[f]
+            k += 1
+
+
+# ---------------------------------------------------------------------------
+# Lane-batched execution: a pack of compatible experiments as ONE simulation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LaneTask:
+    """One lane of a lane-batched pack — everything ``Strategy.run`` would
+    receive for a single experiment, pre-resolved (model config, learner,
+    sampler, estimator) so the pack runner never touches spec plumbing."""
+    model_cfg: ModelConfig
+    fed: FederatedConfig
+    run: RunConfig
+    learner: object
+    sampler: SessionSampler
+    estimator: CarbonEstimator
+    on_round: Optional[RoundCallback] = None
+
+
+class _LanePack:
+    """Shared mutable state for one lockstep lane run: per-lane clocks,
+    round counters, stoppers, logs and learners, plus the pack-wide
+    ``LaneSampler`` and the single ``LaneAccumulator`` session store that
+    per-lane TaskLogs are sliced out of at the end."""
+
+    def __init__(self, tasks: List[LaneTask]):
+        self.tasks = tasks
+        self.n_lanes = len(tasks)
+        self.feds = [t.fed for t in tasks]
+        self.runs = [t.run for t in tasks]
+        self.learners = [t.learner for t in tasks]
+        self.lanes = LaneSampler([t.sampler for t in tasks])
+        self.stoppers = [_Stopper(t.run) for t in tasks]
+        self.logs = [TaskLog() for _ in tasks]
+        self.acc = LaneAccumulator(self.lanes.device_names,
+                                   self.lanes.country_names)
+        self.t = np.zeros(self.n_lanes)
+        self.rounds = np.zeros(self.n_lanes, np.int64)
+        self.ppl = np.asarray([float(t.model_cfg.vocab_size) for t in tasks])
+        self.active = np.ones(self.n_lanes, bool)
+        self.n_logged = np.zeros(self.n_lanes, np.int64)
+
+    def close_round(self, i: int, round_idx: int, mode: str) -> None:
+        """Per-lane post-update bookkeeping (log + streamed RoundEvent),
+        identical to the serial loops' tail."""
+        stop = self.stoppers[i]
+        sm = stop.smoothed or self.ppl[i]
+        self.logs[i].log_round(self.t[i])
+        self.logs[i].log_eval(self.t[i], round_idx, self.ppl[i], sm)
+        cb = self.tasks[i].on_round
+        if cb is not None:
+            cb(RoundEvent(round_idx, float(self.t[i]), float(self.ppl[i]),
+                          sm, int(self.n_logged[i]), mode))
+
+
+class LaneRunner:
+    """Run a pack of compatible experiments (same ``mode``) in lockstep as
+    ONE columnar simulation: sampler draws become ``(lane, batch)``-shaped
+    arrays keyed per lane, per-lane clocks advance under an active-lane
+    mask, sessions accumulate into one lane-columnar store, and the
+    estimator reduces per-lane segments. Results equal per-task
+    ``Strategy.run`` **seed for seed** (same summaries, same session
+    columns): lanes share no RNG state — all per-session randomness is
+    counter-keyed on each lane's own seed — so batching changes only array
+    shapes, never values. Lanes may differ in concurrency, aggregation
+    goal, seeds, model size, run budgets and every Environment knob; they
+    must share the event-loop mode (one lockstep window shape)."""
+
+    def __init__(self, mode: str):
+        self.mode = mode
+        self.strategy = get_strategy(mode)
+        if not hasattr(self.strategy, "lane_loop"):
+            raise ValueError(
+                f"strategy {mode!r} has no lane_loop; run specs serially")
+
+    def run(self, tasks: Sequence[LaneTask]) -> List[TaskResult]:
+        tasks = list(tasks)
+        assert all(t.fed.mode == self.mode for t in tasks), \
+            "lane packs must share the event-loop mode"
+        pack = _LanePack(tasks)
+        self.strategy.lane_loop(pack)
+        assert not pack.active.any()
+        batches = pack.acc.split()
+        cols = pack.acc.raw()
+        carbons = lane_carbon(cols, cols["lane"],
+                              [t.estimator for t in tasks],
+                              pack.lanes.device_names,
+                              pack.lanes.country_names,
+                              [log.duration_s for log in pack.logs])
+        out: List[TaskResult] = []
+        for i, task in enumerate(tasks):
+            log = pack.logs[i]
+            log.log_batch(batches[i])
+            stop = pack.stoppers[i]
+            ppl = float(pack.ppl[i])
+            out.append(TaskResult(log, carbons[i], stop.reached,
+                                  int(pack.rounds[i]),
+                                  float(pack.t[i]) / 3600.0, ppl,
+                                  stop.smoothed or ppl))
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,363 @@
+"""Lane-batched sweep engine (PR 4): lane packs must reproduce per-spec
+serial runs **seed for seed** — same summary scalars, same session
+columns, bit for bit — for sync and async packs alike, plus the
+satellite pieces that ride along (BatchAccumulator growth buffers,
+LaneAccumulator splitting, fused estimator pass, sweep's pool fallback
+and pack grouping)."""
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import importlib
+
+sweep_mod = importlib.import_module("repro.api.sweep")
+
+from repro.api import (Environment, Experiment, ExperimentSpec, LaneRunner,
+                       ModelRef, sweep)
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.estimator import CarbonEstimator
+from repro.core.network import NetworkEnergyModel
+from repro.core.profiles import FLEET
+from repro.core.telemetry import (OUTCOMES, BatchAccumulator,
+                                  LaneAccumulator, SessionBatch, TaskLog)
+from repro.federated.events import SessionSampler
+
+CFG = get_config("paper-charlm")
+
+_COLS = ("client_id", "round_idx", "device_idx", "country_idx",
+         "download_s", "compute_s", "upload_s", "bytes_down", "bytes_up",
+         "start_t", "end_t", "outcome", "staleness")
+
+_ENVS = (Environment(),
+         Environment(download_bps=20e6, upload_bps=5e6,
+                     network=NetworkEnergyModel(e_access_nj=80.0),
+                     fleet=FLEET[:3], pue=1.3,
+                     carbon_intensity={"WORLD": 300.0, "US": 100.0}),
+         Environment(country_mix={"US": 0.5, "FR": 0.5}))
+
+
+def _spec(mode: str, conc: int, goal_frac: float, seed: int,
+          max_rounds: int, env_idx: int = 0,
+          dropout: float = 0.05) -> ExperimentSpec:
+    return ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(
+            mode=mode, concurrency=conc,
+            aggregation_goal=max(1, int(conc * goal_frac)),
+            seed=seed, dropout_rate=dropout),
+        run=RunConfig(target_perplexity=175.0, max_rounds=max_rounds),
+        environment=_ENVS[env_idx % len(_ENVS)], learner="surrogate")
+
+
+def _assert_lane_equals_serial(spec: ExperimentSpec, lane_res,
+                               serial_res) -> None:
+    ss, sl = serial_res.summary(), lane_res.summary()
+    assert ss == sl, {k: (ss[k], sl[k]) for k in ss if ss[k] != sl[k]}
+    cs, cl = serial_res.log.columns(), lane_res.log.columns()
+    assert cs.device_names == cl.device_names
+    assert cs.country_names == cl.country_names
+    for f in _COLS:
+        assert np.array_equal(getattr(cs, f), getattr(cl, f)), (spec, f)
+    # derived views agree too
+    assert serial_res.log.participation() == lane_res.log.participation()
+    assert serial_res.log.eval_history == lane_res.log.eval_history
+
+
+# --------------------------------------------------------- lane equivalence
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=3, max_value=8),
+       st.integers(min_value=0, max_value=10_000))
+def test_lane_pack_matches_serial_property(n_specs, seed0):
+    """Randomized heterogeneous packs (sync AND async, mixed
+    concurrency/goals/seeds/environments, runs short enough that async
+    lanes end with cancelled in-flight sessions) are bit-for-bit equal
+    to per-spec serial runs through the public sweep API."""
+    rng = np.random.default_rng(seed0)
+    specs = []
+    for j in range(n_specs):
+        specs.append(_spec(
+            mode="async" if rng.integers(2) else "sync",
+            conc=int(rng.integers(8, 48)),
+            goal_frac=float(rng.uniform(0.3, 1.0)),
+            seed=int(rng.integers(0, 2 ** 31)),
+            max_rounds=int(rng.integers(5, 40)),
+            env_idx=int(rng.integers(3)),
+            dropout=float(rng.choice([0.0, 0.05, 0.3]))))
+    serial = [Experiment(s).run() for s in specs]
+    lane = sweep(specs, workers=1, vectorize=True)
+    saw_cancelled = False
+    for spec, rl, rs in zip(specs, lane, serial):
+        _assert_lane_equals_serial(spec, rl, rs)
+        if rl.log.participation().get("cancelled"):
+            saw_cancelled = True
+    if any(s.federated.mode == "async" for s in specs):
+        # capped-round async runs always leave a cohort in flight
+        assert saw_cancelled
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_lane_pack_matches_serial_deterministic(mode):
+    """Fixed heterogeneous pack per mode — including a lane that reaches
+    the perplexity target and a lane that dies on the round cap — checked
+    through LaneRunner directly (the runtime-level API)."""
+    from repro.federated.runtime import LaneTask
+    from repro.federated.surrogate import SurrogateLearner
+    specs = [_spec(mode, 40, 0.8, 0, 10_000),
+             _spec(mode, 25, 1.0, 7, 25),
+             _spec(mode, 60, 0.5, 3, 10_000, env_idx=1, dropout=0.2)]
+    serial = [Experiment(s).run() for s in specs]
+    tasks = []
+    for s in specs:
+        cfg = s.model.resolve()
+        tasks.append(LaneTask(
+            model_cfg=cfg, fed=s.federated, run=s.run,
+            learner=SurrogateLearner(cfg, s.federated, s.run),
+            sampler=s.environment.sampler(cfg, s.federated, s.seq_len),
+            estimator=s.environment.estimator()))
+    lane = LaneRunner(mode).run(tasks)
+    for spec, rl, rs in zip(specs, lane, serial):
+        ss, sl = rs.summary(), rl.summary()
+        assert ss == sl, {k: (ss[k], sl[k]) for k in ss if ss[k] != sl[k]}
+        cs, cl = rs.log.columns(), rl.log.columns()
+        for f in _COLS:
+            assert np.array_equal(getattr(cs, f), getattr(cl, f)), f
+    assert any(r.reached_target for r in lane)
+    assert any(not r.reached_target for r in lane)
+
+
+def test_lane_round_events_match_serial():
+    """Per-round streaming survives lane batching: each lane's RoundEvent
+    sequence equals its serial run's."""
+    from repro.federated.runtime import LaneTask
+    from repro.federated.surrogate import SurrogateLearner
+    spec = _spec("async", 30, 0.8, 5, 20)
+    cfg = spec.model.resolve()
+    serial_ev, lane_ev = [], []
+    Experiment(spec).run(on_round=serial_ev.append)
+    task = LaneTask(
+        model_cfg=cfg, fed=spec.federated, run=spec.run,
+        learner=SurrogateLearner(cfg, spec.federated, spec.run),
+        sampler=spec.environment.sampler(cfg, spec.federated, spec.seq_len),
+        estimator=spec.environment.estimator(), on_round=lane_ev.append)
+    LaneRunner("async").run([task])
+    assert len(serial_ev) == len(lane_ev)
+    for a, b in zip(serial_ev, lane_ev):
+        assert (a.round_idx, a.n_sessions, a.mode) == \
+            (b.round_idx, b.n_sessions, b.mode)
+        assert a.t_s == b.t_s and a.perplexity == b.perplexity
+
+
+def test_sweep_vectorize_pack_grouping():
+    """Mixed-mode sweeps split into one pack per mode; real-learner specs
+    are left to the per-spec path; spec order is preserved."""
+    specs = [_spec("sync", 10, 0.8, 0, 5), _spec("async", 10, 0.8, 1, 5),
+             _spec("sync", 12, 0.8, 2, 5)]
+    jobs = sweep_mod._group_packs(specs)
+    assert [(k, idxs) for k, idxs in jobs] == \
+        [("pack", [0, 2]), ("pack", [1])]
+    real = specs[0].replace(learner="real")
+    jobs = sweep_mod._group_packs([real, specs[1]])
+    assert jobs[0] == ("spec", [0]) and jobs[1] == ("pack", [1])
+    # order is preserved end-to-end through the vectorized path
+    res = sweep(specs, workers=1, vectorize=True)
+    for s, r in zip(specs, res):
+        assert r.spec is s
+
+
+def test_pack_chunking_composes_with_workers():
+    """With workers>1 a pack splits into up to `workers` sub-packs (pool
+    utilization); workers=1 keeps one pack per mode (max amortization).
+    Either way results stay identical."""
+    jobs = sweep_mod._group_packs(
+        [_spec("sync", 10, 0.8, s, 5) for s in range(8)])
+    assert jobs == [("pack", list(range(8)))]
+    chunked = sweep_mod._chunk_packs(jobs, 4)
+    assert [idxs for _, idxs in chunked] == [[0, 1], [2, 3], [4, 5], [6, 7]]
+    assert sweep_mod._chunk_packs(jobs, 1) == jobs
+    # oversubscribed: singleton chunks, never empty ones
+    assert [len(i) for _, i in sweep_mod._chunk_packs(jobs, 99)] == [1] * 8
+    specs = [_spec(m, 10, 0.8, s, 5) for m in ("sync", "async")
+             for s in range(3)]
+    r1 = sweep(specs, workers=1, vectorize=True)
+    r4 = sweep(specs, workers=4, vectorize=True)
+    assert all(a.summary() == b.summary() for a, b in zip(r1, r4))
+
+
+def test_lane_sampler_piecewise_matches_serial_and_fused():
+    """The piecewise LaneSampler plan_batch/resolve_batch (the building
+    blocks for future strategies' lane loops, incl. per-row deadlines)
+    match each lane's own SessionSampler bit for bit, and the fused
+    plan_resolve matches the piecewise pair."""
+    from repro.federated.events import LaneSampler
+    feds = [FederatedConfig(seed=3, dropout_rate=0.2),
+            FederatedConfig(seed=11, compression="int8", local_epochs=5)]
+    samplers = [SessionSampler(CFG, f, 64) for f in feds]
+    ls = LaneSampler(samplers)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, 5_000_000, size=160).astype(np.int64)
+    lane = np.repeat([0, 1], 80)
+    starts = rng.uniform(0, 50.0, size=160)
+    deadline = np.full(160, 3000.0)
+    pb = ls.plan_batch(lane, ids, 4)
+    cols, ok = ls.resolve_batch(pb, lane, 4, starts, deadline=deadline)
+    for i, s in enumerate(samplers):
+        sl = slice(80 * i, 80 * (i + 1))
+        ref_pb = s.plan_batch(ids[sl], 4)
+        ref, ref_ok = s.resolve_batch(ref_pb, 4, starts[sl],
+                                      deadline=3000.0)
+        assert np.array_equal(pb.device_idx[sl], ref_pb.device_idx)
+        assert np.array_equal(pb.compute_s[sl], ref_pb.compute_s)
+        assert np.array_equal(ok[sl], ref_ok)
+        for f in ("download_s", "compute_s", "upload_s", "bytes_down",
+                  "bytes_up", "start_t", "end_t", "outcome"):
+            assert np.array_equal(cols[f][sl], getattr(ref, f)), f
+    # fused path == piecewise path (no deadline), incl. apply_deadline
+    pb2, cols2, ok2 = ls.plan_resolve(lane, ids, 4, starts.copy())
+    base, base_ok = ls.resolve_batch(pb, lane, 4, starts)
+    for f in cols2:
+        assert np.array_equal(cols2[f], base[f]), f
+    ls.apply_deadline(pb2, cols2, ok2, deadline)
+    for f in cols2:
+        assert np.array_equal(cols2[f], cols[f]), f
+    assert np.array_equal(ok2, ok)
+
+
+def test_pack_key_requires_explicit_lane_loop(monkeypatch):
+    """A registered strategy subclass that overrides _loop but merely
+    inherits lane_loop must NOT be lane-batched (its serial semantics
+    could differ from the parent's lane loop)."""
+    from repro.federated import runtime as rt
+
+    class Custom(rt.SyncStrategy):
+        def _loop(self, *a, **kw):            # pragma: no cover
+            raise NotImplementedError
+
+    monkeypatch.setitem(rt.STRATEGIES, "sync", Custom)
+    spec = _spec("sync", 10, 0.8, 0, 5)
+    assert sweep_mod._pack_key(spec) is None
+    assert sweep_mod._group_packs([spec]) == [("spec", [0])]
+
+
+# ----------------------------------------------------- sweep pool fallback
+def test_sweep_pool_fallback_delivers_each_result_exactly_once(monkeypatch):
+    """Satellite: when the pool dies mid-sweep, the serial fallback warns
+    (RuntimeWarning) and re-runs ONLY the unfinished specs — on_result
+    fires exactly once per spec and results stay in spec order."""
+    specs = [_spec("sync", 10, 0.8, s, 5) for s in range(4)]
+
+    def broken_pool(jobs, specs_, n, deliver):
+        # finish spec 1, then die like a clobbered /dev/shm would
+        deliver([1], [sweep_mod.run_spec(specs_[1])])
+        raise OSError("pool vanished")
+
+    monkeypatch.setattr(sweep_mod, "_sweep_pool", broken_pool)
+    seen = []
+    with pytest.warns(RuntimeWarning, match="running the remaining 3/4"):
+        results = sweep(specs, workers=4,
+                        on_result=lambda i, r: seen.append(i))
+    assert sorted(seen) == [0, 1, 2, 3]          # exactly once each
+    assert len(seen) == len(set(seen)) == 4
+    for s, r in zip(specs, results):
+        assert r.spec is s                        # spec-order results
+        assert r.summary() == Experiment(s).run().summary()
+
+
+def test_sweep_experiment_failure_propagates(monkeypatch):
+    """An experiment's own exception must NOT trigger the serial fallback
+    (it would run the failing spec twice) — it propagates as-is."""
+    specs = [_spec("sync", 10, 0.8, 0, 5)] * 2
+
+    def exploding_pool(jobs, specs_, n, deliver):
+        raise sweep_mod._TaskFailed(ValueError("boom"))
+
+    monkeypatch.setattr(sweep_mod, "_sweep_pool", exploding_pool)
+    with pytest.raises(ValueError, match="boom"):
+        sweep(specs, workers=2)
+
+
+# ------------------------------------------------------------ accumulators
+def test_batch_accumulator_doubling_buffers_match_concat():
+    """Satellite: the preallocated-buffer accumulator reproduces the old
+    append+concat semantics exactly, across many growth cycles."""
+    s = SessionSampler(CFG, FederatedConfig(), 64)
+    acc = BatchAccumulator(s.device_names, s.country_names)
+    ref = []
+    rng = np.random.default_rng(0)
+    for r in range(40):
+        ids = rng.integers(0, 5_000_000, size=int(rng.integers(1, 200)))
+        b, _ = s.resolve_batch(s.plan_batch(ids.astype(np.int64), r), r,
+                               10.0 * r)
+        ref.append(b)
+        acc.append(client_id=b.client_id, round_idx=b.round_idx,
+                   device_idx=b.device_idx, country_idx=b.country_idx,
+                   download_s=b.download_s, compute_s=b.compute_s,
+                   upload_s=b.upload_s, bytes_down=b.bytes_down,
+                   bytes_up=b.bytes_up, start_t=b.start_t, end_t=b.end_t,
+                   outcome=b.outcome, staleness=b.staleness)
+    cat = SessionBatch.concat(ref)
+    got = acc.to_batch()
+    assert len(acc) == len(cat) == len(got)
+    for f in _COLS:
+        assert np.array_equal(getattr(got, f), getattr(cat, f)), f
+    # to_batch copies out of the live buffers: later appends don't alias
+    got2 = got.client_id.copy()
+    acc.append(client_id=cat.client_id, round_idx=cat.round_idx,
+               device_idx=cat.device_idx, country_idx=cat.country_idx,
+               download_s=cat.download_s, compute_s=cat.compute_s,
+               upload_s=cat.upload_s, bytes_down=cat.bytes_down,
+               bytes_up=cat.bytes_up, start_t=cat.start_t, end_t=cat.end_t,
+               outcome=cat.outcome, staleness=cat.staleness)
+    assert np.array_equal(got.client_id, got2)
+
+
+def test_lane_accumulator_split_preserves_order_and_vocab():
+    lanes = LaneAccumulator([("a-dev",), ("b-dev", "c-dev")],
+                            [("US",), ("FR", "BR")])
+    assert lanes.split()[0].client_id.shape == (0,)   # empty store
+    z = np.zeros(3)
+    for lane, cid0 in ((1, 10), (0, 20), (1, 30)):
+        lanes.append(lane=np.full(3, lane, np.int32),
+                     client_id=np.arange(cid0, cid0 + 3),
+                     round_idx=np.zeros(3, np.int64),
+                     device_idx=np.zeros(3, np.int32),
+                     country_idx=np.zeros(3, np.int32),
+                     download_s=z, compute_s=z, upload_s=z, bytes_down=z,
+                     bytes_up=z, start_t=z, end_t=z,
+                     outcome=np.zeros(3, np.int8),
+                     staleness=np.zeros(3, np.int32))
+    b0, b1 = lanes.split()
+    assert b0.device_names == ("a-dev",)
+    assert b1.device_names == ("b-dev", "c-dev")
+    assert b0.client_id.tolist() == [20, 21, 22]
+    assert b1.client_id.tolist() == [10, 11, 12, 30, 31, 32]  # append order
+
+
+# -------------------------------------------------------------- estimator
+def test_batch_carbon_empty_task_log_is_all_zero_but_server():
+    """Satellite: the fused batch_carbon handles the empty edge cases
+    explicitly — empty batch, empty TaskLog, zero-duration server."""
+    est = CarbonEstimator()
+    d = est.batch_carbon(SessionBatch.empty())
+    assert d == {"client_compute_kg": 0.0, "upload_kg": 0.0,
+                 "download_kg": 0.0}
+    log = TaskLog()
+    bd = est.estimate(log)
+    assert bd.total_kg == 0.0 and bd.server_kg == 0.0
+    log.duration_s = 3600.0          # server charged even with no sessions
+    bd = est.estimate(log)
+    assert bd.server_kg > 0 and bd.client_compute_kg == 0.0
+    assert bd.total_kg == bd.server_kg
+
+
+def test_lane_carbon_matches_per_lane_batch_carbon():
+    """The segment-reduction lane estimator equals per-lane batch_carbon
+    bit for bit (pairwise sums over identical row order)."""
+    from repro.core.estimator import lane_carbon
+    specs = [_spec("sync", 20, 0.8, s, 6, env_idx=s % 3) for s in range(3)]
+    serial = [Experiment(s).run() for s in specs]
+    lane = sweep(specs, workers=1, vectorize=True)
+    for rs, rl in zip(serial, lane):
+        for k, v in rs.carbon.as_dict().items():
+            assert rl.carbon.as_dict()[k] == v, k
