@@ -1,7 +1,10 @@
 """Simulation-engine throughput benchmark: columnar vs scalar engine.
 
-Runs a fixed fig5-style sweep (sync vs async FedBuff at matched
-concurrency = aggregation goal) through BOTH engines:
+Runs a fixed fig5-style sweep (sync vs async FedBuff vs carbon-aware
+FedBuff at matched concurrency = aggregation goal; the carbon-aware
+point runs on the diurnal Environment so the time-resolved intensity
+lookup and probe-screened selection are on the clock) through BOTH
+engines:
 
 * **columnar** — the production `repro.federated.runtime` strategies
   (vectorized `plan_batch`/`resolve_batch`, `SessionBatch` telemetry,
@@ -64,6 +67,7 @@ import os
 import time
 from typing import Dict, List
 
+from repro.api import Environment
 from repro.configs import FederatedConfig, RunConfig, get_config
 from repro.federated.reference import run_scalar
 from repro.federated.runtime import get_strategy
@@ -81,8 +85,14 @@ def sweep_points(quick: bool) -> List[Dict]:
     run_kw = dict(target_perplexity=175.0)
     if quick:
         run_kw["max_rounds"] = 80
-    return [dict(mode=m, concurrency=conc, aggregation_goal=conc,
-                 run_kw=run_kw) for m in ("sync", "async")]
+    pts = [dict(mode=m, concurrency=conc, aggregation_goal=conc,
+                run_kw=run_kw) for m in ("sync", "async")]
+    # carbon-aware runs on the diurnal grid so the time-resolved lookup
+    # and probe-screened selection are both inside the timed region
+    pts.append(dict(mode="carbon-aware", concurrency=conc,
+                    aggregation_goal=conc, run_kw=run_kw,
+                    environment="diurnal"))
+    return pts
 
 
 def _run_engine(engine: str, points: List[Dict]) -> Dict:
@@ -95,12 +105,16 @@ def _run_engine(engine: str, points: List[Dict]) -> Dict:
         fed = FederatedConfig(mode=p["mode"], concurrency=p["concurrency"],
                               aggregation_goal=p["aggregation_goal"])
         run = RunConfig(**p["run_kw"])
+        env = Environment.preset(p["environment"]) \
+            if p.get("environment") else Environment()
         learner = SurrogateLearner(cfg, fed, run)
+        kw = dict(sampler=env.sampler(cfg, fed, 64),
+                  estimator=env.estimator())
         t0 = time.time()
         if engine == "columnar":
-            res = get_strategy(fed.mode).run(cfg, fed, run, learner)
+            res = get_strategy(fed.mode).run(cfg, fed, run, learner, **kw)
         else:
-            res = run_scalar(cfg, fed, run, learner)
+            res = run_scalar(cfg, fed, run, learner, **kw)
         wall = time.time() - t0
         n = res.log.n_sessions
         out["per_mode"][p["mode"]] = {

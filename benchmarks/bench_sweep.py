@@ -41,7 +41,7 @@ try:
 except ImportError:      # run as `python benchmarks/bench_sweep.py`
     from bench_runtime import (BENCH_PATH, HISTORY_PATH, REGRESSION_FACTOR,
                                append_history_row, host_meta)
-from repro.api import ExperimentSpec, ModelRef, sweep
+from repro.api import Environment, ExperimentSpec, ModelRef, sweep
 from repro.configs import FederatedConfig, RunConfig, get_config
 
 
@@ -50,20 +50,25 @@ def grid_specs(quick: bool) -> List[ExperimentSpec]:
     runs small (low concurrency, wide lr axis, capped rounds) so CI
     measures dispatch overhead — exactly the many-small-runs regime lane
     batching amortizes; full sweeps the paper-scale concurrencies to
-    convergence."""
+    convergence. Half the points (local_epochs=3) run on the diurnal
+    Environment, so every pack mixes static and time-varying intensity
+    lanes and the sweep gate exercises the schedule lookup path in
+    ``estimator.lane_carbon``."""
     concs = (25, 50) if quick else (50, 100, 200, 400)
     lrs = (0.003, 0.01, 0.03, 0.1, 0.3, 1.0) if quick \
         else (0.01, 0.03, 0.1, 0.3)
     run_kw: Dict = dict(target_perplexity=175.0)
     if quick:
         run_kw["max_rounds"] = 150
+    envs = {1: Environment(), 3: Environment.preset("diurnal")}
     return [ExperimentSpec(
                 model=ModelRef("paper-charlm"),
                 federated=FederatedConfig(
                     mode=mode, concurrency=conc,
                     aggregation_goal=int(conc * 0.8),
                     client_lr=lr, local_epochs=ep),
-                run=RunConfig(**run_kw), learner="surrogate")
+                run=RunConfig(**run_kw), environment=envs[ep],
+                learner="surrogate")
             for mode in ("sync", "async")
             for conc in concs
             for lr in lrs
@@ -98,7 +103,8 @@ def run_bench(quick: bool) -> Dict:
     return {
         "workload": {"style": "fig1+fig10 design grid", "quick": quick,
                      "points": n,
-                     "modes": ["sync", "async"]},
+                     "modes": ["sync", "async"],
+                     "environments": ["static", "diurnal"]},
         "points": n,
         "sessions": sessions,
         "serial": {"wall_s": round(wall_serial, 4),

@@ -1,14 +1,23 @@
 """Paper §1/§5.1 headline table: component shares of total carbon.
 
 Target (paper, measured at scale): client+comm = ~97%, client compute
-~46-50%, upload ~27-29%, download ~22-24%, server ~1-2%."""
+~46-50%, upload ~27-29%, download ~22-24%, server ~1-2%.
+
+``run_fleet_presets`` adds the device-heterogeneity companion point: the
+same fig5-style breakdown under the ``Environment.preset`` fleets
+("flagship-only" vs "entry-heavy" vs the default mix) — how the
+compute/communication balance moves when the fleet's silicon changes."""
 from __future__ import annotations
 
-from benchmarks.common import run_points, write_csv
+from typing import Dict, List, Tuple
+
+from benchmarks.common import Environment, run_points, write_csv
 
 PAPER = {"client_compute": (0.46, 0.50), "upload": (0.27, 0.29),
          "download": (0.22, 0.24), "server": (0.01, 0.02)}
 SLACK = 0.07   # simulated fleet tolerance
+
+FLEET_PRESETS = ("default", "flagship-only", "entry-heavy")
 
 
 def run(fast: bool = False):
@@ -28,7 +37,29 @@ def run(fast: bool = False):
     return rows, derived
 
 
+def run_fleet_presets(fast: bool = False) -> Tuple[List[Dict], Dict]:
+    """One sync fig5 point per fleet preset; rows carry a ``fleet``
+    label, ``derived`` the headline compute-share comparison."""
+    conc = 400 if fast else 1000
+    rows, derived = [], {}
+    for name in FLEET_PRESETS:
+        env = Environment() if name == "default" \
+            else Environment.preset(name)
+        (row,) = run_points([dict(mode="sync", concurrency=conc,
+                                  aggregation_goal=conc)],
+                            environment=env)
+        row["fleet"] = name
+        rows.append(row)
+        derived[f"{name}_client_compute"] = round(
+            row["shares_client_compute"], 4)
+        derived[f"{name}_carbon_total_kg"] = row["carbon_total_kg"]
+    return rows, derived
+
+
 if __name__ == "__main__":
     rows, d = run()
     print(write_csv(rows, "results/table_component_breakdown.csv"))
     print(d)
+    frows, fd = run_fleet_presets()
+    print(write_csv(frows, "results/table_fleet_presets.csv"))
+    print(fd)

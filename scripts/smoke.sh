@@ -4,16 +4,17 @@
 #
 #   bash scripts/smoke.sh            # from the repo root
 #
-# Step 2 loads the committed spec artifacts (one sync, one async), runs
-# each, then re-serializes, reloads and re-runs, asserting both runs
-# produce the identical Result.summary() — the repro.api reproducibility
-# contract, exercised on BOTH event loops.
+# Step 2 loads the committed spec artifacts (one sync, one async, one
+# carbon-aware on the diurnal grid), runs each, then re-serializes,
+# reloads and re-runs, asserting both runs produce the identical
+# Result.summary() — the repro.api reproducibility contract, exercised
+# on ALL THREE event loops (and on the intensity_schedule round-trip).
 #
 # Step 3 runs the quick fig5-style engine benchmark (columnar vs scalar),
 # refreshes BENCH_runtime.json + BENCH_history.json, and FAILS if the
 # columnar engine's quick sessions/sec regressed more than 2x against the
-# recorded baseline — overall or in either mode (sync and async are gated
-# separately).
+# recorded baseline — overall or in any mode (sync, async and
+# carbon-aware are each gated separately).
 #
 # Step 4 runs the quick design-space sweep benchmark (lane-batched packs
 # vs sweep(workers=1) serial; summaries must match seed-for-seed) and
@@ -31,6 +32,8 @@ echo "== smoke 2/4: ExperimentSpec JSON dry-runs (with round-trip check) =="
 python -m repro.api examples/specs/charlm_sync_small.json \
     --roundtrip-check --quiet
 python -m repro.api examples/specs/charlm_async_small.json \
+    --roundtrip-check --quiet
+python -m repro.api examples/specs/charlm_carbonaware_small.json \
     --roundtrip-check --quiet
 
 echo "== smoke 3/4: runtime benchmark (quick, per-mode 2x regression gate) =="

@@ -8,6 +8,15 @@ The seed codebase hard-wired all of these as module-level defaults; an
 `CarbonEstimator`, which is what makes scenarios like geographically
 shifted intensity (CAFE) or a device-heterogeneous fleet expressible as
 config rather than code forks.
+
+Time is first-class: ``intensity_schedule`` maps countries to
+piecewise-constant diurnal gCO2e/kWh curves (equal segments over a 24 h
+cycle; ``intensity_phase_h`` carries per-country UTC offsets so the shared
+task clock lines up with local solar time). An empty/constant schedule is
+the degenerate static case and stays bit-for-bit identical to the plain
+table. ``Environment.preset`` ships the named scenario bundles: the
+"diurnal" grid and the device-heterogeneous "flagship-only" /
+"entry-heavy" fleets.
 """
 from __future__ import annotations
 
@@ -17,13 +26,17 @@ from typing import Mapping, Optional, Sequence, Tuple
 
 from repro.configs.base import FederatedConfig, ModelConfig
 from repro.core.carbon import (CARBON_INTENSITY, DATACENTER_LOCATIONS, PUE,
-                               IntensityModel)
+                               UTC_OFFSET_H, IntensityModel,
+                               diurnal_schedule)
 from repro.core.energy import SERVER_TASK_POWER_W
 from repro.core.estimator import CarbonEstimator
 from repro.core.network import NetworkEnergyModel
 from repro.core.profiles import (COUNTRY_MIX, DOWNLOAD_BPS, FLEET, UPLOAD_BPS,
                                  DeviceProfile)
 from repro.federated.events import SessionSampler
+
+_FLAGSHIP_GFLOPS = 5.0    # flagship cut line for the fleet presets
+_ENTRY_GFLOPS = 2.0
 
 
 @dataclass(frozen=True)
@@ -40,13 +53,57 @@ class Environment:
     download_bps: float = DOWNLOAD_BPS
     upload_bps: float = UPLOAD_BPS
     server_power_w: float = SERVER_TASK_POWER_W
+    # time-varying grid: country -> per-segment gCO2e/kWh over a 24 h
+    # cycle (empty = static), country -> phase offset in hours
+    intensity_schedule: Mapping[str, Sequence[float]] = field(
+        default_factory=dict)
+    intensity_phase_h: Mapping[str, float] = field(default_factory=dict)
+
+    # ------------------------------------------------------------ presets
+    @classmethod
+    def preset(cls, name: str, **overrides) -> "Environment":
+        """Named scenario bundles (further ``Environment`` kwargs may be
+        layered on top):
+
+        * ``"diurnal"`` — every country's intensity swings through the
+          default diurnal shape (midday solar dip, evening peak) around
+          its static mean, phased by UTC offset. The canonical
+          time-varying grid for carbon-aware scheduling experiments.
+        * ``"flagship-only"`` — the device fleet restricted to flagship
+          SoCs (>= ~5 effective GFLOP/s): short sessions, high power.
+        * ``"entry-heavy"`` — fleet popularity reweighted toward
+          entry-level devices (3x weight under ~2 GFLOP/s, flagships
+          halved): long sessions on low-power silicon.
+        """
+        if name == "diurnal":
+            base = dict(intensity_schedule=diurnal_schedule(),
+                        intensity_phase_h=dict(UTC_OFFSET_H))
+        elif name == "flagship-only":
+            base = dict(fleet=tuple(
+                p for p in FLEET if p.train_gflops >= _FLAGSHIP_GFLOPS))
+        elif name == "entry-heavy":
+            base = dict(fleet=tuple(
+                dataclasses.replace(
+                    p, weight=p.weight * (
+                        3.0 if p.train_gflops < _ENTRY_GFLOPS else
+                        0.5 if p.train_gflops >= _FLAGSHIP_GFLOPS else 1.0))
+                for p in FLEET))
+        else:
+            raise ValueError(
+                f"unknown Environment preset {name!r}; known: "
+                "'diurnal', 'flagship-only', 'entry-heavy'")
+        base.update(overrides)
+        return cls(**base)
 
     # ------------------------------------------------------------ wiring
     def intensity_model(self) -> IntensityModel:
         return IntensityModel(table=dict(self.carbon_intensity),
                               datacenter_locations=dict(
                                   self.datacenter_locations),
-                              pue=self.pue)
+                              pue=self.pue,
+                              schedule={c: tuple(v) for c, v in
+                                        self.intensity_schedule.items()},
+                              phase_h=dict(self.intensity_phase_h))
 
     def estimator(self) -> CarbonEstimator:
         return CarbonEstimator(network=self.network,
@@ -74,6 +131,9 @@ class Environment:
             "download_bps": self.download_bps,
             "upload_bps": self.upload_bps,
             "server_power_w": self.server_power_w,
+            "intensity_schedule": {c: list(v) for c, v in
+                                   self.intensity_schedule.items()},
+            "intensity_phase_h": dict(self.intensity_phase_h),
         }
 
     @classmethod

@@ -2,10 +2,11 @@
 
 A spec is a frozen, JSON-round-trippable value: model reference (registry
 arch id or inline config, plus reduced/override knobs), the federated and
-run configs, the `Environment` bundle, and the learner choice. Specs are
-shareable artifacts — serialize one, hand it to a colleague (or a CI
-smoke job), and re-running it with the same seed reproduces the same
-`Result.summary()`.
+run configs, the `Environment` bundle (including the time-varying
+`intensity_schedule` / `intensity_phase_h` grid curves), and the learner
+choice. Specs are shareable artifacts — serialize one, hand it to a
+colleague (or a CI smoke job), and re-running it with the same seed
+reproduces the same `Result.summary()`.
 """
 from __future__ import annotations
 

@@ -29,8 +29,8 @@ in one lane-columnar store, and the estimator reduces per-lane segments.
 Pack-compatibility rules — specs pack together iff they share:
 
 * ``federated.mode`` (one lockstep window shape per pack), where the
-  registered strategy implements ``lane_loop`` ("sync" and "async" do;
-  custom strategies without it run per-spec);
+  registered strategy implements ``lane_loop`` ("sync", "async" and
+  "carbon-aware" do; custom strategies without it run per-spec);
 * ``learner == "surrogate"`` (a real JAX learner gains nothing from
   lockstep batching; real-learner specs run per-spec).
 

@@ -140,7 +140,9 @@ INPUT_SHAPES = {
 
 @dataclass(frozen=True)
 class FederatedConfig:
-    mode: str = "sync"                  # "sync" (FedAvg) | "async" (FedBuff)
+    # "sync" (FedAvg) | "async" (FedBuff) | "carbon-aware" (FedBuff with
+    # grid-intensity-biased cohort selection, CAFE-style time/geo shifting)
+    mode: str = "sync"
     concurrency: int = 100              # users training simultaneously
     aggregation_goal: int = 80          # min client responses before update
     local_epochs: int = 1
@@ -160,10 +162,19 @@ class FederatedConfig:
     # update compression on the wire (paper §6 / Prasad et al.)
     compression: str = "none"           # "none" | "int8"
     quant_block: int = 256
+    # carbon-aware selection (mode="carbon-aware"): dispatch is biased
+    # toward the `carbon_topk` lowest-intensity countries at the current
+    # clock; `carbon_explore` is the exploration floor — the probability a
+    # dispatch skips the filter entirely, keeping every country in the
+    # cohort mix (honest convergence stats, no starved regions)
+    carbon_topk: int = 6
+    carbon_explore: float = 0.1
 
     def __post_init__(self):
-        assert self.mode in ("sync", "async")
+        assert self.mode in ("sync", "async", "carbon-aware")
         assert self.aggregation_goal <= self.concurrency
+        assert self.carbon_topk >= 1
+        assert 0.0 <= self.carbon_explore <= 1.0
 
 
 @dataclass(frozen=True)

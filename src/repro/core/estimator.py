@@ -9,6 +9,15 @@ Components:
 Network-infrastructure energy is attributed at the client country intensity
 (the access/metro portion dominates the per-bit energy and sits near the
 client). Dropped / timed-out sessions are charged for whatever they burned.
+
+When the grid model carries diurnal schedules (time-varying intensity,
+``IntensityModel.schedule``), every reduction path — vectorized
+``batch_carbon``/``estimate``, the scalar ``session_carbon`` loop, and the
+lane-pack ``lane_carbon`` — integrates energy x intensity(t) over each
+session phase's time span instead of multiplying by one static value; flat
+schedules keep the static fast path bit-for-bit. Server energy stays at
+the (static) datacenter-weighted intensity — datacenters buy around-the-
+clock supply, the paper's point being that *client* fleets cannot.
 """
 from __future__ import annotations
 
@@ -73,10 +82,24 @@ class CarbonEstimator:
     def session_carbon(self, s: ClientSession) -> Dict[str, float]:
         prof = self.profiles[s.device]
         e = client_session_energy(prof, s.compute_s, s.download_s, s.upload_s)
-        ci = self.intensity.intensity(s.country)
         net_up_j = self.network.transfer_energy_j(s.bytes_up)
         net_down_j = self.network.transfer_energy_j(s.bytes_down)
         co2e = self.intensity.co2e_kg
+        if self.intensity.is_dynamic((s.country,)):
+            # sessions run download -> compute -> upload back to back; each
+            # phase is charged the mean intensity over its own time span
+            a1 = s.start_t + s.download_s
+            a2 = a1 + s.compute_s
+            mi = self.intensity.mean_intensity
+            return {
+                "client_compute_kg": co2e(e.compute_j,
+                                          mi(s.country, a1, a2)),
+                "upload_kg": co2e(e.upload_j + net_up_j,
+                                  mi(s.country, a2, a2 + s.upload_s)),
+                "download_kg": co2e(e.download_j + net_down_j,
+                                    mi(s.country, s.start_t, a1)),
+            }
+        ci = self.intensity.intensity(s.country)
         return {
             "client_compute_kg": co2e(e.compute_j, ci),
             "upload_kg": co2e(e.upload_j + net_up_j, ci),
@@ -95,7 +118,7 @@ class CarbonEstimator:
                     "download_kg": 0.0}
         kg = _kg_rows(self, b.device_names, b.device_idx, b.country_names,
                       b.country_idx, b.compute_s, b.upload_s, b.download_s,
-                      b.bytes_up, b.bytes_down)
+                      b.bytes_up, b.bytes_down, b.start_t)
         return {"client_compute_kg": float(kg[0].sum()),
                 "upload_kg": float(kg[1].sum()),
                 "download_kg": float(kg[2].sum())}
@@ -129,24 +152,38 @@ class CarbonEstimator:
 
 def _kg_rows(est: CarbonEstimator, device_names, device_idx, country_names,
              country_idx, compute_s, upload_s, download_s, bytes_up,
-             bytes_down) -> np.ndarray:
+             bytes_down, start_t) -> np.ndarray:
     """Per-row (3, n) kg matrix — rows: client_compute / upload / download.
     ``co2e_kg`` is plain arithmetic, so it broadcasts over the per-row
     energy/intensity columns — IntensityModel overrides stay honored.
     (Lane packs with differing network/intensity models are handled by
-    calling this once per lane with that lane's estimator.)"""
+    calling this once per lane with that lane's estimator.)
+
+    With a time-varying intensity schedule, each energy row is charged the
+    mean intensity over its own phase span (sessions run download ->
+    compute -> upload back to back from ``start_t``); the static path is
+    untouched, so flat-schedule models stay bit-for-bit identical."""
     profs = [est.profiles[n] for n in device_names]
     cpu_w = np.asarray([p.cpu_power_w for p in profs])[device_idx]
     tx_w = np.asarray([p.wifi_tx_power_w for p in profs])[device_idx]
     rx_w = np.asarray([p.wifi_rx_power_w for p in profs])[device_idx]
-    ci = np.asarray([est.intensity.intensity(c)
-                     for c in country_names])[country_idx]
     epb = est.network.energy_per_bit_j
-    e = np.empty((3, len(ci)))
+    n = len(device_idx)
+    e = np.empty((3, n))
     e[0] = cpu_w * compute_s
     e[1] = tx_w * upload_s + 8.0 * bytes_up * epb
     e[2] = rx_w * download_s + 8.0 * bytes_down * epb
-    return est.intensity.co2e_kg(e, ci)
+    tab = est.intensity.vocab_schedule(tuple(country_names))
+    if not tab.any_dynamic:
+        ci = tab.static[country_idx]
+        return est.intensity.co2e_kg(e, ci)
+    a1 = start_t + download_s
+    a2 = a1 + compute_s
+    ci3 = np.empty((3, n))
+    ci3[0] = tab.mean(country_idx, a1, a2)
+    ci3[1] = tab.mean(country_idx, a2, a2 + upload_s)
+    ci3[2] = tab.mean(country_idx, start_t, a1)
+    return est.intensity.co2e_kg(e, ci3)
 
 
 def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
@@ -176,6 +213,7 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
     down_s = cols["download_s"][order]
     bu_s = cols["bytes_up"][order]
     bd_s = cols["bytes_down"][order]
+    st_s = cols["start_t"][order]
     out: List[CarbonBreakdown] = []
     for i, est in enumerate(estimators):
         sl = slice(int(bounds[i]), int(bounds[i + 1]))
@@ -185,7 +223,7 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
             continue
         kg = _kg_rows(est, device_names[i], dev_s[sl], country_names[i],
                       ctry_s[sl], comp_s[sl], up_s[sl], down_s[sl],
-                      bu_s[sl], bd_s[sl])
+                      bu_s[sl], bd_s[sl], st_s[sl])
         out.append(CarbonBreakdown(float(kg[0].sum()), float(kg[1].sum()),
                                    float(kg[2].sum()),
                                    est._server_kg_s(durations_s[i])))

@@ -197,6 +197,31 @@ def slot_stream_id(seed: int, slot: int, generation: int,
     return int((h >> 11) * _INV53 * population)
 
 
+_PROBE_MIX = 0xA0761D6478BD642F   # probe-lane spacing for carbon-aware picks
+
+
+def probe_uniforms(seed: int, slots: Union[np.ndarray, Sequence[int]],
+                   generations: Union[np.ndarray, Sequence[int]],
+                   n: int) -> np.ndarray:
+    """(B, n) per-(slot, generation) selection-probe uniform streams for
+    the carbon-aware coordinator: column 0 is the exploration draw,
+    columns 1.. are candidate-id draws. Keyed like ``slot_stream_ids`` but
+    spread along a distinct probe lane (``_PROBE_MIX``), so carbon-aware
+    probing never aliases the plain async replacement streams. Identity
+    stays a pure counter function of (seed, slot, generation, probe) —
+    independent of global arrival order, which is what lets the async
+    window merge, the lane engine and the scalar oracle all replay the
+    same picks."""
+    s = np.asarray(slots, dtype=np.uint64)
+    g = np.asarray(generations, dtype=np.uint64)
+    base0 = _U64(((seed & 0xFFFFFFFF) * 0x9E3779B9 + 0x7F4A7C15) & _M64)
+    lanes = (np.arange(1, n + 1, dtype=np.uint64)) * _U64(_PROBE_MIX)
+    with np.errstate(over="ignore"):
+        base = base0 + s * _U64(_SLOT_MIX) + g * _U64(_GOLDEN)
+        h = _splitmix64_arr(base[:, None] + lanes[None, :])
+    return (h >> _U64(11)).astype(np.float64) * _INV53
+
+
 def _lognormal(u1: float, u2: float, sigma: float) -> float:
     # Box-Muller
     r = math.sqrt(-2.0 * math.log(max(u1, 1e-12)))
@@ -291,6 +316,22 @@ class SessionSampler:
         self._gflops = np.asarray([p.train_gflops for p in fleet], np.float64)
         self.device_names: Tuple[str, ...] = tuple(p.name for p in fleet)
         self.country_names: Tuple[str, ...] = tuple(self._countries)
+
+    def country_draw(self, client_ids: Union[np.ndarray, Sequence[int]],
+                     round_idx: int) -> np.ndarray:
+        """Just the country column of ``plan_batch`` (uniform draw 1 of
+        the planner's splitmix pass) — what the carbon-aware coordinator
+        uses to screen candidate ids without planning full sessions.
+        Bit-identical to the ``country_idx`` a subsequent ``plan_batch``
+        of the same ids would produce."""
+        cid = np.asarray(client_ids, np.int64).astype(np.uint64)
+        with np.errstate(over="ignore"):
+            base_r = _U64((self.fed.seed * 1_000_003 + round_idx)
+                          & 0xFFFFFFFF) * _U64(2_654_435_761) \
+                + cid * _U64(97)
+            vals = _splitmix64_arr(base_r + _U64(_GOLDEN))
+        u1 = (vals >> _U64(11)).astype(np.float64) * _INV53
+        return np.searchsorted(self._ccum, u1).astype(np.int32)
 
     # ------------------------------------------------------------ columnar
     def plan_batch(self, client_ids: Union[np.ndarray, Sequence[int]],

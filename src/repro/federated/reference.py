@@ -47,10 +47,34 @@ def run_scalar(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
     est = estimator or CarbonEstimator()
     log = TaskLog()
     stop = _Stopper(run)
-    loop = _sync_loop if fed.mode == "sync" else _async_loop
-    t, rounds, ppl = loop(model_cfg, fed, learner, sampler, log, stop)
+    if fed.mode == "sync":
+        t, rounds, ppl = _sync_loop(model_cfg, fed, learner, sampler, log,
+                                    stop)
+    elif fed.mode == "carbon-aware":
+        t, rounds, ppl = _async_loop(model_cfg, fed, learner, sampler, log,
+                                     stop,
+                                     pick_id=_carbon_pick(sampler, est, fed))
+    else:
+        t, rounds, ppl = _async_loop(model_cfg, fed, learner, sampler, log,
+                                     stop)
     return TaskResult(log, est.estimate_scalar(log), stop.reached, rounds,
                       t / 3600.0, ppl, stop.smoothed or ppl)
+
+
+def _carbon_pick(sampler: SessionSampler, est: CarbonEstimator,
+                 fed: FederatedConfig):
+    """Per-pop replacement picker for the carbon-aware oracle: delegates to
+    the engine's own columnar ``carbon_pick_ids`` with a batch of one, so
+    the oracle is keyed to the SAME probe draws / country screens and the
+    heap loop stays a pure event-order reference."""
+    from repro.federated.runtime import carbon_pick_ids
+
+    def pick(slot: int, gen: int, now: float, version: int) -> int:
+        return int(carbon_pick_ids(sampler, est.intensity, fed,
+                                   np.asarray([slot], np.int64),
+                                   np.asarray([gen], np.int64),
+                                   np.asarray([now]), version)[0])
+    return pick
 
 
 def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
@@ -118,7 +142,13 @@ def _cancel_scalar(kw: dict, t_final: float) -> dict:
     return out
 
 
-def _async_loop(model_cfg, fed, learner, sampler, log, stop):
+def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
+    """The FedBuff heap oracle. ``pick_id(slot, gen, now, version)``
+    overrides replacement identity (default: the per-slot counter streams)
+    — how the carbon-aware twin reuses this loop unchanged."""
+    if pick_id is None:
+        def pick_id(slot, gen, now, version):
+            return slot_stream_id(fed.seed, slot, gen, _POPULATION)
     rng = np.random.default_rng(fed.seed + 2)
     t = 0.0
     version = 0
@@ -171,7 +201,7 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop):
                 log.log_eval(t, version, ppl, stop.smoothed or ppl)
                 if stop.reached or stop.out_of_budget(t, version):
                     break
-        nid = slot_stream_id(fed.seed, slot, gen + 1, _POPULATION)
+        nid = pick_id(slot, gen + 1, t, version)
         dispatch(slot, gen + 1, nid, t)
     # task end: sessions still in flight are logged as cancelled,
     # truncated at the final clock (keeps energy accounting complete)

@@ -2,9 +2,10 @@
 event loops with full carbon telemetry (paper §3.1).
 
 Both loops are ``Strategy`` classes registered in the string-keyed
-``STRATEGIES`` registry ("sync", "async"; ``register_strategy`` is open for
-carbon-aware variants). They drive a pluggable learner (RealLearner or
-SurrogateLearner) through the same PAPAYA-shaped protocol:
+``STRATEGIES`` registry ("sync", "async", "carbon-aware";
+``register_strategy`` stays open for new policies). They drive a pluggable
+learner (RealLearner or SurrogateLearner) through the same PAPAYA-shaped
+protocol:
 
 sync  — each round selects `concurrency` clients ("users per round"); the
         round closes when the `aggregation_goal`-th result arrives; clients
@@ -14,6 +15,13 @@ async — `concurrency` clients are always in flight; a finished client's
         (staleness-weighted) delta joins the buffer; every
         `aggregation_goal` arrivals the server updates and later clients
         train on the newer model (FedBuff). Stragglers never block.
+carbon-aware — the async loop with grid-aware cohort selection (CAFE-style
+        time/geo shifting): each replacement dispatch screens a counter-
+        keyed stream of candidate ids and takes the first whose country
+        draw lands in the ``carbon_topk`` lowest-intensity countries at
+        the dispatch clock (``Environment.intensity_schedule`` supplies
+        the diurnal curves), with a ``carbon_explore`` floor of
+        unscreened dispatches. See ``CarbonAwareStrategy``.
 
 Both loops are columnar end-to-end: cohorts are planned/resolved through
 the vectorized ``SessionSampler.plan_batch``/``resolve_batch`` and logged
@@ -54,7 +62,7 @@ from repro.core.estimator import (CarbonBreakdown, CarbonEstimator,
 from repro.core.telemetry import (OUTCOME_CODE, BatchAccumulator,
                                   LaneAccumulator, SessionBatch, TaskLog)
 from repro.federated.events import (LaneSampler, SessionSampler,
-                                    slot_stream_ids)
+                                    probe_uniforms, slot_stream_ids)
 
 _SERVER_AGG_S = 2.0     # server-side aggregation latency per update
 _POPULATION = 5_000_000  # eligible-device pool the coordinator selects from
@@ -90,7 +98,7 @@ class RoundEvent:
     perplexity: float
     smoothed_perplexity: float
     n_sessions: int              # client sessions logged so far
-    mode: str                    # strategy key ("sync" / "async")
+    mode: str                    # strategy key ("sync"/"async"/"carbon-aware")
 
 
 RoundCallback = Callable[[RoundEvent], None]
@@ -211,6 +219,9 @@ class Strategy:
             on_round: Optional[RoundCallback] = None) -> TaskResult:
         sampler = sampler or SessionSampler(model_cfg, fed, seq_len)
         est = estimator or CarbonEstimator()
+        # selection policies may read the environment's grid model (the
+        # carbon-aware strategy screens candidates by intensity-at-clock)
+        self._estimator = est
         log = TaskLog()
         stop = _Stopper(run)
         t, rounds, ppl = self._loop(model_cfg, fed, learner, sampler, log,
@@ -436,12 +447,28 @@ class AsyncStrategy(Strategy):
     final clock.
     """
 
+    # ------------------------------------------------------ dispatch hooks
+    # Replacement *identity* is the one policy axis subclasses may bend
+    # without touching the window merge: ids must stay a pure function of
+    # (seed, slot, generation, dispatch clock, model version) — never of
+    # global arrival order — so the merge, the lane engine and the scalar
+    # oracle keep replaying the same draws. The carbon-aware strategy
+    # overrides these to screen candidates by grid intensity.
+    def _replacement_ids(self, sampler: SessionSampler, fed: FederatedConfig,
+                         slots: np.ndarray, gens: np.ndarray,
+                         starts: np.ndarray, version: int) -> np.ndarray:
+        return slot_stream_ids(fed.seed, slots, gens, _POPULATION)
+
+    def _lane_replacement_ids(self, pack: "_LanePack", lane: np.ndarray,
+                              slots: np.ndarray, gens: np.ndarray,
+                              starts: np.ndarray, version: int) -> np.ndarray:
+        return pack.lanes.slot_stream_ids(lane, slots, gens, _POPULATION)
+
     def _loop(self, model_cfg, fed, learner, sampler, log, stop, on_round):
-        assert fed.mode == "async"
+        assert fed.mode == self.mode
         rng = np.random.default_rng(fed.seed + 2)
         conc = fed.concurrency
         goal = fed.aggregation_goal
-        seed = fed.seed
         t = 0.0
         version = 0
         ppl = float(model_cfg.vocab_size)
@@ -494,8 +521,9 @@ class AsyncStrategy(Strategy):
                 need = np.nonzero(frontier)[0]
                 slots_n = slot_all[need]
                 gens_n = gen_all[need] + 1
-                ids_n = slot_stream_ids(seed, slots_n, gens_n, _POPULATION)
                 starts_n = np.maximum(t0, end_all[need])
+                ids_n = self._replacement_ids(sampler, fed, slots_n, gens_n,
+                                              starts_n, version)
                 bn, okn = sampler.resolve_batch(
                     sampler.plan_batch(ids_n, version), version, starts_n)
                 succ[need] = n_rows + np.arange(len(need))
@@ -572,9 +600,14 @@ class AsyncStrategy(Strategy):
                 alive[b_slot] = False   # its replacement never went out
                 break
             # the boundary slot's replacement goes out AFTER the update,
-            # against the new model version (same slot-stream id either way)
+            # against the new model version (the plain async stream id is
+            # version-independent; a carbon-aware pick may differ from the
+            # speculative expansion row, which is overwritten here anyway)
             b_gen = int(A["gen"][b_row]) + 1
-            nid = slot_stream_ids(seed, [b_slot], [b_gen], _POPULATION)
+            nid = self._replacement_ids(sampler, fed,
+                                        np.asarray([b_slot], np.int64),
+                                        np.asarray([b_gen], np.int64),
+                                        np.asarray([t]), version)
             b1, okb = sampler.resolve_batch(
                 sampler.plan_batch(nid, version), version, t)
             row = _async_rows(np.asarray([b_slot], np.int64),
@@ -726,9 +759,9 @@ class AsyncStrategy(Strategy):
                 lanes_n = win_lane[need]
                 slots_n = slot_all[need]
                 gens_n = gen_all[need] + 1
-                ids_n = lanes.slot_stream_ids(lanes_n, slots_n, gens_n,
-                                              _POPULATION)
                 starts_n = np.maximum(t0[lanes_n], end_all[need])
+                ids_n = self._lane_replacement_ids(pack, lanes_n, slots_n,
+                                                   gens_n, starts_n, k)
                 _, bn, okn = lanes.plan_resolve(lanes_n, ids_n, k, starts_n)
                 end_n = bn["end_t"]
                 succ[need] = n_rows + np.arange(len(need))
@@ -865,13 +898,115 @@ class AsyncStrategy(Strategy):
                 rl = np.asarray([r[0] for r in redis], np.intp)
                 rs = np.asarray([r[1] for r in redis], np.int64)
                 rg = np.asarray([r[2] for r in redis], np.int64)
-                nid = lanes.slot_stream_ids(rl, rs, rg, _POPULATION)
+                nid = self._lane_replacement_ids(pack, rl, rs, rg,
+                                                 pack.t[rl], k + 1)
                 _, bb, okb = lanes.plan_resolve(rl, nid, k + 1, pack.t[rl])
                 row = _async_rows_cols(rs, rg, k + 1, bb, okb)
                 fl_rows = offsets[rl] + rs
                 for f in flight:
                     flight[f][fl_rows] = row[f]
             k += 1
+
+
+# ---------------------------------------------------------------------------
+# Carbon-aware selection (CAFE-style time/geo shifting)
+# ---------------------------------------------------------------------------
+
+_CARBON_PROBES = 8   # candidate ids screened per dispatch
+
+
+def carbon_pick_ids(sampler: SessionSampler, intensity, fed: FederatedConfig,
+                    slots: np.ndarray, gens: np.ndarray,
+                    starts, version: int) -> np.ndarray:
+    """Carbon-aware replacement ids, columnar: for each (slot, generation)
+    dispatch, walk that slot's probe stream (``events.probe_uniforms``) and
+    pick the first candidate whose deterministic country draw lands in the
+    ``fed.carbon_topk`` lowest-intensity countries at the row's dispatch
+    clock; rows under the ``fed.carbon_explore`` floor (and rows where all
+    ``_CARBON_PROBES`` candidates miss) take the unscreened first probe.
+
+    Every output is a pure per-row function of (seed, slot, generation,
+    start clock, version) and the environment — never of batch grouping or
+    global arrival order — so the serial loop, the lane-batched engine and
+    the scalar oracle replay identical picks, row for row."""
+    slots = np.asarray(slots, np.int64)
+    gens = np.asarray(gens, np.int64)
+    n = len(slots)
+    u = probe_uniforms(fed.seed, slots, gens, _CARBON_PROBES + 1)
+    cand = (u[:, 1:] * _POPULATION).astype(np.int64)
+    names = sampler.country_names
+    k = min(int(fed.carbon_topk), len(names))
+    if k >= len(names):
+        return cand[:, 0]
+    ctry = sampler.country_draw(cand.reshape(-1), version) \
+        .reshape(n, _CARBON_PROBES)
+    # the allowed set is "intensity <= the k-th smallest" — a value
+    # threshold, not an argpartition rank, so ties resolve identically
+    # everywhere regardless of partition order
+    tab = intensity.vocab_schedule(names)
+    if not tab.any_dynamic:
+        # static grid: the allowed-country mask is clock-independent —
+        # one (V,) threshold serves every row (the window merge issues
+        # many small dispatch batches; skip the per-row (n, V) work)
+        allowed_row = tab.static <= np.partition(tab.static, k - 1)[k - 1]
+        allowed = allowed_row[ctry]
+    else:
+        starts = np.broadcast_to(np.asarray(starts, np.float64), (n,))
+        ci = intensity.intensity_at(names, starts[:, None])   # (n, V)
+        tau = np.partition(ci, k - 1, axis=1)[:, k - 1:k]
+        allowed = (ci <= tau)[np.arange(n)[:, None], ctry]
+    j = np.where(allowed.any(axis=1), np.argmax(allowed, axis=1), 0)
+    j[u[:, 0] < fed.carbon_explore] = 0
+    return cand[np.arange(n), j]
+
+
+@register_strategy("carbon-aware")
+class CarbonAwareStrategy(AsyncStrategy):
+    """FedBuff with carbon-aware cohort selection: the same always-
+    ``concurrency``-in-flight event loop as "async", but every replacement
+    dispatch screens a short stream of candidate client ids and picks the
+    first whose country (a deterministic sampler draw) sits in the k
+    lowest-intensity countries *at the dispatch clock* — time/geo shifting
+    in the CAFE mold, driven by ``Environment.carbon_intensity`` +
+    ``intensity_schedule``. ``fed.carbon_topk`` sets the country filter
+    width and ``fed.carbon_explore`` the exploration floor (unscreened
+    dispatch probability), so no region is ever starved and convergence
+    stats stay honest. The initial cohort (generation 0) goes out
+    unscreened, exactly like "async" — the filter starts with the first
+    replacement wave.
+
+    Because picks stay pure counter functions of (seed, slot, generation,
+    clock, version), the strategy inherits the async window-batched merge
+    AND its lane_loop unchanged — only the id hooks differ — and stays
+    seed-for-seed equal to its scalar oracle twin
+    (``reference.run_scalar``) and to its own lanes under
+    ``sweep(vectorize=True)``."""
+
+    def _replacement_ids(self, sampler, fed, slots, gens, starts, version):
+        return carbon_pick_ids(sampler, self._estimator.intensity, fed,
+                               slots, gens, starts, version)
+
+    def _lane_replacement_ids(self, pack, lane, slots, gens, starts,
+                              version):
+        # per-lane sub-calls: each lane has its own seed, environment,
+        # country vocabulary and filter knobs. Picks are row-local, so
+        # slicing by lane cannot change any row's result.
+        lane = np.asarray(lane, np.intp)
+        starts = np.broadcast_to(np.asarray(starts, np.float64),
+                                 (len(lane),))
+        ids = np.empty(len(lane), np.int64)
+        for i in np.unique(lane):
+            m = lane == i
+            ids[m] = carbon_pick_ids(pack.lanes.samplers[i],
+                                     pack.tasks[i].estimator.intensity,
+                                     pack.feds[i], slots[m], gens[m],
+                                     starts[m], version)
+        return ids
+
+    # explicit lane-pack opt-in (sweep._pack_key requires lane_loop in
+    # cls.__dict__): the parent's lockstep loop dispatched through THIS
+    # class's id hooks IS the correct lane semantics for this strategy
+    lane_loop = AsyncStrategy.lane_loop
 
 
 # ---------------------------------------------------------------------------

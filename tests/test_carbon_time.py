@@ -1,0 +1,370 @@
+"""Time-varying grid intensity + the carbon-aware strategy (PR 5).
+
+The carbon axis is now intensity(country, t): per-country piecewise-
+constant diurnal schedules flow Environment -> IntensityModel ->
+estimator (all three reduction paths) and drive the "carbon-aware"
+FedBuff strategy's cohort selection. Invariants under test:
+
+* flat/constant schedules are bit-for-bit identical to the static model
+  across sync, async, carbon-aware and lane-pack paths (hypothesis
+  property test);
+* the vectorized schedule lookup (point + span mean) matches hand math,
+  including phase offsets and cycle wrap-around;
+* the carbon-aware columnar engine == its scalar heap oracle seed for
+  seed, static AND diurnal;
+* carbon-aware beats plain async on total CO2e at equal aggregation goal
+  on the default diurnal Environment (the PR's acceptance criterion);
+* Environment presets ("diurnal", "flagship-only", "entry-heavy") and
+  the intensity_schedule JSON round-trip.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (Environment, Experiment, ExperimentSpec, ModelRef,
+                       sweep)
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.carbon import (CARBON_INTENSITY, DIURNAL_SHAPE, UTC_OFFSET_H,
+                               IntensityModel, diurnal_schedule)
+from repro.core.estimator import CarbonEstimator
+from repro.core.profiles import FLEET
+from repro.core.telemetry import ClientSession, TaskLog
+from repro.federated.reference import run_scalar
+from repro.federated.runtime import get_strategy
+from repro.federated.surrogate import SurrogateLearner
+
+CFG = get_config("paper-charlm")
+H = 3600.0
+
+
+def _spec(mode, conc, goal, env, seed=0, max_rounds=15, **fed_kw):
+    return ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(mode=mode, concurrency=conc,
+                                  aggregation_goal=goal, seed=seed,
+                                  **fed_kw),
+        run=RunConfig(target_perplexity=175.0, max_rounds=max_rounds),
+        environment=env, learner="surrogate")
+
+
+# ------------------------------------------------------------ model lookup
+def test_intensity_at_point_phase_and_wrap():
+    m = IntensityModel(schedule={"US": (100.0, 300.0)},
+                       phase_h={"US": 0.0})
+    # 2 equal segments: [0, 12h) -> 100, [12h, 24h) -> 300, repeating
+    assert m.intensity_at(("US",), 0.0)[0] == 100.0
+    assert m.intensity_at(("US",), 11.99 * H)[0] == 100.0
+    assert m.intensity_at(("US",), 12.0 * H)[0] == 300.0
+    assert m.intensity_at(("US",), 36.0 * H)[0] == 300.0     # next day
+    # static countries ignore t entirely
+    assert m.intensity_at(("FR",), 5.0 * H)[0] == CARBON_INTENSITY["FR"]
+    # phase shifts the cycle: +12h swaps the halves
+    m2 = IntensityModel(schedule={"US": (100.0, 300.0)},
+                        phase_h={"US": 12.0})
+    assert m2.intensity_at(("US",), 1.0 * H)[0] == 300.0
+    # negative offsets normalize mod 24
+    m3 = IntensityModel(schedule={"US": (100.0, 300.0)},
+                        phase_h={"US": -12.0})
+    assert m3.intensity_at(("US",), 1.0 * H)[0] == 300.0
+    # (n, V) broadcast: per-row clock x country vocab
+    t = np.asarray([[0.0], [13.0 * H]])
+    ci = m.intensity_at(("US", "FR"), t)
+    assert ci.shape == (2, 2)
+    assert ci[0, 0] == 100.0 and ci[1, 0] == 300.0
+    assert ci[0, 1] == ci[1, 1] == CARBON_INTENSITY["FR"]
+
+
+def test_mean_intensity_integrates_across_segments_and_days():
+    m = IntensityModel(schedule={"US": (100.0, 300.0)})
+    assert m.mean_intensity("US", 0.0, 24 * H) == pytest.approx(200.0)
+    assert m.mean_intensity("US", 0.0, 12 * H) == pytest.approx(100.0)
+    assert m.mean_intensity("US", 6 * H, 18 * H) == pytest.approx(200.0)
+    # 3/4 of the span in the first segment
+    assert m.mean_intensity("US", 9 * H, 13 * H) == pytest.approx(150.0)
+    # wraps across the cycle boundary
+    assert m.mean_intensity("US", 18 * H, 30 * H) == pytest.approx(200.0)
+    # multi-day span converges to the cycle mean
+    assert m.mean_intensity("US", 0.0, 10 * 24 * H) == pytest.approx(200.0)
+    # zero-length span falls back to the point value
+    assert m.mean_intensity("US", 13 * H, 13 * H) == 300.0
+
+
+def test_constant_schedule_collapses_to_static():
+    m = IntensityModel(schedule={"US": (222.0, 222.0, 222.0)})
+    assert not m.is_dynamic()
+    assert m.intensity("US") == 222.0            # exact, not 3*222/3
+    assert m.intensity_at(("US",), 12345.678)[0] == 222.0
+    # one-segment schedules are the same degenerate case
+    m1 = IntensityModel(schedule={"FR": (50.0,)})
+    assert not m1.is_dynamic(("FR",))
+    assert m1.intensity("FR") == 50.0
+    # a genuinely varying schedule is dynamic; cycle mean is the average
+    md = IntensityModel(schedule={"US": (100.0, 300.0)})
+    assert md.is_dynamic() and md.is_dynamic(("US", "FR"))
+    assert not md.is_dynamic(("FR",))
+    assert md.intensity("US") == pytest.approx(200.0)
+
+
+def test_diurnal_schedule_preserves_cycle_mean():
+    sched = diurnal_schedule()
+    assert set(sched) == set(CARBON_INTENSITY)
+    assert sum(DIURNAL_SHAPE) == pytest.approx(0.0)
+    for c, vals in sched.items():
+        assert len(vals) == len(DIURNAL_SHAPE)
+        assert sum(vals) / len(vals) == pytest.approx(CARBON_INTENSITY[c])
+        assert min(vals) > 0
+    m = IntensityModel(schedule=sched, phase_h=UTC_OFFSET_H)
+    # phases differ, so country minima land at different task-clock hours
+    us = [m.intensity_at(("US",), h * H)[0] for h in range(24)]
+    jp = [m.intensity_at(("JP",), h * H)[0] for h in range(24)]
+    assert int(np.argmin(us)) != int(np.argmin(jp))
+
+
+# --------------------------------------------------------------- estimator
+def _session(country, start_t, dn, cp, up, device="pixel-3"):
+    return ClientSession(
+        client_id=1, round_idx=0, device=device, country=country,
+        download_s=dn, compute_s=cp, upload_s=up, bytes_down=64e6,
+        bytes_up=64e6, start_t=start_t, end_t=start_t + dn + cp + up,
+        outcome="completed")
+
+
+def test_estimator_charges_each_phase_at_its_span_mean():
+    sched = {"US": (100.0, 300.0)}
+    est_d = CarbonEstimator(intensity=IntensityModel(schedule=sched))
+    # session: download sits fully in the 100-segment, compute straddles
+    # the 12h edge half-half (mean 200), upload fully in the 300-segment
+    s = _session("US", 10 * H, dn=1 * H, cp=2 * H, up=1 * H)
+    d = est_d.session_carbon(s)
+    est_100 = CarbonEstimator(
+        intensity=IntensityModel(table={**CARBON_INTENSITY, "US": 100.0}))
+    est_200 = CarbonEstimator(
+        intensity=IntensityModel(table={**CARBON_INTENSITY, "US": 200.0}))
+    est_300 = CarbonEstimator(
+        intensity=IntensityModel(table={**CARBON_INTENSITY, "US": 300.0}))
+    assert d["download_kg"] == pytest.approx(
+        est_100.session_carbon(s)["download_kg"])
+    assert d["client_compute_kg"] == pytest.approx(
+        est_200.session_carbon(s)["client_compute_kg"])
+    assert d["upload_kg"] == pytest.approx(
+        est_300.session_carbon(s)["upload_kg"])
+    # and the batch path agrees with the scalar loop on a mixed log
+    log = TaskLog()
+    for i, c in enumerate(("US", "FR", "US", "IN")):
+        log.log_session(_session(c, i * 7 * H, dn=0.5 * H, cp=5 * H,
+                                 up=0.25 * H, device=FLEET[i].name))
+    log.duration_s = 40 * H
+    vec, ref = est_d.estimate(log), est_d.estimate_scalar(log)
+    for k, v in vec.as_dict().items():
+        assert v == pytest.approx(ref.as_dict()[k], rel=1e-9), k
+    # a diurnal grid prices this log differently from the static table
+    static = CarbonEstimator().estimate(log)
+    assert vec.total_kg != static.total_kg
+
+
+# ----------------------------------------------- flat-schedule degeneracy
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.floats(min_value=15.0, max_value=900.0),
+       st.floats(min_value=-12.0, max_value=14.0),
+       st.integers(min_value=0, max_value=10_000))
+def test_flat_schedule_bit_identical_property(n_seg, value, phase, seed):
+    """Satellite: a constant intensity_schedule reproduces the static
+    model bit-for-bit — same summary scalars — across sync, async and
+    carbon-aware, serial AND lane-packed."""
+    consts = {"US": value, "IN": round(value * 1.7, 3), "FR": 42.0}
+    env_static = Environment(
+        carbon_intensity={**CARBON_INTENSITY, **consts})
+    env_sched = Environment(
+        intensity_schedule={c: [v] * n_seg for c, v in consts.items()},
+        intensity_phase_h={"US": phase})
+    for mode in ("sync", "async", "carbon-aware"):
+        mk = lambda env: _spec(mode, 24, 18, env,       # noqa: B023,E731
+                               seed=seed, max_rounds=8)
+        base = Experiment(mk(env_static)).run().summary()
+        flat = Experiment(mk(env_sched)).run().summary()
+        assert base == flat, (mode, {k: (base[k], flat[k])
+                                     for k in base if base[k] != flat[k]})
+        lane = sweep([mk(env_sched)], workers=1, vectorize=True)
+        assert lane[0].summary() == base, mode
+
+
+# ------------------------------------------- carbon-aware strategy engine
+def test_country_draw_pins_plan_batch_country_column():
+    """The carbon-aware screen is only correct because ``country_draw``
+    reproduces the planner's country draw exactly — pin the coupling so a
+    future re-keying of the fused planner uniforms cannot silently desync
+    the filter (every equivalence test would stay green if it did)."""
+    env = Environment(country_mix={"US": 0.3, "FR": 0.3, "IN": 0.4})
+    for fed in (FederatedConfig(seed=5),
+                FederatedConfig(seed=91, compression="int8")):
+        for sampler in (env.sampler(CFG, fed, 64),
+                        Environment().sampler(CFG, fed, 64)):
+            ids = np.random.default_rng(fed.seed).integers(
+                0, 5_000_000, 300).astype(np.int64)
+            for r in (0, 7, 1_000_003):
+                assert np.array_equal(
+                    sampler.country_draw(ids, r),
+                    sampler.plan_batch(ids, r).country_idx), (fed.seed, r)
+
+
+
+@pytest.mark.parametrize("env", [Environment(),
+                                 Environment.preset("diurnal")],
+                         ids=["static", "diurnal"])
+@pytest.mark.parametrize("conc,goal", [(100, 80), (37, 30)])
+def test_carbon_aware_matches_scalar_oracle(env, conc, goal):
+    """The columnar carbon-aware engine (window-batched merge + probed
+    replacement ids) reproduces the scalar heap oracle seed for seed."""
+    fed = FederatedConfig(mode="carbon-aware", concurrency=conc,
+                          aggregation_goal=goal)
+    run = RunConfig(target_perplexity=175.0, max_rounds=40)
+    vec = get_strategy("carbon-aware").run(
+        CFG, fed, run, SurrogateLearner(CFG, fed, run),
+        sampler=env.sampler(CFG, fed, 64), estimator=env.estimator())
+    ref = run_scalar(CFG, fed, run, SurrogateLearner(CFG, fed, run),
+                     sampler=env.sampler(CFG, fed, 64),
+                     estimator=env.estimator())
+    assert vec.rounds == ref.rounds
+    assert vec.log.n_sessions == ref.log.n_sessions
+    assert vec.log.participation() == ref.log.participation()
+    assert vec.duration_h == pytest.approx(ref.duration_h, rel=1e-9)
+    for k, v in vec.carbon.as_dict().items():
+        assert v == pytest.approx(ref.carbon.as_dict()[k], rel=1e-9), k
+    assert vec.log.mean_staleness() == pytest.approx(
+        ref.log.mean_staleness(), rel=1e-9)
+
+
+def test_carbon_aware_beats_async_on_diurnal_environment():
+    """Acceptance: at equal aggregation goal on the default diurnal
+    Environment, carbon-aware reports lower total CO2e than async, with
+    comparable convergence (same update count, similar perplexity)."""
+    env = Environment.preset("diurnal")
+    run = RunConfig(target_perplexity=175.0, max_rounds=60)
+    out = {}
+    for mode in ("async", "carbon-aware"):
+        fed = FederatedConfig(mode=mode, concurrency=100,
+                              aggregation_goal=80)
+        out[mode] = get_strategy(mode).run(
+            CFG, fed, run, SurrogateLearner(CFG, fed, run),
+            sampler=env.sampler(CFG, fed, 64), estimator=env.estimator())
+    ca, asy = out["carbon-aware"], out["async"]
+    assert ca.rounds == asy.rounds                   # same update budget
+    assert ca.carbon.total_kg < 0.85 * asy.carbon.total_kg
+    # honest convergence: the filter cannot distort learning progress
+    assert ca.final_perplexity == pytest.approx(asy.final_perplexity,
+                                                rel=0.05)
+    # the selection bias is visible in the logged country mix: the mean
+    # static intensity of carbon-aware sessions sits well below async's
+    def mean_ci(res):
+        b = res.log.columns()
+        ci = np.asarray([CARBON_INTENSITY[c] for c in b.country_names])
+        return float(ci[b.country_idx].mean())
+    assert mean_ci(ca) < 0.75 * mean_ci(asy)
+
+
+def test_carbon_aware_exploration_floor_keeps_all_countries():
+    """With a nonzero exploration floor every country keeps appearing in
+    the cohort mix; explore=1.0 disables the filter entirely."""
+    env = Environment.preset("diurnal")
+    run = RunConfig(target_perplexity=175.0, max_rounds=40)
+    fed = FederatedConfig(mode="carbon-aware", concurrency=64,
+                          aggregation_goal=48, carbon_topk=3,
+                          carbon_explore=0.15)
+    res = get_strategy("carbon-aware").run(
+        CFG, fed, run, SurrogateLearner(CFG, fed, run),
+        sampler=env.sampler(CFG, fed, 64), estimator=env.estimator())
+    b = res.log.columns()
+    seen = set(np.asarray(b.country_names)[np.unique(b.country_idx)])
+    assert seen == set(env.country_mix)          # nobody starved
+    # explore=1.0: every dispatch takes the unscreened candidate
+    fed_all = FederatedConfig(mode="carbon-aware", concurrency=64,
+                              aggregation_goal=48, carbon_explore=1.0)
+    res_all = get_strategy("carbon-aware").run(
+        CFG, fed_all, run, SurrogateLearner(CFG, fed_all, run),
+        sampler=env.sampler(CFG, fed_all, 64), estimator=env.estimator())
+    ci = np.asarray([CARBON_INTENSITY[c]
+                     for c in res_all.log.columns().country_names])
+    mean_all = float(ci[res_all.log.columns().country_idx].mean())
+    ci_b = np.asarray([CARBON_INTENSITY[c] for c in b.country_names])
+    mean_filtered = float(ci_b[b.country_idx].mean())
+    assert mean_filtered < mean_all              # the filter was doing work
+
+
+def test_carbon_aware_time_shifts_selection_with_the_clock():
+    """With schedules whose curves cross, the allowed country set at the
+    current clock rotates across the day — time shifting, not just geo.
+    (The default diurnal preset scales every country by the same relative
+    shape, so there the *ranking* is phase-stable by design; crossing
+    requires curves like a solar-heavy vs a coal-baseload grid.)"""
+    from repro.federated.runtime import carbon_pick_ids
+    env = Environment(
+        country_mix={"US": 0.4, "IN": 0.4, "FR": 0.2},
+        intensity_schedule={"US": [20.0, 500.0], "IN": [500.0, 20.0]})
+    model = env.estimator().intensity
+    names = ("US", "IN", "FR")
+    top = lambda t: set(                                   # noqa: E731
+        np.asarray(names)[np.argsort(model.intensity_at(names, t))[:1]])
+    assert top(6 * H) == {"US"} and top(18 * H) == {"IN"}
+    # and picks are batch-shape independent (row-local determinism)
+    env = Environment.preset("diurnal")
+    model = env.estimator().intensity
+    fed = FederatedConfig(mode="carbon-aware", concurrency=8,
+                          aggregation_goal=8)
+    sampler = env.sampler(CFG, fed, 64)
+    slots = np.arange(64, dtype=np.int64)
+    gens = np.ones(64, np.int64)
+    starts = np.linspace(0, 48 * H, 64)
+    whole = carbon_pick_ids(sampler, model, fed, slots, gens, starts, 3)
+    parts = np.concatenate(
+        [carbon_pick_ids(sampler, model, fed, slots[i:i + 7],
+                         gens[i:i + 7], starts[i:i + 7], 3)
+         for i in range(0, 64, 7)])
+    assert np.array_equal(whole, parts)
+
+
+# ---------------------------------------------------------------- presets
+def test_environment_fleet_presets():
+    flag = Environment.preset("flagship-only")
+    assert all(p.train_gflops >= 5.0 for p in flag.fleet)
+    assert 0 < len(flag.fleet) < len(FLEET)
+    heavy = Environment.preset("entry-heavy")
+    assert len(heavy.fleet) == len(FLEET)
+    base_w = {p.name: p.weight for p in FLEET}
+    for p in heavy.fleet:
+        if p.train_gflops < 2.0:
+            assert p.weight == pytest.approx(3.0 * base_w[p.name])
+        elif p.train_gflops >= 5.0:
+            assert p.weight == pytest.approx(0.5 * base_w[p.name])
+    with pytest.raises(ValueError, match="unknown Environment preset"):
+        Environment.preset("nope")
+    # presets compose with overrides
+    env = Environment.preset("diurnal", pue=1.3)
+    assert env.pue == 1.3 and env.intensity_model().is_dynamic()
+
+
+def test_entry_heavy_fleet_shifts_compute_share():
+    """Entry-heavy fleets spend longer on low-power silicon; flagship
+    fleets finish fast at high power — the fig5 balance moves."""
+    run = RunConfig(target_perplexity=175.0, max_rounds=12)
+    shares = {}
+    for name in ("flagship-only", "entry-heavy"):
+        env = Environment.preset(name)
+        fed = FederatedConfig(mode="sync", concurrency=40,
+                              aggregation_goal=32)
+        res = get_strategy("sync").run(
+            CFG, fed, run, SurrogateLearner(CFG, fed, run),
+            sampler=env.sampler(CFG, fed, 64), estimator=env.estimator())
+        shares[name] = res.carbon.shares()["client_compute"]
+    assert shares["entry-heavy"] != shares["flagship-only"]
+
+
+# ------------------------------------------------------------- round-trip
+def test_intensity_schedule_spec_json_roundtrip():
+    env = Environment.preset("diurnal")
+    spec = _spec("carbon-aware", 20, 16, env, max_rounds=6)
+    re_spec = ExperimentSpec.from_json(spec.to_json())
+    assert re_spec.environment.to_dict() == env.to_dict()
+    assert re_spec.federated.carbon_topk == spec.federated.carbon_topk
+    assert Experiment(re_spec).run().summary() == \
+        Experiment(spec).run().summary()

@@ -59,6 +59,26 @@ def test_co2_units():
     assert carbon.co2e_kg(3.6e6, 1000.0) == pytest.approx(1.0)
 
 
+def test_datacenter_intensity_empty_locations_falls_back():
+    """Satellite fix: an empty (or zero-weighted) datacenter fleet must
+    fall back to the model's fallback intensity, not divide by zero."""
+    m = carbon.IntensityModel(datacenter_locations={})
+    assert m.datacenter_intensity() == m.intensity("WORLD")
+    z = carbon.IntensityModel(datacenter_locations={"US": 0})
+    assert z.datacenter_intensity() == z.intensity("WORLD")
+    custom = carbon.IntensityModel(datacenter_locations={},
+                                   table={"WORLD": 475.0, "X": 10.0},
+                                   fallback="X")
+    assert custom.datacenter_intensity() == 10.0
+    # and the estimator path survives it end to end
+    from repro.core.estimator import CarbonEstimator
+    est = CarbonEstimator(intensity=m)
+    log = TaskLog()
+    log.log_session(_session())
+    log.duration_s = 3600.0
+    assert est.estimate(log).server_kg > 0
+
+
 def test_estimator_components_and_accounting_of_dropouts():
     est = CarbonEstimator()
     log = TaskLog()

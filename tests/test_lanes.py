@@ -35,7 +35,10 @@ _ENVS = (Environment(),
                      network=NetworkEnergyModel(e_access_nj=80.0),
                      fleet=FLEET[:3], pue=1.3,
                      carbon_intensity={"WORLD": 300.0, "US": 100.0}),
-         Environment(country_mix={"US": 0.5, "FR": 0.5}))
+         Environment(country_mix={"US": 0.5, "FR": 0.5}),
+         Environment.preset("diurnal"))
+
+_MODES = ("sync", "async", "carbon-aware")
 
 
 def _spec(mode: str, conc: int, goal_frac: float, seed: int,
@@ -70,20 +73,21 @@ def _assert_lane_equals_serial(spec: ExperimentSpec, lane_res,
 @given(st.integers(min_value=3, max_value=8),
        st.integers(min_value=0, max_value=10_000))
 def test_lane_pack_matches_serial_property(n_specs, seed0):
-    """Randomized heterogeneous packs (sync AND async, mixed
-    concurrency/goals/seeds/environments, runs short enough that async
-    lanes end with cancelled in-flight sessions) are bit-for-bit equal
-    to per-spec serial runs through the public sweep API."""
+    """Randomized heterogeneous packs (sync, async AND carbon-aware;
+    mixed concurrency/goals/seeds/environments incl. diurnal intensity
+    schedules, runs short enough that async-family lanes end with
+    cancelled in-flight sessions) are bit-for-bit equal to per-spec
+    serial runs through the public sweep API."""
     rng = np.random.default_rng(seed0)
     specs = []
     for j in range(n_specs):
         specs.append(_spec(
-            mode="async" if rng.integers(2) else "sync",
+            mode=_MODES[int(rng.integers(len(_MODES)))],
             conc=int(rng.integers(8, 48)),
             goal_frac=float(rng.uniform(0.3, 1.0)),
             seed=int(rng.integers(0, 2 ** 31)),
             max_rounds=int(rng.integers(5, 40)),
-            env_idx=int(rng.integers(3)),
+            env_idx=int(rng.integers(len(_ENVS))),
             dropout=float(rng.choice([0.0, 0.05, 0.3]))))
     serial = [Experiment(s).run() for s in specs]
     lane = sweep(specs, workers=1, vectorize=True)
@@ -92,12 +96,12 @@ def test_lane_pack_matches_serial_property(n_specs, seed0):
         _assert_lane_equals_serial(spec, rl, rs)
         if rl.log.participation().get("cancelled"):
             saw_cancelled = True
-    if any(s.federated.mode == "async" for s in specs):
-        # capped-round async runs always leave a cohort in flight
+    if any(s.federated.mode != "sync" for s in specs):
+        # capped-round async-family runs always leave a cohort in flight
         assert saw_cancelled
 
 
-@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("mode", list(_MODES))
 def test_lane_pack_matches_serial_deterministic(mode):
     """Fixed heterogeneous pack per mode — including a lane that reaches
     the perplexity target and a lane that dies on the round cap — checked
@@ -105,7 +109,7 @@ def test_lane_pack_matches_serial_deterministic(mode):
     from repro.federated.runtime import LaneTask
     from repro.federated.surrogate import SurrogateLearner
     specs = [_spec(mode, 40, 0.8, 0, 10_000),
-             _spec(mode, 25, 1.0, 7, 25),
+             _spec(mode, 25, 1.0, 7, 25, env_idx=3),
              _spec(mode, 60, 0.5, 3, 10_000, env_idx=1, dropout=0.2)]
     serial = [Experiment(s).run() for s in specs]
     tasks = []
