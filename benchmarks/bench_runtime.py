@@ -45,6 +45,13 @@ workload so CI quick runs never clobber the full baseline:
   ``per_mode{sync,async} -> {sessions, wall_s, sessions_per_s, rounds,
   carbon_total_kg}`` plus the pooled ``sessions/wall_s/sessions_per_s``),
   ``speedup`` and ``speedup_per_mode``; full runs add ``async_stress``.
+  ``population_stress`` records the streaming-telemetry scale point
+  (async at concurrency 10^5 quick / 10^6 full, ≥10^7 sessions full):
+  throughput, ``peak_rss_mb`` (process high-water mark, gated under
+  2 GB) and ``slowdown_vs_materialized`` against a matched-concurrency
+  materialized twin (gated at 1.5x; the matched pair's summaries are
+  asserted bit-for-bit equal in-bench — at full scale the pair runs at
+  10x fewer rounds so the materialized half fits in memory).
 * ``"sweep"`` — ``benchmarks/bench_sweep.py``: per key ("quick"/"full")
   the design-space grid size (``points``), ``serial`` and ``lane``
   sections (``wall_s``, ``points_per_s``, ``sessions``) and
@@ -78,6 +85,10 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
 HISTORY_PATH = os.path.join(os.path.dirname(__file__), "..",
                             "BENCH_history.json")
 REGRESSION_FACTOR = 2.0
+# population_stress gates: streaming peak RSS stays under this, and
+# streaming throughput stays within this factor of the materialized twin
+POPULATION_RSS_LIMIT_MB = 2048.0
+POPULATION_SLOWDOWN_LIMIT = 1.5
 
 
 def sweep_points(quick: bool) -> List[Dict]:
@@ -153,7 +164,70 @@ def _run_async_stress() -> Dict:
             "carbon_total_kg": res.carbon.total_kg}
 
 
+def _run_population(quick: bool) -> Dict:
+    """Population-scale async point through the streaming telemetry path
+    (PR 6): quick = concurrency 10^5, full = concurrency 10^6 driven past
+    10^7 sessions. The streaming run goes FIRST in the whole bench so
+    ``ru_maxrss`` (a process-lifetime high-water mark) is attributable to
+    it. The throughput yardstick is a matched-CONFIG materialized twin:
+    per-window engine cost is O(concurrency), so a smaller-concurrency
+    twin would just measure a cheaper workload. On quick the twin is the
+    identical run; at full scale the big streaming run keeps all 1000
+    rounds and the parity pair re-runs BOTH telemetries at 10x fewer
+    rounds (the materialized half of a 10^7-row pair would be ~1.5 GB,
+    which is the point of streaming). The pair's summaries are asserted
+    bit-for-bit equal either way."""
+    import resource
+    cfg = get_config("paper-charlm")
+    cfg.param_count()
+
+    def point(conc: int, goal: int, rounds: int, telemetry: str):
+        fed = FederatedConfig(mode="async", concurrency=conc,
+                              aggregation_goal=goal)
+        run = RunConfig(target_perplexity=1.0, max_rounds=rounds,
+                        telemetry=telemetry)
+        learner = SurrogateLearner(cfg, fed, run)
+        t0 = time.time()
+        res = get_strategy("async").run(cfg, fed, run, learner)
+        return res, time.time() - t0
+
+    conc, goal, rounds = (100_000, 2_000, 100) if quick \
+        else (1_000_000, 10_000, 1_000)
+    res_s, wall_s = point(conc, goal, rounds, "streaming")
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    n = res_s.log.n_sessions
+    pair_rounds = rounds if quick else rounds // 10
+    if pair_rounds == rounds:
+        pres_s, pwall_s = res_s, wall_s
+    else:
+        pres_s, pwall_s = point(conc, goal, pair_rounds, "streaming")
+    res_f, wall_f = point(conc, goal, pair_rounds, "full")
+    nf = res_f.log.n_sessions
+    # matched pair: streaming must reproduce materialized exactly
+    assert pres_s.rounds == res_f.rounds
+    assert pres_s.log.n_sessions == nf
+    assert pres_s.carbon == res_f.carbon, (pres_s.carbon, res_f.carbon)
+    assert pres_s.log.participation() == res_f.log.participation()
+    assert pres_s.log.mean_staleness() == res_f.log.mean_staleness()
+    sps = round(n / max(wall_s, 1e-9))
+    sps_f = round(nf / max(wall_f, 1e-9))
+    return {"concurrency": conc, "aggregation_goal": goal,
+            "max_rounds": rounds, "sessions": n,
+            "wall_s": round(wall_s, 4), "sessions_per_s": sps,
+            "peak_rss_mb": round(rss_mb, 1),
+            "sampled": bool(res_s.log.sampled),
+            "materialized_twin": {
+                "concurrency": conc, "aggregation_goal": goal,
+                "max_rounds": pair_rounds, "sessions": nf,
+                "wall_s": round(wall_f, 4), "sessions_per_s": sps_f},
+            "slowdown_vs_materialized": round(
+                pwall_s / max(wall_f, 1e-9), 3)}
+
+
 def run_bench(quick: bool) -> Dict:
+    # population stress runs first: ru_maxrss is a lifetime high-water
+    # mark, so nothing bigger may precede the streaming run
+    population = _run_population(quick)
     points = sweep_points(quick)
     columnar = _run_engine("columnar", points)
     scalar = _run_engine("scalar", points)
@@ -167,6 +241,7 @@ def run_bench(quick: bool) -> Dict:
             m: round(columnar["per_mode"][m]["sessions_per_s"]
                      / max(scalar["per_mode"][m]["sessions_per_s"], 1), 2)
             for m in columnar["per_mode"]},
+        "population_stress": population,
     }
     # the engines must simulate the identical workload (seed-for-seed)
     for m in columnar["per_mode"]:
@@ -192,6 +267,29 @@ def check_regression(fresh: Dict, baseline: Dict) -> int:
         old_m = baseline.get("columnar", {}).get("per_mode", {}) \
             .get(m, {}).get("sessions_per_s", 0)
         gates.append((f"columnar[{m}]", old_m, fm["sessions_per_s"]))
+    pop = fresh.get("population_stress")
+    if pop:
+        gates.append(("population_stress",
+                      baseline.get("population_stress", {})
+                      .get("sessions_per_s", 0), pop["sessions_per_s"]))
+        if pop["peak_rss_mb"] >= POPULATION_RSS_LIMIT_MB:
+            print(f"bench: REGRESSION — population_stress peak RSS "
+                  f"{pop['peak_rss_mb']} MB >= "
+                  f"{POPULATION_RSS_LIMIT_MB} MB limit")
+            status = 1
+        else:
+            print(f"bench: population_stress peak RSS "
+                  f"{pop['peak_rss_mb']} MB < "
+                  f"{POPULATION_RSS_LIMIT_MB} MB — ok")
+        if pop["slowdown_vs_materialized"] > POPULATION_SLOWDOWN_LIMIT:
+            print(f"bench: REGRESSION — streaming telemetry "
+                  f"{pop['slowdown_vs_materialized']}x slower than the "
+                  f"materialized twin (> {POPULATION_SLOWDOWN_LIMIT}x)")
+            status = 1
+        else:
+            print(f"bench: population_stress "
+                  f"{pop['slowdown_vs_materialized']}x vs materialized "
+                  f"(limit {POPULATION_SLOWDOWN_LIMIT}x) — ok")
     for name, old, new in gates:
         if old and new * REGRESSION_FACTOR < old:
             print(f"bench: REGRESSION — {name} {new:,} sessions/s vs "
@@ -248,6 +346,10 @@ def append_history(key: str, fresh: Dict, path: str) -> None:
     if "async_stress" in fresh:
         row["async_stress_sessions_per_s"] = \
             fresh["async_stress"]["sessions_per_s"]
+    if "population_stress" in fresh:
+        pop = fresh["population_stress"]
+        row["population_sessions_per_s"] = pop["sessions_per_s"]
+        row["population_peak_rss_mb"] = pop["peak_rss_mb"]
     append_history_row(row, path)
 
 

@@ -78,6 +78,20 @@ def run_points(points: Sequence[Dict], run: RunConfig | None = None,
             for r in sweep(specs, workers=workers, vectorize=vectorize)]
 
 
+def session_columns(log):
+    """Session columns for plotting/inspection, streaming-aware: on a
+    full-telemetry TaskLog this is every session; on a ``StreamedLog``
+    (``run.telemetry="streaming"``) it is the seed-deterministic
+    reservoir sample, and a one-line note says so — per-session scatter
+    built from it is a uniform subsample, while the summary scalars
+    (carbon, bytes, participation, staleness) remain exact either way."""
+    if getattr(log, "sampled", False):
+        print(f"note: streaming telemetry — plotting a reservoir sample "
+              f"of {len(log.columns())}/{log.n_sessions} sessions "
+              "(summary scalars are exact)", file=sys.stderr)
+    return log.columns()
+
+
 def grid(**axes: Sequence) -> Iterable[Dict]:
     keys = list(axes)
     for vals in itertools.product(*axes.values()):

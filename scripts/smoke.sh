@@ -5,16 +5,20 @@
 #   bash scripts/smoke.sh            # from the repo root
 #
 # Step 2 loads the committed spec artifacts (one sync, one async, one
-# carbon-aware on the diurnal grid), runs each, then re-serializes,
-# reloads and re-runs, asserting both runs produce the identical
-# Result.summary() — the repro.api reproducibility contract, exercised
-# on ALL THREE event loops (and on the intensity_schedule round-trip).
+# carbon-aware on the diurnal grid, one streaming-telemetry population
+# point at concurrency 10^5), runs each, then re-serializes, reloads and
+# re-runs, asserting both runs produce the identical Result.summary() —
+# the repro.api reproducibility contract, exercised on ALL THREE event
+# loops (and on the intensity_schedule and telemetry round-trips).
 #
 # Step 3 runs the quick fig5-style engine benchmark (columnar vs scalar),
 # refreshes BENCH_runtime.json + BENCH_history.json, and FAILS if the
 # columnar engine's quick sessions/sec regressed more than 2x against the
 # recorded baseline — overall or in any mode (sync, async and
-# carbon-aware are each gated separately).
+# carbon-aware are each gated separately). The bench also runs the
+# population_stress streaming-telemetry point and FAILS if its peak RSS
+# reaches 2 GB, if streaming falls more than 1.5x behind the
+# materialized twin, or on a >2x throughput cliff.
 #
 # Step 4 runs the quick design-space sweep benchmark (lane-batched packs
 # vs sweep(workers=1) serial; summaries must match seed-for-seed) and
@@ -34,6 +38,8 @@ python -m repro.api examples/specs/charlm_sync_small.json \
 python -m repro.api examples/specs/charlm_async_small.json \
     --roundtrip-check --quiet
 python -m repro.api examples/specs/charlm_carbonaware_small.json \
+    --roundtrip-check --quiet
+python -m repro.api examples/specs/charlm_streaming_pop.json \
     --roundtrip-check --quiet
 
 echo "== smoke 3/4: runtime benchmark (quick, per-mode 2x regression gate) =="

@@ -11,6 +11,24 @@ spec's `Environment` into both the session sampler and the carbon
 estimator. Per-round `RoundEvent`s stream to callbacks while the task
 runs; the returned `Result` subsumes the legacy TaskResult + its
 CarbonBreakdown and records the spec that produced it.
+
+Population-scale tasks keep the same surface with constant memory:
+
+    spec = ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(mode="async", concurrency=1_000_000,
+                                  aggregation_goal=10_000),
+        run=RunConfig(max_rounds=1_000, telemetry="streaming"))
+    res = Experiment(spec).run()
+    res.summary()            # exact — bit-for-bit vs telemetry="full"
+    res.log.columns()        # seed-deterministic reservoir sample
+
+`telemetry="streaming"` swaps the materialized TaskLog for a
+`repro.core.streaming.StreamedLog`: summary scalars (carbon, energy,
+bytes, participation, staleness) fold into error-free running sums and
+stay exactly equal to the materialized path, while per-session columns
+are a `telemetry_sample`-row reservoir (`log.sampled` says whether the
+population outgrew it).
 """
 from __future__ import annotations
 

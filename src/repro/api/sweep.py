@@ -98,7 +98,10 @@ def _pack_key(spec: ExperimentSpec) -> Optional[str]:
     cls = STRATEGIES.get(mode)
     if cls is None or "lane_loop" not in cls.__dict__:
         return None
-    return mode
+    # streaming and full-telemetry lanes use different session stores
+    # (StreamedLog folds vs one LaneAccumulator) — keep them in separate
+    # packs so each pack's store is uniform
+    return f"{mode}|{spec.run.telemetry}"
 
 
 def _group_packs(specs: Sequence[ExperimentSpec]

@@ -179,7 +179,7 @@ class FederatedConfig:
 
 @dataclass(frozen=True)
 class RunConfig:
-    """Stopping criteria per paper §3.2."""
+    """Stopping criteria per paper §3.2 + telemetry memory model."""
     target_perplexity: float = 175.0
     patience_rounds: int = 5            # target held for 5 consecutive rounds
     max_hours: float = 48.0
@@ -187,6 +187,17 @@ class RunConfig:
     eval_every: int = 1
     eval_clients: int = 20              # paper: 20 held-out clients
     ema_alpha: float = 0.3              # paper's EWMA smoothing of test ppl
+    # telemetry memory model: "full" materializes every session as columns;
+    # "streaming" folds sessions into constant-memory exact running sums
+    # (carbon/energy/bytes/counters — summaries stay bit-for-bit) and keeps
+    # only a seed-deterministic reservoir of `telemetry_sample` session rows
+    # for the figs (population-scale tasks: 10^8 sessions in O(sample) RAM)
+    telemetry: str = "full"             # "full" | "streaming"
+    telemetry_sample: int = 4096        # reservoir size (streaming mode)
+
+    def __post_init__(self):
+        assert self.telemetry in ("full", "streaming")
+        assert self.telemetry_sample > 0
 
 
 # ---------------------------------------------------------------------------

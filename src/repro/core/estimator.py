@@ -27,11 +27,92 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.carbon import IntensityModel
-from repro.core.energy import (SERVER_TASK_POWER_W, client_session_energy,
-                               server_energy_j)
+from repro.core.energy import SERVER_TASK_POWER_W, server_energy_j
 from repro.core.network import DEFAULT_NETWORK, NetworkEnergyModel
 from repro.core.profiles import FLEET, DeviceProfile
 from repro.core.telemetry import ClientSession, SessionBatch, TaskLog
+
+_EXACT_CHUNK = 1 << 25
+
+
+class ExactSum:
+    """Error-free streaming float64 accumulator.
+
+    Every float64 is an integer mantissa times a power of two, so a sum of
+    floats is representable exactly as one (arbitrary-precision mantissa,
+    binary exponent) pair. ``add`` folds an array in vectorized NumPy:
+    ``frexp`` splits each value into a 53-bit integer mantissa and an
+    exponent, the mantissa is split into 27-bit-high / 26-bit-low halves
+    (so per-exponent-bin partial sums of <= 2^25 rows stay below 2^53 and
+    ``np.bincount``'s float64 accumulation is exact), and the binned
+    partials collapse into one big-int contribution. The running state is
+    exact, so accumulation is associative and commutative: any chunking,
+    lane segmentation, or merge order produces the **bit-identical**
+    correctly-rounded ``value()``. This is what lets the streaming
+    telemetry path reproduce the materialized reduction bit-for-bit.
+    """
+
+    __slots__ = ("_m", "_e")
+
+    def __init__(self) -> None:
+        self._m = 0  # arbitrary-precision mantissa; value = _m * 2**_e
+        self._e = 0
+
+    def add(self, x) -> "ExactSum":
+        x = np.ascontiguousarray(x, dtype=np.float64).ravel()
+        for lo in range(0, x.size, _EXACT_CHUNK):
+            self._add_chunk(x[lo:lo + _EXACT_CHUNK])
+        return self
+
+    def _add_chunk(self, x: np.ndarray) -> None:
+        x = x[x != 0.0]
+        if not x.size:
+            return
+        if not np.isfinite(x).all():
+            raise ValueError("ExactSum requires finite inputs")
+        m, e = np.frexp(x)
+        M = np.ldexp(m, 53).astype(np.int64)   # exact: |M| <= 2^53
+        E = e.astype(np.int64) - 53
+        hi = M >> 26                           # floor division (sign-safe)
+        lo = M - (hi << 26)                    # in [0, 2^26)
+        e0 = int(E.min())
+        ebin = E - e0
+        nb = int(ebin.max()) + 1
+        sh = np.bincount(ebin, weights=hi.astype(np.float64), minlength=nb)
+        sl = np.bincount(ebin, weights=lo.astype(np.float64), minlength=nb)
+        tot = 0
+        for b in np.flatnonzero((sh != 0.0) | (sl != 0.0)):
+            tot += ((int(sh[b]) << 26) + int(sl[b])) << int(b)
+        self._merge(tot, e0)
+
+    def _merge(self, m2: int, e2: int) -> None:
+        if m2 == 0:
+            return
+        if self._m == 0:
+            self._m, self._e = m2, e2
+        elif self._e <= e2:
+            self._m += m2 << (e2 - self._e)
+        else:
+            self._m = (self._m << (self._e - e2)) + m2
+            self._e = e2
+
+    def merge(self, other: "ExactSum") -> "ExactSum":
+        self._merge(other._m, other._e)
+        return self
+
+    def value(self) -> float:
+        """Correctly-rounded float64 of the exact running sum."""
+        if self._m == 0:
+            return 0.0
+        if self._e >= 0:
+            return float(self._m << self._e)
+        # CPython int/int true division is correctly rounded
+        return self._m / (1 << -self._e)
+
+
+def exact_sum(x) -> float:
+    """One-shot correctly-rounded sum of a float64 array (see ExactSum)."""
+    return ExactSum().add(x).value()
 
 
 @dataclass(frozen=True)
@@ -80,31 +161,17 @@ class CarbonEstimator:
     server_power_w: float = SERVER_TASK_POWER_W
 
     def session_carbon(self, s: ClientSession) -> Dict[str, float]:
-        prof = self.profiles[s.device]
-        e = client_session_energy(prof, s.compute_s, s.download_s, s.upload_s)
-        net_up_j = self.network.transfer_energy_j(s.bytes_up)
-        net_down_j = self.network.transfer_energy_j(s.bytes_down)
-        co2e = self.intensity.co2e_kg
-        if self.intensity.is_dynamic((s.country,)):
-            # sessions run download -> compute -> upload back to back; each
-            # phase is charged the mean intensity over its own time span
-            a1 = s.start_t + s.download_s
-            a2 = a1 + s.compute_s
-            mi = self.intensity.mean_intensity
-            return {
-                "client_compute_kg": co2e(e.compute_j,
-                                          mi(s.country, a1, a2)),
-                "upload_kg": co2e(e.upload_j + net_up_j,
-                                  mi(s.country, a2, a2 + s.upload_s)),
-                "download_kg": co2e(e.download_j + net_down_j,
-                                    mi(s.country, s.start_t, a1)),
-            }
-        ci = self.intensity.intensity(s.country)
-        return {
-            "client_compute_kg": co2e(e.compute_j, ci),
-            "upload_kg": co2e(e.upload_j + net_up_j, ci),
-            "download_kg": co2e(e.download_j + net_down_j, ci),
-        }
+        """Per-session component kg — ``_kg_rows`` batch-of-1, so the scalar
+        path shares the per-phase span-mean intensity logic (download ->
+        compute -> upload back to back from ``start_t``) with every
+        vectorized reduction instead of re-implementing it."""
+        b = SessionBatch.from_sessions([s])
+        kg = _kg_rows(self, b.device_names, b.device_idx, b.country_names,
+                      b.country_idx, b.compute_s, b.upload_s, b.download_s,
+                      b.bytes_up, b.bytes_down, b.start_t)
+        return {"client_compute_kg": float(kg[0, 0]),
+                "upload_kg": float(kg[1, 0]),
+                "download_kg": float(kg[2, 0])}
 
     def batch_carbon(self, b: SessionBatch) -> Dict[str, float]:
         """Fig. 5 component sums for a whole SessionBatch via group-by-
@@ -119,9 +186,12 @@ class CarbonEstimator:
         kg = _kg_rows(self, b.device_names, b.device_idx, b.country_names,
                       b.country_idx, b.compute_s, b.upload_s, b.download_s,
                       b.bytes_up, b.bytes_down, b.start_t)
-        return {"client_compute_kg": float(kg[0].sum()),
-                "upload_kg": float(kg[1].sum()),
-                "download_kg": float(kg[2].sum())}
+        # error-free sums: the result is the correctly-rounded true sum,
+        # independent of row order or chunking — which is exactly what lets
+        # the streaming telemetry fold reproduce this path bit-for-bit
+        return {"client_compute_kg": exact_sum(kg[0]),
+                "upload_kg": exact_sum(kg[1]),
+                "download_kg": exact_sum(kg[2])}
 
     def _server_kg_s(self, duration_s: float) -> float:
         srv_j = server_energy_j(duration_s, pue=self.intensity.pue,
@@ -133,8 +203,16 @@ class CarbonEstimator:
         return self._server_kg_s(log.duration_s)
 
     def estimate(self, log: TaskLog) -> CarbonBreakdown:
-        d = self.batch_carbon(log.columns() if hasattr(log, "columns")
-                              else SessionBatch.from_sessions(log.sessions))
+        # streaming logs carry exact running component sums — consult them
+        # FIRST: their columns() view is a reservoir *sample*, so reducing
+        # it here would silently undercount
+        comp = getattr(log, "carbon_components", None)
+        if comp is not None:
+            d = comp(self)
+        else:
+            d = self.batch_carbon(log.columns() if hasattr(log, "columns")
+                                  else SessionBatch.from_sessions(
+                                      log.sessions))
         return CarbonBreakdown(d["client_compute_kg"], d["upload_kg"],
                                d["download_kg"], self._server_kg(log))
 
@@ -152,8 +230,12 @@ class CarbonEstimator:
 
 def _kg_rows(est: CarbonEstimator, device_names, device_idx, country_names,
              country_idx, compute_s, upload_s, download_s, bytes_up,
-             bytes_down, start_t) -> np.ndarray:
+             bytes_down, start_t, with_energy: bool = False) -> np.ndarray:
     """Per-row (3, n) kg matrix — rows: client_compute / upload / download.
+    With ``with_energy=True`` also returns the (3, n) joules matrix (the
+    streaming telemetry fold reuses it for grouped energy sums — one
+    implementation of the per-phase span-mean logic, per the bit-for-bit
+    contract).
     ``co2e_kg`` is plain arithmetic, so it broadcasts over the per-row
     energy/intensity columns — IntensityModel overrides stay honored.
     (Lane packs with differing network/intensity models are handled by
@@ -176,14 +258,16 @@ def _kg_rows(est: CarbonEstimator, device_names, device_idx, country_names,
     tab = est.intensity.vocab_schedule(tuple(country_names))
     if not tab.any_dynamic:
         ci = tab.static[country_idx]
-        return est.intensity.co2e_kg(e, ci)
+        kg = est.intensity.co2e_kg(e, ci)
+        return (kg, e) if with_energy else kg
     a1 = start_t + download_s
     a2 = a1 + compute_s
     ci3 = np.empty((3, n))
     ci3[0] = tab.mean(country_idx, a1, a2)
     ci3[1] = tab.mean(country_idx, a2, a2 + upload_s)
     ci3[2] = tab.mean(country_idx, start_t, a1)
-    return est.intensity.co2e_kg(e, ci3)
+    kg = est.intensity.co2e_kg(e, ci3)
+    return (kg, e) if with_energy else kg
 
 
 def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
@@ -197,13 +281,13 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
     independent estimator passes.
 
     One stable argsort groups the rows by lane; each lane's contiguous
-    segment then goes through its own estimator's ``_kg_rows`` + pairwise
-    ``ndarray.sum``. Deliberately NOT ``np.add.reduceat``: reduceat sums
-    sequentially, which would break the bit-for-bit match with the
-    per-lane ``batch_carbon`` pairwise sums that the lane-equivalence
-    invariant (lane-batched == serial, seed for seed) is tested against.
-    Per-lane estimators may differ in any Environment knob — profiles,
-    intensity tables, network model, PUE, server power."""
+    segment then goes through its own estimator's ``_kg_rows`` +
+    ``exact_sum``. Exact summation is order-independent, so each lane's
+    segment reduction matches the per-lane ``batch_carbon`` result
+    bit-for-bit by construction — the lane-equivalence invariant
+    (lane-batched == serial, seed for seed) needs no summation-order
+    gymnastics. Per-lane estimators may differ in any Environment knob —
+    profiles, intensity tables, network model, PUE, server power."""
     order = np.argsort(lane, kind="stable")
     bounds = np.searchsorted(lane[order], np.arange(len(estimators) + 1))
     dev_s = cols["device_idx"][order]
@@ -224,7 +308,7 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
         kg = _kg_rows(est, device_names[i], dev_s[sl], country_names[i],
                       ctry_s[sl], comp_s[sl], up_s[sl], down_s[sl],
                       bu_s[sl], bd_s[sl], st_s[sl])
-        out.append(CarbonBreakdown(float(kg[0].sum()), float(kg[1].sum()),
-                                   float(kg[2].sum()),
+        out.append(CarbonBreakdown(exact_sum(kg[0]), exact_sum(kg[1]),
+                                   exact_sum(kg[2]),
                                    est._server_kg_s(durations_s[i])))
     return out

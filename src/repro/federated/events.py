@@ -197,6 +197,24 @@ def slot_stream_id(seed: int, slot: int, generation: int,
     return int((h >> 11) * _INV53 * population)
 
 
+_RESERVOIR_MIX = 0x2545F4914F6CDD1D   # reservoir-key lane for streaming logs
+
+
+def reservoir_keys(seed: int,
+                   indices: Union[np.ndarray, Sequence[int]]) -> np.ndarray:
+    """Raw uint64 splitmix keys for the streaming-telemetry reservoir:
+    session ``i`` (its global, engine-order index within the task) hashes
+    to ``splitmix64((seed, i))`` along a dedicated ``_RESERVOIR_MIX`` lane
+    so reservoir keys never alias the planner / outcome / slot / probe
+    streams. The retained sample is the bottom-k of these keys — a pure
+    function of ``(seed, global session index)``, so it is identical
+    regardless of chunk size, lane packing, or worker count."""
+    idx = np.asarray(indices, dtype=np.uint64)
+    base0 = _U64(((seed & 0xFFFFFFFF) * 0x9E3779B9 + 0x7F4A7C15) & _M64)
+    with np.errstate(over="ignore"):
+        return _splitmix64_arr(base0 + idx * _U64(_RESERVOIR_MIX))
+
+
 _PROBE_MIX = 0xA0761D6478BD642F   # probe-lane spacing for carbon-aware picks
 
 

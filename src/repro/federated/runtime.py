@@ -59,6 +59,7 @@ import numpy as np
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
 from repro.core.estimator import (CarbonBreakdown, CarbonEstimator,
                                   lane_carbon)
+from repro.core.streaming import StreamedLog
 from repro.core.telemetry import (OUTCOME_CODE, BatchAccumulator,
                                   LaneAccumulator, SessionBatch, TaskLog)
 from repro.federated.events import (LaneSampler, SessionSampler,
@@ -66,6 +67,11 @@ from repro.federated.events import (LaneSampler, SessionSampler,
 
 _SERVER_AGG_S = 2.0     # server-side aggregation latency per update
 _POPULATION = 5_000_000  # eligible-device pool the coordinator selects from
+# dispatch cohorts are planned/resolved in blocks of at most this many rows
+# so population-scale concurrency never materializes a full-cohort plan;
+# plan/resolve are row-pure, so any chunking is bit-identical (tests
+# monkeypatch this down to exercise the chunked paths at small scale)
+_DISPATCH_CHUNK = 1 << 17
 
 
 @dataclass
@@ -222,7 +228,13 @@ class Strategy:
         # selection policies may read the environment's grid model (the
         # carbon-aware strategy screens candidates by intensity-at-clock)
         self._estimator = est
-        log = TaskLog()
+        if run.telemetry == "streaming":
+            log: TaskLog = StreamedLog(est, sampler.device_names,
+                                       sampler.country_names, seed=fed.seed,
+                                       sample=run.telemetry_sample,
+                                       mode=self.mode)
+        else:
+            log = TaskLog()
         stop = _Stopper(run)
         t, rounds, ppl = self._loop(model_cfg, fed, learner, sampler, log,
                                     stop, on_round)
@@ -241,6 +253,21 @@ class Strategy:
             on_round(RoundEvent(round_idx, t, ppl, smoothed,
                                 n_sessions, self.mode))
 
+    @staticmethod
+    def _make_sink(log: TaskLog, device_names: Tuple[str, ...],
+                   country_names: Tuple[str, ...]):
+        """Window sink for loops that log in column blocks: a streaming
+        log folds appended blocks directly (constant memory); a full log
+        stages them in a BatchAccumulator flushed at task end."""
+        if hasattr(log, "append"):
+            return log
+        return BatchAccumulator(device_names, country_names)
+
+    @staticmethod
+    def _flush_sink(log: TaskLog, acc) -> None:
+        if acc is not log and len(acc):
+            log.log_batch(acc.to_batch())
+
 
 @register_strategy("sync")
 class SyncStrategy(Strategy):
@@ -257,26 +284,65 @@ class SyncStrategy(Strategy):
         while True:
             cohort = _select_cohort(rng, fed.concurrency,
                                     population=_POPULATION)
-            pb = sampler.plan_batch(cohort, rounds)
-            # pass 1: tentative outcomes, find when the goal-th result
-            # arrives (a partition on end_t, not a full sort)
-            tb, ok = sampler.resolve_batch(pb, rounds, t)
-            ends = tb.end_t[ok]
-            if len(ends) >= goal:
-                round_end = float(np.partition(ends, goal - 1)[goal - 1])
-                failed = False
-            elif len(ends):
-                # dropouts ate the over-selection slack: the round closes at
-                # the last survivor (production would hit the round deadline)
-                # and the server updates with what it received
-                round_end = float(ends.max())
-                failed = False
+            if len(cohort) <= _DISPATCH_CHUNK:
+                pb = sampler.plan_batch(cohort, rounds)
+                # pass 1: tentative outcomes, find when the goal-th result
+                # arrives (a partition on end_t, not a full sort)
+                tb, ok = sampler.resolve_batch(pb, rounds, t)
+                ends = tb.end_t[ok]
+                if len(ends) >= goal:
+                    round_end = float(np.partition(ends, goal - 1)[goal - 1])
+                    failed = False
+                elif len(ends):
+                    # dropouts ate the over-selection slack: the round
+                    # closes at the last survivor (production would hit the
+                    # round deadline) and the server updates with what it
+                    # received
+                    round_end = float(ends.max())
+                    failed = False
+                else:
+                    round_end = float(tb.end_t.max()) if len(tb) else t
+                    failed = True
+                # pass 2: sessions against the round deadline (cancel
+                # stragglers)
+                fb, ok2 = sampler.resolve_batch(pb, rounds, t,
+                                                deadline=round_end)
+                log.log_batch(fb)
             else:
-                round_end = float(tb.end_t.max()) if len(tb) else t
-                failed = True
-            # pass 2: sessions against the round deadline (cancel stragglers)
-            fb, ok2 = sampler.resolve_batch(pb, rounds, t, deadline=round_end)
-            log.log_batch(fb)
+                # population-scale cohort: bounded-size chunks. Pass 1
+                # keeps only the surviving end times (plans are re-derived
+                # in pass 2 — plan/resolve are row-pure, so re-planning is
+                # bit-identical to caching); the round close is a
+                # partition, which is order-independent across chunks.
+                ends_parts: List[np.ndarray] = []
+                n_rows, max_end = 0, t
+                for lo in range(0, len(cohort), _DISPATCH_CHUNK):
+                    ch = cohort[lo:lo + _DISPATCH_CHUNK]
+                    tb, ok = sampler.resolve_batch(
+                        sampler.plan_batch(ch, rounds), rounds, t)
+                    ends_parts.append(tb.end_t[ok])
+                    if len(tb):
+                        max_end = max(max_end, float(tb.end_t.max()))
+                    n_rows += len(tb)
+                ends = np.concatenate(ends_parts)
+                if len(ends) >= goal:
+                    round_end = float(np.partition(ends, goal - 1)[goal - 1])
+                    failed = False
+                elif len(ends):
+                    round_end = float(ends.max())
+                    failed = False
+                else:
+                    round_end = max_end if n_rows else t
+                    failed = True
+                ok2_parts: List[np.ndarray] = []
+                for lo in range(0, len(cohort), _DISPATCH_CHUNK):
+                    ch = cohort[lo:lo + _DISPATCH_CHUNK]
+                    fb, ok2c = sampler.resolve_batch(
+                        sampler.plan_batch(ch, rounds), rounds, t,
+                        deadline=round_end)
+                    log.log_batch(fb)
+                    ok2_parts.append(ok2c)
+                ok2 = np.concatenate(ok2_parts)
             contributors: List[int] = \
                 cohort[np.nonzero(ok2)[0][:goal]].tolist()
             t = round_end + _SERVER_AGG_S
@@ -316,10 +382,25 @@ class SyncStrategy(Strategy):
             offs = np.concatenate([[0], np.cumsum(sizes)])
             lane_row = np.repeat(act, sizes)
             start = pack.t[lane_row]
-            pb, fb, ok = lanes.plan_resolve(lane_row,
-                                            np.concatenate(cohorts), k,
-                                            start)
-            end_t = fb["end_t"]
+            ids = np.concatenate(cohorts)
+            total = len(lane_row)
+            chunked = total > _DISPATCH_CHUNK
+            if not chunked:
+                pb, fb, ok = lanes.plan_resolve(lane_row, ids, k, start)
+                end_t = fb["end_t"]
+            else:
+                # population-scale pack: resolve in bounded chunks keeping
+                # only end_t/ok for the round close; pass 2 re-plans
+                # (row-pure, bit-identical — see the serial loop)
+                et_parts, ok_parts = [], []
+                for lo in range(0, total, _DISPATCH_CHUNK):
+                    sc = slice(lo, lo + _DISPATCH_CHUNK)
+                    _, fb_c, ok_c = lanes.plan_resolve(
+                        lane_row[sc], ids[sc], k, start[sc])
+                    et_parts.append(fb_c["end_t"])
+                    ok_parts.append(ok_c)
+                end_t = np.concatenate(et_parts)
+                ok = np.concatenate(ok_parts)
             round_end = np.empty(len(act))
             failed = np.zeros(len(act), bool)
             for j, i in enumerate(act):
@@ -336,9 +417,23 @@ class SyncStrategy(Strategy):
                     failed[j] = True
             # pass 2 of the serial loop collapses to a masked patch of the
             # stragglers (cancel-at-deadline); everything else is reused
-            ok2 = ok
-            lanes.apply_deadline(pb, fb, ok2, np.repeat(round_end, sizes))
-            pack.acc.append(lane=lane_row, **fb)
+            if not chunked:
+                ok2 = ok
+                lanes.apply_deadline(pb, fb, ok2,
+                                     np.repeat(round_end, sizes))
+                pack.acc.append(lane=lane_row, **fb)
+            else:
+                deadline_rows = np.repeat(round_end, sizes)
+                ok2_parts: List[np.ndarray] = []
+                for lo in range(0, total, _DISPATCH_CHUNK):
+                    sc = slice(lo, lo + _DISPATCH_CHUNK)
+                    pb_c, fb_c, ok2_c = lanes.plan_resolve(
+                        lane_row[sc], ids[sc], k, start[sc])
+                    lanes.apply_deadline(pb_c, fb_c, ok2_c,
+                                         deadline_rows[sc])
+                    pack.acc.append(lane=lane_row[sc], **fb_c)
+                    ok2_parts.append(ok2_c)
+                ok2 = np.concatenate(ok2_parts)
             k += 1
             for j, i in enumerate(act):
                 sl = slice(offs[j], offs[j + 1])
@@ -473,16 +568,32 @@ class AsyncStrategy(Strategy):
         version = 0
         ppl = float(model_cfg.vocab_size)
         max_t = stop.run.max_hours * 3600.0
-        acc = BatchAccumulator(sampler.device_names, sampler.country_names)
+        acc = self._make_sink(log, sampler.device_names,
+                              sampler.country_names)
 
-        # initial cohort: one batched plan/resolve with jittered starts;
-        # slot s starts out running cohort[s] at generation 0
+        # initial cohort: batched plan/resolve with jittered starts, in
+        # bounded chunks at population scale (row-pure, so chunking is
+        # bit-identical); slot s starts out running cohort[s] at
+        # generation 0
         cohort = _select_cohort(rng, conc, population=_POPULATION)
         starts0 = rng.uniform(0, 5.0, size=conc)
-        b0, ok0 = sampler.resolve_batch(sampler.plan_batch(cohort, version),
-                                        version, starts0)
-        flight = _async_rows(np.arange(conc, dtype=np.int64),
-                             np.zeros(conc, np.int64), version, b0, ok0)
+        flight: Optional[Dict[str, np.ndarray]] = None
+        for lo in range(0, conc, _DISPATCH_CHUNK):
+            sc = slice(lo, min(lo + _DISPATCH_CHUNK, conc))
+            b0, ok0 = sampler.resolve_batch(
+                sampler.plan_batch(cohort[sc], version), version,
+                starts0[sc])
+            rows = _async_rows(np.arange(sc.start, sc.stop, dtype=np.int64),
+                               np.zeros(sc.stop - sc.start, np.int64),
+                               version, b0, ok0)
+            if flight is None and conc <= _DISPATCH_CHUNK:
+                flight = rows
+                break
+            if flight is None:
+                flight = {f: np.empty(conc, a.dtype)
+                          for f, a in rows.items()}
+            for f, a in rows.items():
+                flight[f][sc] = a
         alive = np.ones(conc, bool)
 
         while True:
@@ -627,8 +738,7 @@ class AsyncStrategy(Strategy):
                                        np.int8),
                        staleness=version - flight["ver"][idx],
                        **_truncate_cancelled(flight, idx, t))
-        if len(acc):
-            log.log_batch(acc.to_batch())
+        self._flush_sink(log, acc)
         return t, version, ppl
 
     def lane_loop(self, pack: "_LanePack") -> None:
@@ -661,10 +771,30 @@ class AsyncStrategy(Strategy):
         lane_of = np.repeat(np.arange(L, dtype=np.intp), concs)
         slot_of = np.concatenate(
             [np.arange(c, dtype=np.int64) for c in concs])
-        _, b0, ok0 = lanes.plan_resolve(lane_of, np.concatenate(cohorts), 0,
-                                        np.concatenate(starts0))
-        flight = _async_rows_cols(slot_of, np.zeros(len(slot_of), np.int64),
-                                  0, b0, ok0)
+        ids0 = np.concatenate(cohorts)
+        st0 = np.concatenate(starts0)
+        n_slots = len(slot_of)
+        if n_slots <= _DISPATCH_CHUNK:
+            _, b0, ok0 = lanes.plan_resolve(lane_of, ids0, 0, st0)
+            flight = _async_rows_cols(slot_of,
+                                      np.zeros(n_slots, np.int64),
+                                      0, b0, ok0)
+        else:
+            # population-scale pack: bounded-chunk dispatch (row-pure,
+            # bit-identical to the one-shot resolve)
+            flight = None
+            for lo in range(0, n_slots, _DISPATCH_CHUNK):
+                sc = slice(lo, min(lo + _DISPATCH_CHUNK, n_slots))
+                _, b0, ok0 = lanes.plan_resolve(lane_of[sc], ids0[sc], 0,
+                                                st0[sc])
+                rows = _async_rows_cols(slot_of[sc],
+                                        np.zeros(sc.stop - sc.start,
+                                                 np.int64), 0, b0, ok0)
+                if flight is None:
+                    flight = {f: np.empty(n_slots, a.dtype)
+                              for f, a in rows.items()}
+                for f, a in rows.items():
+                    flight[f][sc] = a
         alive = np.ones(int(offsets[-1]), bool)
         k = 0                        # == every active lane's `version`
 
@@ -1027,11 +1157,35 @@ class LaneTask:
     on_round: Optional[RoundCallback] = None
 
 
+class _LaneStreamSink:
+    """``LaneAccumulator``-compatible ``append`` surface for streaming
+    packs: each appended block's rows forward to their lane's
+    ``StreamedLog`` fold. ``np.flatnonzero`` keeps within-lane row order,
+    which is the lane's serial log order (the lane-equivalence
+    invariant), so per-lane reservoir global indices line up with a
+    serial streaming run exactly."""
+
+    def __init__(self, logs: List[StreamedLog]):
+        self.logs = logs
+
+    def append(self, lane: np.ndarray, **cols: np.ndarray) -> None:
+        lane = np.asarray(lane)
+        n = len(cols["client_id"])
+        block = {f: (np.broadcast_to(np.asarray(a), (n,))
+                     if np.ndim(a) == 0 else a) for f, a in cols.items()}
+        for i in np.unique(lane):
+            m = np.flatnonzero(lane == i)
+            self.logs[int(i)].append(**{f: a[m] for f, a in block.items()})
+
+
 class _LanePack:
     """Shared mutable state for one lockstep lane run: per-lane clocks,
     round counters, stoppers, logs and learners, plus the pack-wide
     ``LaneSampler`` and the single ``LaneAccumulator`` session store that
-    per-lane TaskLogs are sliced out of at the end."""
+    per-lane TaskLogs are sliced out of at the end. Streaming packs
+    (``run.telemetry == "streaming"``, uniform across lanes — the sweep
+    packer splits mixed groups) swap the store for per-lane
+    ``StreamedLog`` folds behind a ``_LaneStreamSink``."""
 
     def __init__(self, tasks: List[LaneTask]):
         self.tasks = tasks
@@ -1041,9 +1195,21 @@ class _LanePack:
         self.learners = [t.learner for t in tasks]
         self.lanes = LaneSampler([t.sampler for t in tasks])
         self.stoppers = [_Stopper(t.run) for t in tasks]
-        self.logs = [TaskLog() for _ in tasks]
-        self.acc = LaneAccumulator(self.lanes.device_names,
-                                   self.lanes.country_names)
+        self.streaming = tasks[0].run.telemetry == "streaming"
+        assert all((t.run.telemetry == "streaming") == self.streaming
+                   for t in tasks), \
+            "lane packs must not mix streaming and full telemetry"
+        if self.streaming:
+            self.logs: List[TaskLog] = [
+                StreamedLog(t.estimator, t.sampler.device_names,
+                            t.sampler.country_names, seed=t.fed.seed,
+                            sample=t.run.telemetry_sample, mode=t.fed.mode)
+                for t in tasks]
+            self.acc = _LaneStreamSink(self.logs)
+        else:
+            self.logs = [TaskLog() for _ in tasks]
+            self.acc = LaneAccumulator(self.lanes.device_names,
+                                       self.lanes.country_names)
         self.t = np.zeros(self.n_lanes)
         self.rounds = np.zeros(self.n_lanes, np.int64)
         self.ppl = np.asarray([float(t.model_cfg.vocab_size) for t in tasks])
@@ -1090,17 +1256,24 @@ class LaneRunner:
         pack = _LanePack(tasks)
         self.strategy.lane_loop(pack)
         assert not pack.active.any()
-        batches = pack.acc.split()
-        cols = pack.acc.raw()
-        carbons = lane_carbon(cols, cols["lane"],
-                              [t.estimator for t in tasks],
-                              pack.lanes.device_names,
-                              pack.lanes.country_names,
-                              [log.duration_s for log in pack.logs])
+        if pack.streaming:
+            # each lane's StreamedLog already holds its exact running
+            # sums; estimate() reads them via carbon_components
+            carbons = [t.estimator.estimate(pack.logs[i])
+                       for i, t in enumerate(tasks)]
+        else:
+            batches = pack.acc.split()
+            cols = pack.acc.raw()
+            carbons = lane_carbon(cols, cols["lane"],
+                                  [t.estimator for t in tasks],
+                                  pack.lanes.device_names,
+                                  pack.lanes.country_names,
+                                  [log.duration_s for log in pack.logs])
         out: List[TaskResult] = []
         for i, task in enumerate(tasks):
             log = pack.logs[i]
-            log.log_batch(batches[i])
+            if not pack.streaming:
+                log.log_batch(batches[i])
             stop = pack.stoppers[i]
             ppl = float(pack.ppl[i])
             out.append(TaskResult(log, carbons[i], stop.reached,

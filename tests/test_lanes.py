@@ -355,6 +355,41 @@ def test_batch_carbon_empty_task_log_is_all_zero_but_server():
     assert bd.total_kg == bd.server_kg
 
 
+def test_empty_batch_accumulator_to_batch_is_well_formed():
+    """Satellite: a never-appended BatchAccumulator (e.g. an async run
+    whose first window is still in flight at the round cap) yields a
+    zero-length SessionBatch that batch_carbon reduces to all-zero."""
+    acc = BatchAccumulator(("pixel-7",), ("US",))
+    b = acc.to_batch()
+    assert isinstance(b, SessionBatch) and len(b) == 0
+    est = CarbonEstimator()
+    assert est.batch_carbon(b) == {"client_compute_kg": 0.0,
+                                   "upload_kg": 0.0, "download_kg": 0.0}
+    log = TaskLog()
+    log.log_batch(b)
+    assert log.n_sessions == 0 and est.estimate(log).total_kg == 0.0
+
+
+def test_streaming_and_full_specs_pack_separately():
+    """Streaming and full-telemetry lanes use different session stores,
+    so a mixed sweep splits them into separate packs — and both halves
+    still match their per-spec serial runs."""
+    import dataclasses
+    from repro.core.streaming import StreamedLog
+    full = [_spec("async", 14, 0.8, s, 6, env_idx=s) for s in range(2)]
+    stream = [s.replace(run=dataclasses.replace(
+        s.run, telemetry="streaming", telemetry_sample=32)) for s in full]
+    mixed = [full[0], stream[0], full[1], stream[1]]
+    jobs = sweep_mod._group_packs(mixed)
+    assert jobs == [("pack", [0, 2]), ("pack", [1, 3])]
+    res = sweep(mixed, workers=1, vectorize=True)
+    serial = [Experiment(s).run() for s in mixed]
+    for s, rl, rs in zip(mixed, res, serial):
+        assert rl.summary() == rs.summary()
+        assert isinstance(rl.log, StreamedLog) == \
+            (s.run.telemetry == "streaming")
+
+
 def test_lane_carbon_matches_per_lane_batch_carbon():
     """The segment-reduction lane estimator equals per-lane batch_carbon
     bit for bit (pairwise sums over identical row order)."""
