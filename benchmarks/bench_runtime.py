@@ -45,6 +45,11 @@ workload so CI quick runs never clobber the full baseline:
   ``per_mode{sync,async} -> {sessions, wall_s, sessions_per_s, rounds,
   carbon_total_kg}`` plus the pooled ``sessions/wall_s/sessions_per_s``),
   ``speedup`` and ``speedup_per_mode``; full runs add ``async_stress``.
+  ``fault_stress`` records the fault-injection point (PR 7): the async
+  engine at fig5 scale with diurnal per-country failure hazards,
+  correlated burst windows and retry/backoff re-dispatch all live —
+  throughput of the fault weave + retry stream keying, gated at 2x like
+  the per-mode points, with the outcome mix recorded for context.
   ``population_stress`` records the streaming-telemetry scale point
   (async at concurrency 10^5 quick / 10^6 full, ≥10^7 sessions full):
   throughput, ``peak_rss_mb`` (process high-water mark, gated under
@@ -76,6 +81,8 @@ from typing import Dict, List
 
 from repro.api import Environment
 from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.carbon import UTC_OFFSET_H
+from repro.core.faults import FaultModel, wave_hazard_schedule
 from repro.federated.reference import run_scalar
 from repro.federated.runtime import get_strategy
 from repro.federated.surrogate import SurrogateLearner
@@ -164,6 +171,46 @@ def _run_async_stress() -> Dict:
             "carbon_total_kg": res.carbon.total_kg}
 
 
+def _run_fault_stress(quick: bool) -> Dict:
+    """Columnar async point with the fault machinery fully live at fig5
+    scale: diurnal per-country failure hazards (phase-shifted schedule
+    lookups per resolve), correlated burst windows, and retry/backoff
+    re-dispatch (retry_limit=2, every attempt charged). Gates the cost
+    of the fault weave + retry stream keying in the hot loop."""
+    import dataclasses
+    cfg = get_config("paper-charlm")
+    cfg.param_count()
+    conc = 200 if quick else 1000
+    fed = FederatedConfig(mode="async", concurrency=conc,
+                          aggregation_goal=conc, retry_limit=2,
+                          retry_backoff_s=30.0)
+    run = RunConfig(target_perplexity=175.0,
+                    max_rounds=80 if quick else 10_000)
+    env = Environment()
+    countries = tuple(env.country_mix)
+    env = dataclasses.replace(env, fault=FaultModel(
+        hazard_schedule=wave_hazard_schedule(countries, base=0.08),
+        hazard_phase_h={c: UTC_OFFSET_H.get(c, 0.0) for c in countries},
+        burst_rate_per_day=6.0, burst_duration_s=2400.0,
+        burst_fail_prob=0.5, seed=7))
+    learner = SurrogateLearner(cfg, fed, run)
+    t0 = time.time()
+    res = get_strategy("async").run(cfg, fed, run, learner,
+                                    sampler=env.sampler(cfg, fed, 64),
+                                    estimator=env.estimator())
+    wall = time.time() - t0
+    n = res.log.n_sessions
+    parts = res.log.participation()
+    return {"concurrency": conc, "aggregation_goal": conc,
+            "retry_limit": 2, "sessions": n, "wall_s": round(wall, 4),
+            "sessions_per_s": round(n / max(wall, 1e-9)),
+            "rounds": res.rounds,
+            "failed": parts.get("failed", 0),
+            "retried": parts.get("retried", 0),
+            "carbon_total_kg": res.carbon.total_kg,
+            "wasted_kg": res.carbon.wasted_kg}
+
+
 def _run_population(quick: bool) -> Dict:
     """Population-scale async point through the streaming telemetry path
     (PR 6): quick = concurrency 10^5, full = concurrency 10^6 driven past
@@ -242,6 +289,7 @@ def run_bench(quick: bool) -> Dict:
                      / max(scalar["per_mode"][m]["sessions_per_s"], 1), 2)
             for m in columnar["per_mode"]},
         "population_stress": population,
+        "fault_stress": _run_fault_stress(quick),
     }
     # the engines must simulate the identical workload (seed-for-seed)
     for m in columnar["per_mode"]:
@@ -267,6 +315,11 @@ def check_regression(fresh: Dict, baseline: Dict) -> int:
         old_m = baseline.get("columnar", {}).get("per_mode", {}) \
             .get(m, {}).get("sessions_per_s", 0)
         gates.append((f"columnar[{m}]", old_m, fm["sessions_per_s"]))
+    flt = fresh.get("fault_stress")
+    if flt:
+        gates.append(("fault_stress",
+                      baseline.get("fault_stress", {})
+                      .get("sessions_per_s", 0), flt["sessions_per_s"]))
     pop = fresh.get("population_stress")
     if pop:
         gates.append(("population_stress",
@@ -350,6 +403,9 @@ def append_history(key: str, fresh: Dict, path: str) -> None:
         pop = fresh["population_stress"]
         row["population_sessions_per_s"] = pop["sessions_per_s"]
         row["population_peak_rss_mb"] = pop["peak_rss_mb"]
+    if "fault_stress" in fresh:
+        row["fault_stress_sessions_per_s"] = \
+            fresh["fault_stress"]["sessions_per_s"]
     append_history_row(row, path)
 
 

@@ -30,6 +30,7 @@ from repro.core.carbon import (CARBON_INTENSITY, DATACENTER_LOCATIONS, PUE,
                                diurnal_schedule)
 from repro.core.energy import SERVER_TASK_POWER_W
 from repro.core.estimator import CarbonEstimator
+from repro.core.faults import FaultModel
 from repro.core.network import NetworkEnergyModel
 from repro.core.profiles import (COUNTRY_MIX, DOWNLOAD_BPS, FLEET, UPLOAD_BPS,
                                  DeviceProfile)
@@ -58,6 +59,33 @@ class Environment:
     intensity_schedule: Mapping[str, Sequence[float]] = field(
         default_factory=dict)
     intensity_phase_h: Mapping[str, float] = field(default_factory=dict)
+    # failure process: per-country (time-varying) hazards + correlated
+    # burst outages; the all-zero default is the fault-free engine
+    fault: FaultModel = field(default_factory=FaultModel)
+
+    def __post_init__(self):
+        if self.download_bps <= 0 or self.upload_bps <= 0:
+            raise ValueError(
+                "Environment link bandwidths must be > 0, got "
+                f"download_bps={self.download_bps!r} "
+                f"upload_bps={self.upload_bps!r}")
+        if self.pue < 1.0:
+            raise ValueError(f"Environment.pue must be >= 1.0 "
+                             f"(it multiplies IT power), got {self.pue!r}")
+        if self.server_power_w < 0:
+            raise ValueError("Environment.server_power_w must be >= 0, "
+                             f"got {self.server_power_w!r}")
+        if not self.fleet:
+            raise ValueError("Environment.fleet must name at least one "
+                             "device profile")
+        if self.country_mix:
+            bad = {c: w for c, w in self.country_mix.items() if w < 0}
+            if bad:
+                raise ValueError(
+                    f"Environment.country_mix has negative weights: {bad}")
+            if not sum(self.country_mix.values()) > 0:
+                raise ValueError("Environment.country_mix weights must "
+                                 "sum to > 0")
 
     # ------------------------------------------------------------ presets
     @classmethod
@@ -117,11 +145,12 @@ class Environment:
                               fleet=self.fleet,
                               country_mix=self.country_mix,
                               download_bps=self.download_bps,
-                              upload_bps=self.upload_bps)
+                              upload_bps=self.upload_bps,
+                              fault=self.fault)
 
     # ------------------------------------------------- JSON round-tripping
     def to_dict(self) -> dict:
-        return {
+        out = {
             "network": dataclasses.asdict(self.network),
             "carbon_intensity": dict(self.carbon_intensity),
             "datacenter_locations": dict(self.datacenter_locations),
@@ -135,6 +164,10 @@ class Environment:
                                    self.intensity_schedule.items()},
             "intensity_phase_h": dict(self.intensity_phase_h),
         }
+        fd = self.fault.to_dict()
+        if fd:                      # default (fault-free) stays implicit
+            out["fault"] = fd
+        return out
 
     @classmethod
     def from_dict(cls, d: Optional[Mapping]) -> "Environment":
@@ -147,4 +180,6 @@ class Environment:
             d["fleet"] = tuple(
                 p if isinstance(p, DeviceProfile) else DeviceProfile(**p)
                 for p in d["fleet"])
+        if not isinstance(d.get("fault"), FaultModel):
+            d["fault"] = FaultModel.from_dict(d.get("fault"))
         return cls(**d)

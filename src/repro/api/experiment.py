@@ -62,6 +62,7 @@ class Result:
     final_perplexity: float
     smoothed_perplexity: float
     wall_s: float = 0.0
+    aborted: bool = False   # starvation abort (sync graceful degradation)
 
     @classmethod
     def from_task_result(cls, spec: ExperimentSpec, tr: TaskResult,
@@ -71,7 +72,7 @@ class Result:
                    duration_h=tr.duration_h,
                    final_perplexity=tr.final_perplexity,
                    smoothed_perplexity=tr.smoothed_perplexity,
-                   wall_s=wall_s)
+                   wall_s=wall_s, aborted=tr.aborted)
 
     def summary(self) -> Dict[str, float]:
         """Same keys as the legacy TaskResult.summary() so downstream CSV
@@ -84,6 +85,7 @@ class Result:
             "carbon_total_kg": self.carbon.total_kg,
             **{k: v for k, v in self.carbon.as_dict().items()},
             "sessions": float(self.log.n_sessions),
+            "aborted": float(self.aborted),
         }
 
     def to_dict(self) -> dict:

@@ -80,6 +80,17 @@ def _n_workers(n_specs: int, workers: Optional[int]) -> int:
     return max(1, min(int(workers), n_specs))
 
 
+def _annotate(e: BaseException, note: str) -> BaseException:
+    """Prepend context to an exception's message in place (3.10-compatible
+    stand-in for ``add_note``), preserving its type so callers' ``except``
+    clauses and ``pytest.raises(..., match=...)`` searches still hit."""
+    if e.args and isinstance(e.args[0], str):
+        e.args = (f"{note}: {e.args[0]}",) + e.args[1:]
+    else:
+        e.args = (note,) + tuple(e.args)
+    return e
+
+
 # ---------------------------------------------------------------------------
 # Lane packs
 # ---------------------------------------------------------------------------
@@ -141,36 +152,51 @@ def _chunk_packs(jobs: List[Tuple[str, List[int]]],
     return out
 
 
-def _run_pack(specs: List[ExperimentSpec]) -> List[Result]:
+def _run_pack(specs: List[ExperimentSpec],
+              idxs: Optional[List[int]] = None) -> List[Result]:
     """Run one lane pack through LaneRunner; Results in pack order.
-    ``wall_s`` records each lane's amortized share of the pack wall."""
+    ``wall_s`` records each lane's amortized share of the pack wall.
+    Failures are annotated with the lane (and sweep spec index) at fault
+    so a 50-lane pack's traceback names the offending spec."""
     from repro.federated.runtime import LaneRunner, LaneTask
     t0 = time.time()
     tasks = []
-    for spec in specs:
-        exp = Experiment(spec)
-        cfg = exp.model_config
-        env = spec.environment
-        tasks.append(LaneTask(
-            model_cfg=cfg, fed=spec.federated, run=spec.run,
-            learner=exp.build_learner(),
-            sampler=env.sampler(cfg, spec.federated, spec.seq_len),
-            estimator=env.estimator()))
-    trs = LaneRunner(specs[0].federated.mode).run(tasks)
+    for lane, spec in enumerate(specs):
+        try:
+            exp = Experiment(spec)
+            cfg = exp.model_config
+            env = spec.environment
+            tasks.append(LaneTask(
+                model_cfg=cfg, fed=spec.federated, run=spec.run,
+                learner=exp.build_learner(),
+                sampler=env.sampler(cfg, spec.federated, spec.seq_len),
+                estimator=env.estimator()))
+        except Exception as e:                   # noqa: BLE001
+            where = f"sweep lane {lane}" if idxs is None \
+                else f"sweep lane {lane} (spec index {idxs[lane]})"
+            raise _annotate(e, where)
+    try:
+        trs = LaneRunner(specs[0].federated.mode).run(tasks)
+    except Exception as e:                       # noqa: BLE001
+        where = f"sweep lane pack of {len(specs)} lanes" if idxs is None \
+            else f"sweep lane pack (spec indices {list(idxs)})"
+        raise _annotate(e, where)
     wall = (time.time() - t0) / len(specs)
     return [Result.from_task_result(spec, tr, wall_s=wall)
             for spec, tr in zip(specs, trs)]
 
 
-def _run_job(kind: str, specs: List[ExperimentSpec]) -> List[Result]:
+def _run_job(kind: str, specs: List[ExperimentSpec],
+             idxs: Optional[List[int]] = None) -> List[Result]:
     if kind == "pack":
-        return _run_pack(specs)
+        return _run_pack(specs, idxs)
     return [run_spec(specs[0])]
 
 
-def _run_job_safe(kind: str, specs: List[ExperimentSpec]):
+def _run_job_safe(kind: str, specs: List[ExperimentSpec],
+                  idxs: Optional[List[int]] = None):
     try:
-        return ("ok", _run_job(kind, specs))
+        return ("ok", _run_job(kind, specs, idxs))
     except Exception as e:                       # noqa: BLE001
         return ("err", e)
 
@@ -216,14 +242,15 @@ def sweep(specs: Sequence[ExperimentSpec], workers: Optional[int] = None,
             # fall back to in-process — only for the jobs the pool never
             # finished, so on_result fires exactly once per spec
             import warnings
-            done = sum(r is not None for r in results)
+            pending = [i for i, r in enumerate(results) if r is None]
             warnings.warn(
                 f"sweep: process pool unavailable ({e!r}); running the "
-                f"remaining {len(specs) - done}/{len(specs)} specs "
-                "in-process", RuntimeWarning, stacklevel=2)
+                f"remaining {len(pending)}/{len(specs)} specs "
+                f"in-process (spec indices {pending})",
+                RuntimeWarning, stacklevel=2)
     for kind, idxs in jobs:
         if results[idxs[0]] is None:      # packs deliver all-or-nothing
-            deliver(idxs, _run_job(kind, [specs[i] for i in idxs]))
+            deliver(idxs, _run_job(kind, [specs[i] for i in idxs], idxs))
     return results  # type: ignore[return-value]
 
 
@@ -233,7 +260,7 @@ def _sweep_pool(jobs: List[Tuple[str, List[int]]],
     from concurrent.futures import ProcessPoolExecutor, as_completed
     with ProcessPoolExecutor(max_workers=n) as pool:
         futures = {pool.submit(_run_job_safe, kind,
-                               [specs[i] for i in idxs]): idxs
+                               [specs[i] for i in idxs], idxs): idxs
                    for kind, idxs in jobs}
         for fut in as_completed(futures):
             status, payload = fut.result()

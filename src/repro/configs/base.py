@@ -169,12 +169,56 @@ class FederatedConfig:
     # cohort mix (honest convergence stats, no starved regions)
     carbon_topk: int = 6
     carbon_explore: float = 0.1
+    # recovery policy (pairs with Environment.fault): a session that ends
+    # "failed" re-dispatches its slot up to `retry_limit` times, each wave
+    # delayed by retry_backoff_s * 2**attempt (exponential backoff); every
+    # attempt is charged. Sync rounds degrade gracefully: a round whose
+    # completers fall below ceil(min_report_fraction * aggregation_goal)
+    # is `starved` (no server update), and `starvation_patience`
+    # consecutive starved rounds abort the task (0 = never abort).
+    retry_limit: int = 0
+    retry_backoff_s: float = 30.0
+    min_report_fraction: float = 0.0
+    starvation_patience: int = 0
 
     def __post_init__(self):
-        assert self.mode in ("sync", "async", "carbon-aware")
-        assert self.aggregation_goal <= self.concurrency
-        assert self.carbon_topk >= 1
-        assert 0.0 <= self.carbon_explore <= 1.0
+        if self.mode not in ("sync", "async", "carbon-aware"):
+            raise ValueError(f"unknown federated mode {self.mode!r}; "
+                             "known: 'sync', 'async', 'carbon-aware'")
+        if self.concurrency < 1:
+            raise ValueError(
+                f"concurrency must be >= 1, got {self.concurrency!r}")
+        if self.aggregation_goal < 1:
+            raise ValueError(f"aggregation_goal must be >= 1, got "
+                             f"{self.aggregation_goal!r}")
+        if self.aggregation_goal > self.concurrency:
+            raise ValueError(
+                f"aggregation_goal ({self.aggregation_goal}) cannot exceed "
+                f"concurrency ({self.concurrency})")
+        if not 0.0 <= self.dropout_rate <= 1.0:
+            raise ValueError("dropout_rate must be a probability in "
+                             f"[0, 1], got {self.dropout_rate!r}")
+        if self.client_timeout_s <= 0:
+            raise ValueError(f"client_timeout_s must be > 0, got "
+                             f"{self.client_timeout_s!r}")
+        if self.carbon_topk < 1:
+            raise ValueError(
+                f"carbon_topk must be >= 1, got {self.carbon_topk!r}")
+        if not 0.0 <= self.carbon_explore <= 1.0:
+            raise ValueError("carbon_explore must be a probability in "
+                             f"[0, 1], got {self.carbon_explore!r}")
+        if self.retry_limit < 0:
+            raise ValueError(
+                f"retry_limit must be >= 0, got {self.retry_limit!r}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(f"retry_backoff_s must be >= 0, got "
+                             f"{self.retry_backoff_s!r}")
+        if not 0.0 <= self.min_report_fraction <= 1.0:
+            raise ValueError("min_report_fraction must be in [0, 1], got "
+                             f"{self.min_report_fraction!r}")
+        if self.starvation_patience < 0:
+            raise ValueError(f"starvation_patience must be >= 0, got "
+                             f"{self.starvation_patience!r}")
 
 
 @dataclass(frozen=True)

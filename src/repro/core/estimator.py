@@ -121,9 +121,18 @@ class CarbonBreakdown:
     upload_kg: float
     download_kg: float
     server_kg: float
+    # contributed vs wasted split (the paper's over-commitment price):
+    # contributed = completed sessions' client-side carbon + the server;
+    # wasted = every non-completed session (dropped, timed out, cancelled,
+    # failed, retried) — work that burned carbon but never aggregated.
+    # When populated, total_kg == contributed_kg + wasted_kg by definition.
+    contributed_kg: float = 0.0
+    wasted_kg: float = 0.0
 
     @property
     def total_kg(self) -> float:
+        if self.contributed_kg or self.wasted_kg:
+            return self.contributed_kg + self.wasted_kg
         return (self.client_compute_kg + self.upload_kg + self.download_kg
                 + self.server_kg)
 
@@ -142,6 +151,8 @@ class CarbonBreakdown:
             "upload_kg": self.upload_kg,
             "download_kg": self.download_kg,
             "server_kg": self.server_kg,
+            "contributed_kg": self.contributed_kg,
+            "wasted_kg": self.wasted_kg,
             "total_kg": self.total_kg,
         }
 
@@ -182,16 +193,21 @@ class CarbonEstimator:
         and prorated bytes already carry the burned-energy accounting."""
         if not len(b):
             return {"client_compute_kg": 0.0, "upload_kg": 0.0,
-                    "download_kg": 0.0}
+                    "download_kg": 0.0, "ok_kg": 0.0, "waste_kg": 0.0}
         kg = _kg_rows(self, b.device_names, b.device_idx, b.country_names,
                       b.country_idx, b.compute_s, b.upload_s, b.download_s,
                       b.bytes_up, b.bytes_down, b.start_t)
         # error-free sums: the result is the correctly-rounded true sum,
         # independent of row order or chunking — which is exactly what lets
-        # the streaming telemetry fold reproduce this path bit-for-bit
+        # the streaming telemetry fold reproduce this path bit-for-bit.
+        # ok/waste split the same rows by completion (wasted work: dropped,
+        # timed out, cancelled, failed, retried) — same exactness contract.
+        okm = b.completed_mask
         return {"client_compute_kg": exact_sum(kg[0]),
                 "upload_kg": exact_sum(kg[1]),
-                "download_kg": exact_sum(kg[2])}
+                "download_kg": exact_sum(kg[2]),
+                "ok_kg": exact_sum(kg[:, okm]),
+                "waste_kg": exact_sum(kg[:, ~okm])}
 
     def _server_kg_s(self, duration_s: float) -> float:
         srv_j = server_energy_j(duration_s, pue=self.intensity.pue,
@@ -213,19 +229,29 @@ class CarbonEstimator:
             d = self.batch_carbon(log.columns() if hasattr(log, "columns")
                                   else SessionBatch.from_sessions(
                                       log.sessions))
+        srv = self._server_kg(log)
         return CarbonBreakdown(d["client_compute_kg"], d["upload_kg"],
-                               d["download_kg"], self._server_kg(log))
+                               d["download_kg"], srv,
+                               contributed_kg=d.get("ok_kg", 0.0) + srv,
+                               wasted_kg=d.get("waste_kg", 0.0))
 
     def estimate_scalar(self, log: TaskLog) -> CarbonBreakdown:
         """Per-session reference loop — equivalence-test and benchmark twin
         of the vectorized ``estimate``."""
-        cc = up = dn = 0.0
+        cc = up = dn = okk = wst = 0.0
         for s in log.sessions:
             d = self.session_carbon(s)
             cc += d["client_compute_kg"]
             up += d["upload_kg"]
             dn += d["download_kg"]
-        return CarbonBreakdown(cc, up, dn, self._server_kg(log))
+            row = d["client_compute_kg"] + d["upload_kg"] + d["download_kg"]
+            if s.completed:
+                okk += row
+            else:
+                wst += row
+        srv = self._server_kg(log)
+        return CarbonBreakdown(cc, up, dn, srv, contributed_kg=okk + srv,
+                               wasted_kg=wst)
 
 
 def _kg_rows(est: CarbonEstimator, device_names, device_idx, country_names,
@@ -298,17 +324,21 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
     bu_s = cols["bytes_up"][order]
     bd_s = cols["bytes_down"][order]
     st_s = cols["start_t"][order]
+    out_s = cols["outcome"][order]
     out: List[CarbonBreakdown] = []
     for i, est in enumerate(estimators):
         sl = slice(int(bounds[i]), int(bounds[i + 1]))
+        srv = est._server_kg_s(durations_s[i])
         if sl.start == sl.stop:
-            out.append(CarbonBreakdown(0.0, 0.0, 0.0,
-                                       est._server_kg_s(durations_s[i])))
+            out.append(CarbonBreakdown(0.0, 0.0, 0.0, srv,
+                                       contributed_kg=srv, wasted_kg=0.0))
             continue
         kg = _kg_rows(est, device_names[i], dev_s[sl], country_names[i],
                       ctry_s[sl], comp_s[sl], up_s[sl], down_s[sl],
                       bu_s[sl], bd_s[sl], st_s[sl])
-        out.append(CarbonBreakdown(exact_sum(kg[0]), exact_sum(kg[1]),
-                                   exact_sum(kg[2]),
-                                   est._server_kg_s(durations_s[i])))
+        okm = out_s[sl] == 0  # OUTCOME_CODE["completed"]
+        out.append(CarbonBreakdown(
+            exact_sum(kg[0]), exact_sum(kg[1]), exact_sum(kg[2]), srv,
+            contributed_kg=exact_sum(kg[:, okm]) + srv,
+            wasted_kg=exact_sum(kg[:, ~okm])))
     return out

@@ -73,6 +73,10 @@ class StreamingAccumulator:
         self._n = 0
         # exact component sums (bit-for-bit vs materialized batch_carbon)
         self._kg = [ExactSum(), ExactSum(), ExactSum()]
+        # exact contributed/wasted split over the same rows: completed vs
+        # everything else (dropped/timeout/cancelled/failed/retried)
+        self._kg_ok = ExactSum()
+        self._kg_waste = ExactSum()
         self._bytes_up = ExactSum()
         self._bytes_down = ExactSum()
         # exact integer counters
@@ -121,6 +125,8 @@ class StreamingAccumulator:
         out = block["outcome"]
         self._outcome_counts += np.bincount(out, minlength=len(OUTCOMES))
         ok = out == 0  # OUTCOME_CODE["completed"]
+        self._kg_ok.add(kg[:, ok])
+        self._kg_waste.add(kg[:, ~ok])
         self._stale_sum += int(block["staleness"][ok].sum(dtype=np.int64))
         self._fold_groups(block, kg, e, out)
         self._fold_reservoir(block, n)
@@ -198,7 +204,9 @@ class StreamingAccumulator:
     def carbon_components(self) -> Dict[str, float]:
         return {"client_compute_kg": self._kg[0].value(),
                 "upload_kg": self._kg[1].value(),
-                "download_kg": self._kg[2].value()}
+                "download_kg": self._kg[2].value(),
+                "ok_kg": self._kg_ok.value(),
+                "waste_kg": self._kg_waste.value()}
 
     def total_bytes(self) -> Dict[str, float]:
         return {"up": self._bytes_up.value(),

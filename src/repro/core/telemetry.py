@@ -23,7 +23,11 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-OUTCOMES: Tuple[str, ...] = ("completed", "dropped", "timeout", "cancelled")
+# Append-only: codes are positional and live in persisted telemetry.
+# "failed" = killed by the fault model (hazard or burst); "retried" = a
+# failed attempt whose slot was re-dispatched (the retry is its own row).
+OUTCOMES: Tuple[str, ...] = ("completed", "dropped", "timeout", "cancelled",
+                             "failed", "retried")
 OUTCOME_CODE: Dict[str, int] = {name: i for i, name in enumerate(OUTCOMES)}
 
 
@@ -42,7 +46,7 @@ class ClientSession:
     bytes_up: float
     start_t: float               # task clock, seconds
     end_t: float
-    outcome: str                 # "completed"|"dropped"|"timeout"|"cancelled"
+    outcome: str                 # one of OUTCOMES
     staleness: int = 0           # async: server updates since model was sent
 
     @property
@@ -319,6 +323,7 @@ class TaskLog:
         self._columns: Optional[SessionBatch] = None
         self._sessions: Optional[Tuple[ClientSession, ...]] = None
         self.rounds: int = 0                  # server model updates so far
+        self.starved_rounds: int = 0          # sync rounds closed under quorum
         self.duration_s: float = 0.0          # task wall-clock so far
         self.server_busy_s: float = 0.0       # == duration (servers stay up)
         self.eval_history: List[Dict] = []
@@ -337,8 +342,10 @@ class TaskLog:
         self._n += 1
         self._columns = self._sessions = None
 
-    def log_round(self, t: float) -> None:
+    def log_round(self, t: float, starved: bool = False) -> None:
         self.rounds += 1
+        if starved:
+            self.starved_rounds += 1
         self.duration_s = max(self.duration_s, t)
 
     def log_eval(self, t: float, round_idx: int, perplexity: float,

@@ -31,6 +31,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig
+from repro.core.faults import FaultModel
 from repro.core.profiles import (COUNTRY_MIX, DOWNLOAD_BPS, FLEET, UPLOAD_BPS,
                                  DeviceProfile)
 from repro.core.telemetry import OUTCOME_CODE, SessionBatch
@@ -215,6 +216,37 @@ def reservoir_keys(seed: int,
         return _splitmix64_arr(base0 + idx * _U64(_RESERVOIR_MIX))
 
 
+_RETRY_MIX = 0xE7037ED1A0B428DB   # retry-id lane spacing (recovery policy)
+
+
+def retry_stream_ids(seed: int, units: Union[np.ndarray, Sequence[int]],
+                     attempts: Union[np.ndarray, Sequence[int]],
+                     population: int) -> np.ndarray:
+    """Counter-based retry-id streams for the recovery policy: the a-th
+    retry re-dispatched for recovery unit u draws client id
+    ``splitmix64((seed, u, a))`` along a dedicated ``_RETRY_MIX`` lane, so
+    retry identities never alias the plain replacement streams (async:
+    u = in-flight slot, a = generation; sync: u = cohort position,
+    a = round * (retry_limit + 1) + attempt). Pure counter functions keep
+    serial, lane-batched and oracle retry chains seed-for-seed identical."""
+    s = np.asarray(units, dtype=np.uint64)
+    g = np.asarray(attempts, dtype=np.uint64)
+    base0 = _U64(((seed & 0xFFFFFFFF) * 0x9E3779B9 + 0x7F4A7C15) & _M64)
+    with np.errstate(over="ignore"):
+        h = _splitmix64_arr(base0 + s * _U64(_RETRY_MIX) + g * _U64(_GOLDEN))
+    u = (h >> _U64(11)).astype(np.float64) * _INV53
+    return (u * population).astype(np.int64)
+
+
+def retry_stream_id(seed: int, unit: int, attempt: int,
+                    population: int) -> int:
+    """Scalar twin of ``retry_stream_ids`` (the reference oracle's path) —
+    bit-identical to the batch version."""
+    base = ((seed & 0xFFFFFFFF) * 0x9E3779B9 + 0x7F4A7C15) & _M64
+    h = _splitmix64((base + unit * _RETRY_MIX + attempt * _GOLDEN) & _M64)
+    return int((h >> 11) * _INV53 * population)
+
+
 _PROBE_MIX = 0xA0761D6478BD642F   # probe-lane spacing for carbon-aware picks
 
 
@@ -304,7 +336,8 @@ class SessionSampler:
                  fleet: Optional[Sequence[DeviceProfile]] = None,
                  country_mix: Optional[Mapping[str, float]] = None,
                  download_bps: Optional[float] = None,
-                 upload_bps: Optional[float] = None):
+                 upload_bps: Optional[float] = None,
+                 fault: Optional[FaultModel] = None):
         self.cfg = model_cfg
         self.fed = fed
         self.seq_len = seq_len
@@ -334,6 +367,20 @@ class SessionSampler:
         self._gflops = np.asarray([p.train_gflops for p in fleet], np.float64)
         self.device_names: Tuple[str, ...] = tuple(p.name for p in fleet)
         self.country_names: Tuple[str, ...] = tuple(self._countries)
+        if fed.mode == "carbon-aware" and fed.carbon_topk > len(
+                self._countries):
+            raise ValueError(
+                f"carbon_topk ({fed.carbon_topk}) exceeds the country "
+                f"vocabulary ({len(self._countries)} countries in the "
+                "participation mix)")
+        # fault injection: a disabled (all-zero) model keeps has_faults
+        # False and every resolve path runs the fault-free code verbatim
+        self.fault = fault
+        self.has_faults = fault is not None and fault.enabled
+        if self.has_faults:
+            self._hazard_tab = fault.hazard_table(self.country_names)
+            self._burst_start, self._burst_end = fault.burst_windows()
+            self._burst_p = fault.burst_fail_prob
 
     def country_draw(self, client_ids: Union[np.ndarray, Sequence[int]],
                      round_idx: int) -> np.ndarray:
@@ -350,6 +397,39 @@ class SessionSampler:
             vals = _splitmix64_arr(base_r + _U64(_GOLDEN))
         u1 = (vals >> _U64(11)).astype(np.float64) * _INV53
         return np.searchsorted(self._ccum, u1).astype(np.int32)
+
+    # ----------------------------------------------------------- faults
+    def _fault_masks(self, country_idx: np.ndarray, start: np.ndarray,
+                     end_full: np.ndarray, full: np.ndarray,
+                     uf: np.ndarray, pre: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fault overlay for one cohort: ``(failed, fault_burn)``.
+
+        ``uf`` is the 3-column fault-uniform block (hazard draw, burst
+        draw, hazard burn point); ``pre`` masks rows already resolved by a
+        higher-precedence outcome (dropout, timeout). A hazard failure
+        dies at a random point of its span; a burst failure dies the
+        moment the first overlapping outage window opens (sessions born
+        inside a window die instantly). Everything is element-wise, so
+        any per-lane subset of a pack reproduces this bit for bit."""
+        hz = self._hazard_tab.at(country_idx, start)
+        fh = ~pre & (uf[:, 0] < hz)
+        nb = len(self._burst_start)
+        if nb:
+            # first window whose end is past our start; overlaps iff it
+            # also opens before our end (starts are strictly increasing)
+            i = np.searchsorted(self._burst_end, start, side="right")
+            valid = i < nb
+            bs = self._burst_start[np.minimum(i, nb - 1)]
+            fb = ~pre & ~fh & valid & (bs < end_full) \
+                & (uf[:, 1] < self._burst_p)
+            t_hit = np.maximum(start, bs)
+        else:
+            fb = np.zeros(len(start), bool)
+            t_hit = start
+        fburn = np.where(fh, uf[:, 2] * full,
+                         np.clip(t_hit - start, 0.0, full))
+        return fh | fb, fburn
 
     # ------------------------------------------------------------ columnar
     def plan_batch(self, client_ids: Union[np.ndarray, Sequence[int]],
@@ -399,8 +479,18 @@ class SessionSampler:
 
         dropped = uu[:, 0] < fed.dropout_rate
         timeout = ~dropped & (full_c > fed.client_timeout_s)
+        if self.has_faults:
+            uf = _uniforms_batch(fed.seed, pb.client_ids,
+                                 round_idx + 2_000_000, 3)
+            failed, fburn = self._fault_masks(pb.country_idx, start,
+                                              end_full, full, uf,
+                                              dropped | timeout)
+        else:
+            failed = None
         if deadline is not None:
             late = ~dropped & ~timeout & (end_full > deadline)
+            if failed is not None:
+                late &= ~failed
         else:
             late = np.zeros(n, bool)
         # burn budget for the cut-short sessions: dropout picks a random
@@ -409,6 +499,9 @@ class SessionSampler:
         if deadline is not None:
             burn = np.where(late, np.maximum(0.0, deadline - start), burn)
         cut = dropped | late
+        if failed is not None:
+            burn = np.where(failed, fburn, burn)
+            cut = cut | failed
         d = np.where(cut, np.minimum(full_d, burn), full_d)
         c = np.where(cut, np.minimum(full_c,
                                      np.maximum(0.0, burn - full_d)),
@@ -421,12 +514,17 @@ class SessionSampler:
         u = np.where(timeout, 0.0, u)
         end = np.where(dropped, start + burn, end_full)
         end = np.where(timeout, start + full_d + fed.client_timeout_s, end)
+        if failed is not None:
+            end = np.where(failed, start + fburn, end)
         if deadline is not None:
-            end = np.where(late, deadline, end)
+            # retries may start after the round closed: never end < start
+            end = np.where(late, np.maximum(start, deadline), end)
 
         outcome = np.zeros(n, np.int8)  # completed
         outcome[cut] = OUTCOME_CODE["dropped"]
         outcome[timeout] = OUTCOME_CODE["timeout"]
+        if failed is not None:
+            outcome[failed] = OUTCOME_CODE["failed"]
         ok = outcome == OUTCOME_CODE["completed"]
         frac_down = np.divide(d, full_d, out=np.zeros(n), where=full_d > 0)
         batch = SessionBatch(
@@ -442,6 +540,33 @@ class SessionSampler:
             end_t=end, outcome=outcome,
             staleness=np.zeros(n, np.int32))
         return batch, ok
+
+    def apply_deadline(self, pb: PlanBatch, batch: SessionBatch,
+                       ok: np.ndarray, deadline: float) -> None:
+        """Patch a no-deadline ``resolve_batch`` into its with-deadline
+        twin, in place (the serial twin of ``LaneSampler.apply_deadline``):
+        only completed rows that finish past the deadline change — they
+        burn budget until the round closes and drop. Bit-identical to
+        resolving with the deadline up front, because dropped / timeout /
+        failed rows never depend on it. Lets the sync fault path resolve
+        retry chains before the round deadline is known."""
+        idx = np.flatnonzero(ok & (batch.end_t > deadline))
+        if not len(idx):
+            return
+        burn = np.maximum(0.0, deadline - batch.start_t[idx])
+        fd, fc, fu = pb.download_s[idx], pb.compute_s[idx], pb.upload_s[idx]
+        d = np.minimum(fd, burn)
+        c = np.minimum(fc, np.maximum(0.0, burn - fd))
+        u = np.minimum(fu, np.maximum(0.0, burn - fd - fc))
+        frac = np.divide(d, fd, out=np.zeros(len(idx)), where=fd > 0)
+        batch.download_s[idx] = d
+        batch.compute_s[idx] = c
+        batch.upload_s[idx] = u
+        batch.bytes_down[idx] = pb.bytes_down[idx] * np.minimum(1.0, frac)
+        batch.bytes_up[idx] = 0.0
+        batch.end_t[idx] = np.maximum(deadline, batch.start_t[idx])
+        batch.outcome[idx] = OUTCOME_CODE["dropped"]
+        ok[idx] = False
 
     # ------------------------------------------------- scalar (batch of 1)
     def plan(self, client_id: int, round_idx: int) -> SessionPlan:
@@ -505,6 +630,24 @@ class SessionSampler:
         outcome = "completed"
         d, c, u = full_d, full_c, full_u
 
+        fail_burn = None
+        if self.has_faults and not (uu[0] < fed.dropout_rate
+                                    or full_c > fed.client_timeout_s):
+            uf = _uniforms(fed.seed, plan.client_id, round_idx + 2_000_000, 3)
+            ci = np.asarray([self._countries.index(plan.country)], np.int32)
+            hz = float(self._hazard_tab.at(ci, np.asarray([start_t]))[0])
+            full = full_d + full_c + full_u
+            if uf[0] < hz:
+                fail_burn = uf[2] * full
+            elif len(self._burst_start):
+                i = int(np.searchsorted(self._burst_end, start_t,
+                                        side="right"))
+                if i < len(self._burst_start) \
+                        and self._burst_start[i] < end \
+                        and uf[1] < self._burst_p:
+                    fail_burn = min(max(0.0, float(self._burst_start[i])
+                                        - start_t), full)
+
         if uu[0] < fed.dropout_rate:
             # device stopped being idle/charging at a random point
             frac = uu[1]
@@ -520,12 +663,19 @@ class SessionSampler:
             u = 0.0
             end = start_t + d + c
             outcome = "timeout"
+        elif fail_burn is not None:
+            # killed by the fault model (hazard or burst)
+            d = min(full_d, fail_burn)
+            c = min(full_c, max(0.0, fail_burn - full_d))
+            u = min(full_u, max(0.0, fail_burn - full_d - full_c))
+            end = start_t + fail_burn
+            outcome = "failed"
         elif deadline is not None and end > deadline:
             burn = max(0.0, deadline - start_t)
             d = min(full_d, burn)
             c = min(full_c, max(0.0, burn - full_d))
             u = min(full_u, max(0.0, burn - full_d - full_c))
-            end = deadline
+            end = max(start_t, deadline)   # retries may start post-close
             outcome = "dropped"
 
         frac_down = d / full_d if full_d > 0 else 0.0
@@ -594,6 +744,11 @@ class LaneSampler:
         self._dcum2 = _pad2([s._dcum for s in ss], 2.0)
         self._ccum2 = _pad2([s._ccum for s in ss], 2.0)
         self._gfl2 = _pad2([s._gflops for s in ss], 1.0)
+        # fault lanes delegate the overlay to their own sampler's
+        # element-wise _fault_masks (per-lane hazard tables/burst windows);
+        # an all-fault-free pack skips the overlay entirely
+        self._fault_lanes = np.asarray([s.has_faults for s in ss], bool)
+        self.any_faults = bool(self._fault_lanes.any())
 
     # ------------------------------------------------------------- planning
     def _plan_from_u(self, lane: np.ndarray, ids: np.ndarray,
@@ -679,14 +834,34 @@ class LaneSampler:
         timeout_s = self.timeout_s[lane]
         dropped = uu[:, 0] < self.dropout_rate[lane]
         timeout = ~dropped & (full_c > timeout_s)
+        if self.any_faults:
+            uf = _uniforms_batch_rows(self.seeds[lane], pb.client_ids,
+                                      round_idx + 2_000_000, 3)
+            pre = dropped | timeout
+            failed = np.zeros(n, bool)
+            fburn = np.zeros(n, np.float64)
+            for li in np.unique(lane[self._fault_lanes[lane]]):
+                m = lane == li
+                f_, b_ = self.samplers[li]._fault_masks(
+                    pb.country_idx[m], start[m], end_full[m], full[m],
+                    uf[m], pre[m])
+                failed[m] = f_
+                fburn[m] = b_
+        else:
+            failed = None
         if deadline is not None:
             late = ~dropped & ~timeout & (end_full > deadline)
+            if failed is not None:
+                late &= ~failed
         else:
             late = np.zeros(n, bool)
         burn = uu[:, 1] * full
         if deadline is not None:
             burn = np.where(late, np.maximum(0.0, deadline - start), burn)
         cut = dropped | late
+        if failed is not None:
+            burn = np.where(failed, fburn, burn)
+            cut = cut | failed
         d = np.where(cut, np.minimum(full_d, burn), full_d)
         c = np.where(cut, np.minimum(full_c,
                                      np.maximum(0.0, burn - full_d)),
@@ -698,12 +873,17 @@ class LaneSampler:
         u = np.where(timeout, 0.0, u)
         end = np.where(dropped, start + burn, end_full)
         end = np.where(timeout, start + full_d + timeout_s, end)
+        if failed is not None:
+            end = np.where(failed, start + fburn, end)
         if deadline is not None:
-            end = np.where(late, deadline, end)
+            # retries may start after the round closed: never end < start
+            end = np.where(late, np.maximum(start, deadline), end)
 
         outcome = np.zeros(n, np.int8)  # completed
         outcome[cut] = OUTCOME_CODE["dropped"]
         outcome[timeout] = OUTCOME_CODE["timeout"]
+        if failed is not None:
+            outcome[failed] = OUTCOME_CODE["failed"]
         ok = outcome == OUTCOME_CODE["completed"]
         frac_down = np.divide(d, full_d, out=np.zeros(n), where=full_d > 0)
         cols = dict(
@@ -745,7 +925,7 @@ class LaneSampler:
         cols["upload_s"][idx] = u
         cols["bytes_down"][idx] = pb.bytes_down[idx] * np.minimum(1.0, frac)
         cols["bytes_up"][idx] = 0.0
-        cols["end_t"][idx] = dl
+        cols["end_t"][idx] = np.maximum(dl, cols["start_t"][idx])
         cols["outcome"][idx] = OUTCOME_CODE["dropped"]
         ok[idx] = False
 
@@ -761,6 +941,21 @@ class LaneSampler:
             base0 = (self.seeds[lane] & _U64(0xFFFFFFFF)) \
                 * _U64(0x9E3779B9) + _U64(0x7F4A7C15)
             h = _splitmix64_arr(base0 + s * _U64(_SLOT_MIX)
+                                + g * _U64(_GOLDEN))
+        u_ = (h >> _U64(11)).astype(np.float64) * _INV53
+        return (u_ * population).astype(np.int64)
+
+    def retry_stream_ids(self, lane: np.ndarray, units: np.ndarray,
+                         attempts: np.ndarray, population: int
+                         ) -> np.ndarray:
+        """Per-row-seed twin of the module-level ``retry_stream_ids``."""
+        lane = np.asarray(lane, np.intp)
+        s = np.asarray(units, dtype=np.uint64)
+        g = np.asarray(attempts, dtype=np.uint64)
+        with np.errstate(over="ignore"):
+            base0 = (self.seeds[lane] & _U64(0xFFFFFFFF)) \
+                * _U64(0x9E3779B9) + _U64(0x7F4A7C15)
+            h = _splitmix64_arr(base0 + s * _U64(_RETRY_MIX)
                                 + g * _U64(_GOLDEN))
         u_ = (h >> _U64(11)).astype(np.float64) * _INV53
         return (u_ * population).astype(np.int64)

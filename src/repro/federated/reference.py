@@ -33,7 +33,8 @@ import numpy as np
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
 from repro.core.estimator import CarbonEstimator
 from repro.core.telemetry import ClientSession, TaskLog
-from repro.federated.events import SessionSampler, slot_stream_id
+from repro.federated.events import (SessionSampler, retry_stream_id,
+                                    slot_stream_id)
 from repro.federated.runtime import (_POPULATION, _SERVER_AGG_S, TaskResult,
                                      _select_cohort, _Stopper)
 
@@ -58,7 +59,8 @@ def run_scalar(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
         t, rounds, ppl = _async_loop(model_cfg, fed, learner, sampler, log,
                                      stop)
     return TaskResult(log, est.estimate_scalar(log), stop.reached, rounds,
-                      t / 3600.0, ppl, stop.smoothed or ppl)
+                      t / 3600.0, ppl, stop.smoothed or ppl,
+                      aborted=stop.aborted)
 
 
 def _carbon_pick(sampler: SessionSampler, est: CarbonEstimator,
@@ -82,31 +84,40 @@ def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
     t = 0.0
     rounds = 0
     ppl = float(model_cfg.vocab_size)
+    goal = min(fed.aggregation_goal, fed.concurrency)
+    quorum = max(1, int(np.ceil(fed.min_report_fraction * goal)))
+    streak = 0
 
     while True:
         cohort = _select_cohort(rng, fed.concurrency, population=_POPULATION)
-        plans = [sampler.plan_scalar(int(c), rounds) for c in cohort]
-        tentative = [sampler.resolve_scalar(p, rounds, t) for p in plans]
-        ends = sorted(s["end_t"] for s, ok in tentative if ok)
-        goal = min(fed.aggregation_goal, fed.concurrency)
-        if len(ends) >= goal:
-            round_end = ends[goal - 1]
-            failed = False
-        elif ends:
-            round_end = ends[-1]
-            failed = False
+        if sampler.has_faults:
+            n_ok, contributors, round_end = _sync_faulty_round(
+                fed, sampler, log, cohort, rounds, t, goal)
         else:
-            round_end = max((s["end_t"] for s, _ in tentative), default=t)
-            failed = True
-        contributors: List[int] = []
-        for p in plans:
-            kw, ok = sampler.resolve_scalar(p, rounds, t, deadline=round_end)
-            log.log_session(ClientSession(**kw))
-            if ok and len(contributors) < goal:
-                contributors.append(p.client_id)
+            plans = [sampler.plan_scalar(int(c), rounds) for c in cohort]
+            tentative = [sampler.resolve_scalar(p, rounds, t) for p in plans]
+            ends = sorted(s["end_t"] for s, ok in tentative if ok)
+            if len(ends) >= goal:
+                round_end = ends[goal - 1]
+            elif ends:
+                round_end = ends[-1]
+            else:
+                round_end = max((s["end_t"] for s, _ in tentative),
+                                default=t)
+            n_ok = 0
+            contributors: List[int] = []
+            for p in plans:
+                kw, ok = sampler.resolve_scalar(p, rounds, t,
+                                                deadline=round_end)
+                log.log_session(ClientSession(**kw))
+                if ok:
+                    n_ok += 1
+                    if len(contributors) < goal:
+                        contributors.append(p.client_id)
+        starved = n_ok < quorum
         t = round_end + _SERVER_AGG_S
         rounds += 1
-        if not failed and contributors:
+        if not starved and contributors:
             if getattr(learner, "real", True):
                 deltas, weights = [], []
                 for c in contributors:
@@ -118,11 +129,71 @@ def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
             learner.apply(deltas, weights, n_contributors=len(contributors))
             ppl = learner.eval_perplexity()
             stop.update(ppl)
-        log.log_round(t)
+        log.log_round(t, starved=starved)
         log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
+        if starved:
+            streak += 1
+            if fed.starvation_patience and streak >= fed.starvation_patience:
+                stop.aborted = True
+                break
+        else:
+            streak = 0
         if stop.reached or stop.out_of_budget(t, rounds):
             break
     return t, rounds, ppl
+
+
+def _sync_faulty_round(fed, sampler, log, cohort, rounds, t, goal):
+    """Scalar twin of ``SyncStrategy._faulty_round``: chase failed slots
+    through retry re-dispatches (distinct counter-keyed ids, exponential
+    backoff), close the round over all attempts' survivors, then re-resolve
+    every row WITH the deadline for logging (bit-identical to the engine's
+    in-place ``apply_deadline`` patch). Returns (n_ok, contributors,
+    round_end)."""
+    pos = list(range(len(cohort)))
+    ids = [int(c) for c in cohort]
+    starts = [t] * len(cohort)
+    blocks = []            # per attempt: list of (plan, start, kw_nodl)
+    for att in range(fed.retry_limit + 1):
+        rows = []
+        for cid, s0 in zip(ids, starts):
+            plan = sampler.plan_scalar(cid, rounds)
+            kw, _ = sampler.resolve_scalar(plan, rounds, s0)
+            rows.append((plan, s0, kw))
+        blocks.append(rows)
+        fm = [j for j, (_, _, kw) in enumerate(rows)
+              if kw["outcome"] == "failed"]
+        if att == fed.retry_limit or not fm:
+            break
+        pos = [pos[j] for j in fm]
+        ids = [retry_stream_id(fed.seed, p,
+                               rounds * (fed.retry_limit + 1) + att + 1,
+                               _POPULATION) for p in pos]
+        starts = [rows[j][2]["end_t"] + fed.retry_backoff_s * 2.0 ** att
+                  for j in fm]
+    ok_ends = sorted(kw["end_t"] for rows in blocks
+                     for _, _, kw in rows if kw["outcome"] == "completed")
+    if len(ok_ends) >= goal:
+        round_end = ok_ends[goal - 1]
+    elif ok_ends:
+        round_end = ok_ends[-1]
+    else:
+        round_end = max(kw["end_t"] for rows in blocks for _, _, kw in rows)
+    n_ok = 0
+    contributors: List[int] = []
+    for att, rows in enumerate(blocks):
+        for plan, s0, _ in rows:
+            kw, ok = sampler.resolve_scalar(plan, rounds, s0,
+                                            deadline=round_end)
+            if att < fed.retry_limit and kw["outcome"] == "failed":
+                # a retry went out for this failure
+                kw = dict(kw, outcome="retried")
+            log.log_session(ClientSession(**kw))
+            if ok:
+                n_ok += 1
+                if len(contributors) < goal:
+                    contributors.append(plan.client_id)
+    return n_ok, contributors, round_end
 
 
 def _cancel_scalar(kw: dict, t_final: float) -> dict:
@@ -136,9 +207,12 @@ def _cancel_scalar(kw: dict, t_final: float) -> dict:
     nu = min(u, max(0.0, cap - d - c))
     frac = nd / d if d > 0 else 0.0
     out = dict(kw)
+    # a pending retry may start past the task end (backoff delay): it
+    # burned nothing, but never let end_t precede start_t
     out.update(download_s=nd, compute_s=nc, upload_s=nu,
                bytes_down=kw["bytes_down"] * frac, bytes_up=0.0,
-               end_t=min(kw["end_t"], t_final), outcome="cancelled")
+               end_t=min(kw["end_t"], max(t_final, kw["start_t"])),
+               outcome="cancelled")
     return out
 
 
@@ -149,6 +223,7 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
     if pick_id is None:
         def pick_id(slot, gen, now, version):
             return slot_stream_id(fed.seed, slot, gen, _POPULATION)
+    retry_on = sampler.has_faults and fed.retry_limit > 0
     rng = np.random.default_rng(fed.seed + 2)
     t = 0.0
     version = 0
@@ -160,11 +235,11 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
     # identity is independent of pop order in both engines.
     heap: List[tuple] = []
 
-    def dispatch(slot: int, gen: int, cid: int, now: float):
+    def dispatch(slot: int, gen: int, cid: int, now: float, att: int = 0):
         plan = sampler.plan_scalar(cid, version)
         kw, ok = sampler.resolve_scalar(plan, version, now)
         heapq.heappush(heap, (kw["end_t"], slot, gen, cid,
-                              (kw, ok, version)))
+                              (kw, ok, version, att)))
 
     for slot, c in enumerate(_select_cohort(rng, fed.concurrency,
                                             population=_POPULATION)):
@@ -173,9 +248,15 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
     while heap:
         if stop.out_of_budget(t, version):
             break
-        end, slot, gen, cid, (kw, ok, ver_sent) = heapq.heappop(heap)
+        end, slot, gen, cid, (kw, ok, ver_sent, att) = heapq.heappop(heap)
         t = max(t, end)
-        log.log_session(ClientSession(staleness=version - ver_sent, **kw))
+        # a failed pop with attempt budget left schedules a retry below
+        # (distinct id stream, exponential backoff) -> logged as "retried"
+        will_retry = retry_on and kw["outcome"] == "failed" \
+            and att < fed.retry_limit
+        log.log_session(ClientSession(
+            staleness=version - ver_sent,
+            **(dict(kw, outcome="retried") if will_retry else kw)))
         if ok:
             buffer.append((cid, ver_sent))
             if len(buffer) >= fed.aggregation_goal:
@@ -201,11 +282,16 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
                 log.log_eval(t, version, ppl, stop.smoothed or ppl)
                 if stop.reached or stop.out_of_budget(t, version):
                     break
-        nid = pick_id(slot, gen + 1, t, version)
-        dispatch(slot, gen + 1, nid, t)
+        if will_retry:
+            nid = retry_stream_id(fed.seed, slot, gen + 1, _POPULATION)
+            dispatch(slot, gen + 1, nid,
+                     t + fed.retry_backoff_s * 2.0 ** att, att + 1)
+        else:
+            nid = pick_id(slot, gen + 1, t, version)
+            dispatch(slot, gen + 1, nid, t)
     # task end: sessions still in flight are logged as cancelled,
     # truncated at the final clock (keeps energy accounting complete)
-    for end, slot, gen, cid, (kw, ok, ver_sent) in sorted(
+    for end, slot, gen, cid, (kw, ok, ver_sent, att) in sorted(
             heap, key=lambda r: r[1]):
         log.log_session(ClientSession(staleness=version - ver_sent,
                                       **_cancel_scalar(kw, t)))

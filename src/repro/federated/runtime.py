@@ -63,7 +63,8 @@ from repro.core.streaming import StreamedLog
 from repro.core.telemetry import (OUTCOME_CODE, BatchAccumulator,
                                   LaneAccumulator, SessionBatch, TaskLog)
 from repro.federated.events import (LaneSampler, SessionSampler,
-                                    probe_uniforms, slot_stream_ids)
+                                    probe_uniforms, retry_stream_ids,
+                                    slot_stream_ids)
 
 _SERVER_AGG_S = 2.0     # server-side aggregation latency per update
 _POPULATION = 5_000_000  # eligible-device pool the coordinator selects from
@@ -83,6 +84,9 @@ class TaskResult:
     duration_h: float
     final_perplexity: float
     smoothed_perplexity: float
+    # True iff the sync loop gave up after `starvation_patience`
+    # consecutive under-quorum (starved) rounds
+    aborted: bool = False
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -93,6 +97,7 @@ class TaskResult:
             "carbon_total_kg": self.carbon.total_kg,
             **{k: v for k, v in self.carbon.as_dict().items()},
             "sessions": float(self.log.n_sessions),
+            "aborted": float(self.aborted),
         }
 
 
@@ -119,6 +124,7 @@ class _Stopper:
         self.smoothed: Optional[float] = None
         self.hits = 0
         self.reached = False
+        self.aborted = False   # set by the sync starvation-patience abort
 
     def update(self, ppl: float) -> None:
         a = self.run.ema_alpha
@@ -239,7 +245,8 @@ class Strategy:
         t, rounds, ppl = self._loop(model_cfg, fed, learner, sampler, log,
                                     stop, on_round)
         return TaskResult(log, est.estimate(log), stop.reached, rounds,
-                          t / 3600.0, ppl, stop.smoothed or ppl)
+                          t / 3600.0, ppl, stop.smoothed or ppl,
+                          aborted=stop.aborted)
 
     # subclasses: run the event loop, return (t_s, rounds, perplexity)
     def _loop(self, model_cfg: ModelConfig, fed: FederatedConfig, learner,
@@ -280,11 +287,20 @@ class SyncStrategy(Strategy):
         rounds = 0
         ppl = float(model_cfg.vocab_size)
         goal = min(fed.aggregation_goal, fed.concurrency)
+        # graceful degradation: a round that closes with fewer than
+        # `quorum` completions is *starved* — it still charges its cohort,
+        # but the server skips the update; `starvation_patience`
+        # consecutive starved rounds abort the task outright
+        quorum = max(1, int(np.ceil(fed.min_report_fraction * goal)))
+        streak = 0
 
         while True:
             cohort = _select_cohort(rng, fed.concurrency,
                                     population=_POPULATION)
-            if len(cohort) <= _DISPATCH_CHUNK:
+            if sampler.has_faults:
+                n_ok, contributors, round_end = self._faulty_round(
+                    fed, sampler, log, cohort, rounds, t, goal)
+            elif len(cohort) <= _DISPATCH_CHUNK:
                 pb = sampler.plan_batch(cohort, rounds)
                 # pass 1: tentative outcomes, find when the goal-th result
                 # arrives (a partition on end_t, not a full sort)
@@ -292,22 +308,22 @@ class SyncStrategy(Strategy):
                 ends = tb.end_t[ok]
                 if len(ends) >= goal:
                     round_end = float(np.partition(ends, goal - 1)[goal - 1])
-                    failed = False
                 elif len(ends):
                     # dropouts ate the over-selection slack: the round
                     # closes at the last survivor (production would hit the
                     # round deadline) and the server updates with what it
                     # received
                     round_end = float(ends.max())
-                    failed = False
                 else:
                     round_end = float(tb.end_t.max()) if len(tb) else t
-                    failed = True
                 # pass 2: sessions against the round deadline (cancel
                 # stragglers)
                 fb, ok2 = sampler.resolve_batch(pb, rounds, t,
                                                 deadline=round_end)
                 log.log_batch(fb)
+                n_ok = int(np.count_nonzero(ok2))
+                contributors: List[int] = \
+                    cohort[np.nonzero(ok2)[0][:goal]].tolist()
             else:
                 # population-scale cohort: bounded-size chunks. Pass 1
                 # keeps only the surviving end times (plans are re-derived
@@ -327,13 +343,10 @@ class SyncStrategy(Strategy):
                 ends = np.concatenate(ends_parts)
                 if len(ends) >= goal:
                     round_end = float(np.partition(ends, goal - 1)[goal - 1])
-                    failed = False
                 elif len(ends):
                     round_end = float(ends.max())
-                    failed = False
                 else:
                     round_end = max_end if n_rows else t
-                    failed = True
                 ok2_parts: List[np.ndarray] = []
                 for lo in range(0, len(cohort), _DISPATCH_CHUNK):
                     ch = cohort[lo:lo + _DISPATCH_CHUNK]
@@ -343,20 +356,83 @@ class SyncStrategy(Strategy):
                     log.log_batch(fb)
                     ok2_parts.append(ok2c)
                 ok2 = np.concatenate(ok2_parts)
-            contributors: List[int] = \
-                cohort[np.nonzero(ok2)[0][:goal]].tolist()
+                n_ok = int(np.count_nonzero(ok2))
+                contributors = cohort[np.nonzero(ok2)[0][:goal]].tolist()
+            starved = n_ok < quorum
             t = round_end + _SERVER_AGG_S
             rounds += 1
-            if not failed and contributors:
+            if not starved and contributors:
                 ppl = _sync_server_update(learner, contributors)
                 stop.update(ppl)
-            log.log_round(t)
+            log.log_round(t, starved=starved)
             log.log_eval(t, rounds, ppl, stop.smoothed or ppl)
             self._emit(on_round, log.n_sessions, rounds, t, ppl,
                        stop.smoothed or ppl)
+            if starved:
+                streak += 1
+                if fed.starvation_patience \
+                        and streak >= fed.starvation_patience:
+                    stop.aborted = True
+                    break
+            else:
+                streak = 0
             if stop.reached or stop.out_of_budget(t, rounds):
                 break
         return t, rounds, ppl
+
+    @staticmethod
+    def _faulty_round(fed, sampler, log, cohort, rounds, t, goal):
+        """One sync round under a live fault model: resolve the cohort
+        with no deadline, chase failed slots through up to ``retry_limit``
+        re-dispatches (exponential backoff, distinct counter-keyed retry
+        ids — every attempt is charged), close the round over ALL
+        attempts' survivors, then patch the deadline in and log the
+        blocks attempt-major. Cohorts resolve one-shot (no
+        ``_DISPATCH_CHUNK`` pass — retry waves shrink geometrically, the
+        cohort block dominates). Returns (n_ok, contributors,
+        round_end)."""
+        F = OUTCOME_CODE["failed"]
+        pos = np.arange(len(cohort), dtype=np.int64)
+        ids = cohort
+        starts = t
+        blocks = []
+        for att in range(fed.retry_limit + 1):
+            pb = sampler.plan_batch(ids, rounds)
+            fb, ok = sampler.resolve_batch(pb, rounds, starts)
+            blocks.append((pb, fb, ok))
+            fm = np.flatnonzero(fb.outcome == F)
+            if att == fed.retry_limit or not len(fm):
+                break
+            # failed slots re-dispatch: a fresh client id off the retry
+            # stream (keyed by cohort position + a round-scoped attempt
+            # counter) after an exponential-backoff delay
+            pos = pos[fm]
+            ids = retry_stream_ids(
+                fed.seed, pos,
+                np.full(len(pos), rounds * (fed.retry_limit + 1) + att + 1,
+                        np.int64),
+                _POPULATION)
+            starts = fb.end_t[fm] + fed.retry_backoff_s * 2.0 ** att
+        ok_ends = np.concatenate([fb.end_t[ok] for _, fb, ok in blocks])
+        if len(ok_ends) >= goal:
+            round_end = float(np.partition(ok_ends, goal - 1)[goal - 1])
+        elif len(ok_ends):
+            round_end = float(ok_ends.max())
+        else:
+            round_end = float(max(fb.end_t.max() for _, fb, _ in blocks))
+        n_ok = 0
+        contributors: List[int] = []
+        for att, (pb, fb, ok) in enumerate(blocks):
+            sampler.apply_deadline(pb, fb, ok, round_end)
+            if att < fed.retry_limit:
+                # a retry went out for every one of these failures
+                fb.outcome[fb.outcome == F] = OUTCOME_CODE["retried"]
+            log.log_batch(fb)
+            n_ok += int(np.count_nonzero(ok))
+            if len(contributors) < goal:
+                sel = np.flatnonzero(ok)[:goal - len(contributors)]
+                contributors.extend(fb.client_id[sel].tolist())
+        return n_ok, contributors, round_end
 
     def lane_loop(self, pack: "_LanePack") -> None:
         """Lockstep lane-batched twin of ``_loop``: one plan/resolve pass
@@ -368,11 +444,26 @@ class SyncStrategy(Strategy):
         ``round_idx`` stays a scalar in the sampler keys. Seed-for-seed
         identical to running each lane alone — cohort selection consumes
         each lane's own rng exactly as the serial loop does, and lanes
-        share no other RNG state."""
+        share no other RNG state.
+
+        Fault lanes ride the same lockstep: each retry wave is one batched
+        plan/resolve over every lane's surviving failures (attempt-major,
+        exactly the serial ``_faulty_round`` per lane), and quorum /
+        starvation bookkeeping runs per lane on scalars."""
         lanes = pack.lanes
         rngs = [np.random.default_rng(f.seed + 1) for f in pack.feds]
         concs = [f.concurrency for f in pack.feds]
         goals = [min(f.aggregation_goal, f.concurrency) for f in pack.feds]
+        L = pack.n_lanes
+        quorum = [max(1, int(np.ceil(f.min_report_fraction * goals[i])))
+                  for i, f in enumerate(pack.feds)]
+        retry_lim = np.asarray([f.retry_limit if s.has_faults else 0
+                                for f, s in zip(pack.feds, lanes.samplers)],
+                               np.int64)
+        retry_bo = np.asarray([f.retry_backoff_s for f in pack.feds])
+        any_faults = any(s.has_faults for s in lanes.samplers)
+        streak = np.zeros(L, np.int64)
+        F, R = OUTCOME_CODE["failed"], OUTCOME_CODE["retried"]
         k = 0                        # == every active lane's `rounds`
         while pack.active.any():
             act = np.flatnonzero(pack.active)
@@ -384,10 +475,82 @@ class SyncStrategy(Strategy):
             start = pack.t[lane_row]
             ids = np.concatenate(cohorts)
             total = len(lane_row)
-            chunked = total > _DISPATCH_CHUNK
+            # fault lanes resolve one-shot, like the serial fault path
+            chunked = total > _DISPATCH_CHUNK and not any_faults
             if not chunked:
                 pb, fb, ok = lanes.plan_resolve(lane_row, ids, k, start)
-                end_t = fb["end_t"]
+                blocks = [(lane_row, pb, fb, ok)]
+                if any_faults:
+                    # lockstep retry waves: wave a re-dispatches every
+                    # lane's attempt-(a-1) failures in ONE batched resolve
+                    prev_lane, prev_fb = lane_row, fb
+                    prev_pos = np.concatenate(
+                        [np.arange(concs[i], dtype=np.int64) for i in act])
+                    att = 0
+                    while True:
+                        sel = np.flatnonzero((prev_fb["outcome"] == F)
+                                             & (retry_lim[prev_lane] > att))
+                        att += 1
+                        if not len(sel):
+                            break
+                        lane_r = prev_lane[sel]
+                        pos_r = prev_pos[sel]
+                        ids_r = lanes.retry_stream_ids(
+                            lane_r, pos_r,
+                            k * (retry_lim[lane_r] + 1) + att, _POPULATION)
+                        starts_r = prev_fb["end_t"][sel] \
+                            + retry_bo[lane_r] * 2.0 ** (att - 1)
+                        pb_r, fb_r, ok_r = lanes.plan_resolve(
+                            lane_r, ids_r, k, starts_r)
+                        blocks.append((lane_r, pb_r, fb_r, ok_r))
+                        prev_lane, prev_fb, prev_pos = lane_r, fb_r, pos_r
+                # per-block per-lane segment bounds (every block stays
+                # lane-sorted: attempt 0 by construction, retry waves
+                # because flatnonzero preserves the sorted row order)
+                cuts = [np.append(np.searchsorted(lane_b, act), len(lane_b))
+                        for lane_b, _, _, _ in blocks]
+                round_end = np.empty(len(act))
+                for j, i in enumerate(act):
+                    oe = [fb_b["end_t"][cb[j]:cb[j + 1]]
+                          [ok_b[cb[j]:cb[j + 1]]]
+                          for (_, _, fb_b, ok_b), cb in zip(blocks, cuts)]
+                    oe = oe[0] if len(oe) == 1 else np.concatenate(oe)
+                    g = goals[i]
+                    if len(oe) >= g:
+                        round_end[j] = np.partition(oe, g - 1)[g - 1]
+                    elif len(oe):
+                        round_end[j] = oe.max()
+                    else:
+                        seg = np.concatenate(
+                            [fb_b["end_t"][cb[j]:cb[j + 1]]
+                             for (_, _, fb_b, _), cb in zip(blocks, cuts)])
+                        round_end[j] = seg.max() if len(seg) else pack.t[i]
+                # pass 2 of the serial loop collapses to a masked patch of
+                # the stragglers (cancel-at-deadline); failures whose
+                # retry went out relabel as "retried"; log attempt-major
+                deadline_lane = np.empty(L)
+                deadline_lane[act] = round_end
+                for att_i, (lane_b, pb_b, fb_b, ok_b) in enumerate(blocks):
+                    lanes.apply_deadline(pb_b, fb_b, ok_b,
+                                         deadline_lane[lane_b])
+                    if any_faults:
+                        m = (fb_b["outcome"] == F) \
+                            & (retry_lim[lane_b] > att_i)
+                        fb_b["outcome"][m] = R
+                    pack.acc.append(lane=lane_b, **fb_b)
+                n_ok_lane = np.zeros(L, np.int64)
+                rows_lane = np.zeros(L, np.int64)
+                contrib: Dict[int, List[int]] = {int(i): [] for i in act}
+                for (lane_b, _, fb_b, ok_b), cb in zip(blocks, cuts):
+                    for j, i in enumerate(act):
+                        sl = slice(int(cb[j]), int(cb[j + 1]))
+                        okb = ok_b[sl]
+                        n_ok_lane[i] += int(np.count_nonzero(okb))
+                        rows_lane[i] += sl.stop - sl.start
+                        got = contrib[int(i)]
+                        if len(got) < goals[i]:
+                            got.extend(fb_b["client_id"][sl][okb]
+                                       [:goals[i] - len(got)].tolist())
             else:
                 # population-scale pack: resolve in bounded chunks keeping
                 # only end_t/ok for the round close; pass 2 re-plans
@@ -401,28 +564,18 @@ class SyncStrategy(Strategy):
                     ok_parts.append(ok_c)
                 end_t = np.concatenate(et_parts)
                 ok = np.concatenate(ok_parts)
-            round_end = np.empty(len(act))
-            failed = np.zeros(len(act), bool)
-            for j, i in enumerate(act):
-                sl = slice(offs[j], offs[j + 1])
-                ends = end_t[sl][ok[sl]]
-                g = goals[i]
-                if len(ends) >= g:
-                    round_end[j] = np.partition(ends, g - 1)[g - 1]
-                elif len(ends):
-                    round_end[j] = ends.max()
-                else:
-                    seg = end_t[sl]
-                    round_end[j] = seg.max() if len(seg) else pack.t[i]
-                    failed[j] = True
-            # pass 2 of the serial loop collapses to a masked patch of the
-            # stragglers (cancel-at-deadline); everything else is reused
-            if not chunked:
-                ok2 = ok
-                lanes.apply_deadline(pb, fb, ok2,
-                                     np.repeat(round_end, sizes))
-                pack.acc.append(lane=lane_row, **fb)
-            else:
+                round_end = np.empty(len(act))
+                for j, i in enumerate(act):
+                    sl = slice(offs[j], offs[j + 1])
+                    ends = end_t[sl][ok[sl]]
+                    g = goals[i]
+                    if len(ends) >= g:
+                        round_end[j] = np.partition(ends, g - 1)[g - 1]
+                    elif len(ends):
+                        round_end[j] = ends.max()
+                    else:
+                        seg = end_t[sl]
+                        round_end[j] = seg.max() if len(seg) else pack.t[i]
                 deadline_rows = np.repeat(round_end, sizes)
                 ok2_parts: List[np.ndarray] = []
                 for lo in range(0, total, _DISPATCH_CHUNK):
@@ -434,20 +587,37 @@ class SyncStrategy(Strategy):
                     pack.acc.append(lane=lane_row[sc], **fb_c)
                     ok2_parts.append(ok2_c)
                 ok2 = np.concatenate(ok2_parts)
+                n_ok_lane = np.zeros(L, np.int64)
+                rows_lane = np.zeros(L, np.int64)
+                contrib = {int(i): [] for i in act}
+                for j, i in enumerate(act):
+                    sl = slice(offs[j], offs[j + 1])
+                    n_ok_lane[i] = int(np.count_nonzero(ok2[sl]))
+                    rows_lane[i] = int(sizes[j])
+                    contrib[int(i)] = cohorts[j][
+                        np.flatnonzero(ok2[sl])[:goals[i]]].tolist()
             k += 1
             for j, i in enumerate(act):
-                sl = slice(offs[j], offs[j + 1])
-                contributors: List[int] = \
-                    cohorts[j][np.flatnonzero(ok2[sl])[:goals[i]]].tolist()
+                contributors = contrib[int(i)]
+                starved = bool(n_ok_lane[i] < quorum[i])
                 pack.t[i] = round_end[j] + _SERVER_AGG_S
                 pack.rounds[i] = k
                 stop = pack.stoppers[i]
-                if not failed[j] and contributors:
+                if not starved and contributors:
                     pack.ppl[i] = _sync_server_update(pack.learners[i],
                                                       contributors)
                     stop.update(pack.ppl[i])
-                pack.n_logged[i] += int(sizes[j])
-                pack.close_round(i, k, self.mode)
+                pack.n_logged[i] += int(rows_lane[i])
+                pack.close_round(i, k, self.mode, starved=starved)
+                if starved:
+                    streak[i] += 1
+                    if pack.feds[i].starvation_patience \
+                            and streak[i] >= pack.feds[i].starvation_patience:
+                        stop.aborted = True
+                        pack.active[i] = False
+                        continue
+                else:
+                    streak[i] = 0
                 if stop.reached or stop.out_of_budget(pack.t[i], k):
                     pack.active[i] = False
 
@@ -460,9 +630,12 @@ _DEFERRED = ("cid", "ver", "start", "d", "c", "u", "bd", "bu",
 
 
 def _async_rows(slots: np.ndarray, gens: np.ndarray, version: int,
-                batch: SessionBatch, ok: np.ndarray) -> Dict[str, np.ndarray]:
+                batch: SessionBatch, ok: np.ndarray,
+                att: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
     """One column block of dispatched async sessions (slot + generation
-    identify the session; everything else comes from ``resolve_batch``)."""
+    identify the session; everything else comes from ``resolve_batch``).
+    ``att`` is the row's consecutive-failure retry counter (0 = a fresh
+    dispatch, not a retry)."""
     n = len(ok)
     return dict(slot=np.asarray(slots, np.int64),
                 gen=np.asarray(gens, np.int64),
@@ -472,12 +645,15 @@ def _async_rows(slots: np.ndarray, gens: np.ndarray, version: int,
                 d=batch.download_s, c=batch.compute_s, u=batch.upload_s,
                 bd=batch.bytes_down, bu=batch.bytes_up,
                 dev=batch.device_idx, ctry=batch.country_idx,
-                out=batch.outcome, ok=ok)
+                out=batch.outcome, ok=ok,
+                att=(np.zeros(n, np.int64) if att is None
+                     else np.asarray(att, np.int64)))
 
 
 def _async_rows_cols(slots: np.ndarray, gens: np.ndarray, version: int,
-                     cols: Dict[str, np.ndarray],
-                     ok: np.ndarray) -> Dict[str, np.ndarray]:
+                     cols: Dict[str, np.ndarray], ok: np.ndarray,
+                     att: Optional[np.ndarray] = None
+                     ) -> Dict[str, np.ndarray]:
     """``_async_rows`` over a LaneSampler column dict instead of a
     SessionBatch (the lane-batched async loop's dispatch format)."""
     n = len(ok)
@@ -490,7 +666,9 @@ def _async_rows_cols(slots: np.ndarray, gens: np.ndarray, version: int,
                 u=cols["upload_s"],
                 bd=cols["bytes_down"], bu=cols["bytes_up"],
                 dev=cols["device_idx"], ctry=cols["country_idx"],
-                out=cols["outcome"], ok=ok)
+                out=cols["outcome"], ok=ok,
+                att=(np.zeros(n, np.int64) if att is None
+                     else np.asarray(att, np.int64)))
 
 
 def _truncate_cancelled(flight: Dict[str, np.ndarray], idx: np.ndarray,
@@ -506,10 +684,13 @@ def _truncate_cancelled(flight: Dict[str, np.ndarray], idx: np.ndarray,
     nc = np.minimum(c, np.maximum(0.0, cap - d))
     nu = np.minimum(u, np.maximum(0.0, cap - d - c))
     frac = np.divide(nd, d, out=np.zeros(len(idx)), where=d > 0)
+    # a pending retry may be scheduled past the task end (backoff delay):
+    # it burned nothing, but never let end_t precede start_t
     return dict(download_s=nd, compute_s=nc, upload_s=nu,
                 bytes_down=flight["bd"][idx] * frac,
                 bytes_up=np.zeros(len(idx)),
-                end_t=np.minimum(flight["end"][idx], t_final))
+                end_t=np.minimum(flight["end"][idx],
+                                 np.maximum(t_final, flight["start"][idx])))
 
 
 @register_strategy("async")
@@ -570,6 +751,11 @@ class AsyncStrategy(Strategy):
         max_t = stop.run.max_hours * 3600.0
         acc = self._make_sink(log, sampler.device_names,
                               sampler.country_names)
+        # recovery policy: failed rows chain a RETRY successor (distinct
+        # id stream, exponential backoff, attempt counter up) instead of
+        # a fresh replacement; `att` rides the flight/expansion columns
+        retry_on = sampler.has_faults and fed.retry_limit > 0
+        F, R = OUTCOME_CODE["failed"], OUTCOME_CODE["retried"]
 
         # initial cohort: batched plan/resolve with jittered starts, in
         # bounded chunks at population scale (row-pure, so chunking is
@@ -609,6 +795,8 @@ class AsyncStrategy(Strategy):
             # then settles the boundary.
             slot_all, gen_all = flight["slot"], flight["gen"]
             end_all, ok_all = flight["end"], flight["ok"]
+            att_all = flight["att"]
+            out_run = flight["out"] if retry_on else None
             parts: Dict[str, List[np.ndarray]] = \
                 {f: [flight[f]] for f in _DEFERRED}
             succ = np.full(conc, -1, np.int64)   # row -> successor row
@@ -633,8 +821,19 @@ class AsyncStrategy(Strategy):
                 slots_n = slot_all[need]
                 gens_n = gen_all[need] + 1
                 starts_n = np.maximum(t0, end_all[need])
+                if retry_on:
+                    prev_att = att_all[need]
+                    rf = (out_run[need] == F) & (prev_att < fed.retry_limit)
+                    att_n = np.where(rf, prev_att + 1, 0)
+                    starts_n = starts_n + np.where(
+                        rf, fed.retry_backoff_s * 2.0 ** prev_att, 0.0)
+                else:
+                    att_n = np.zeros(len(need), np.int64)
                 ids_n = self._replacement_ids(sampler, fed, slots_n, gens_n,
                                               starts_n, version)
+                if retry_on and rf.any():
+                    ids_n[rf] = retry_stream_ids(fed.seed, slots_n[rf],
+                                                 gens_n[rf], _POPULATION)
                 bn, okn = sampler.resolve_batch(
                     sampler.plan_batch(ids_n, version), version, starts_n)
                 succ[need] = n_rows + np.arange(len(need))
@@ -645,9 +844,12 @@ class AsyncStrategy(Strategy):
                 gen_all = np.concatenate([gen_all, gens_n])
                 end_all = np.concatenate([end_all, bn.end_t])
                 ok_all = np.concatenate([ok_all, okn])
-                new = _async_rows(slots_n, gens_n, version, bn, okn)
+                att_all = np.concatenate([att_all, att_n])
+                new = _async_rows(slots_n, gens_n, version, bn, okn, att_n)
                 for f in _DEFERRED:
                     parts[f].append(new[f])
+                if retry_on:
+                    out_run = np.concatenate([out_run, new["out"]])
             # ---- exact close: one lexsort settles the boundary ----------
             order = np.lexsort((gen_all, slot_all, end_all))
             ends_sorted = end_all[order]
@@ -663,11 +865,19 @@ class AsyncStrategy(Strategy):
             # every pop precedes the bound, so its chain was expanded
             assert succ[pop_idx].min() >= 0
             A = {"slot": slot_all, "gen": gen_all,
-                 "end": end_all, "ok": ok_all,
+                 "end": end_all, "ok": ok_all, "att": att_all,
                  **{f: np.concatenate(p) if len(p) > 1 else p[0]
                     for f, p in parts.items()}}
             # ---- log pops, advance per-slot chains ----------------------
             okm = A["ok"][pop_idx]
+            out_p = A["out"][pop_idx]
+            if retry_on:
+                # label at LOG time only (parts blocks alias the flight
+                # arrays): a failed pop with attempt budget left had a
+                # retry successor scheduled -> "retried"
+                out_p = np.where((out_p == F)
+                                 & (A["att"][pop_idx] < fed.retry_limit),
+                                 R, out_p)
             acc.append(client_id=A["cid"][pop_idx],
                        round_idx=A["ver"][pop_idx],
                        device_idx=A["dev"][pop_idx],
@@ -679,7 +889,7 @@ class AsyncStrategy(Strategy):
                        bytes_up=A["bu"][pop_idx],
                        start_t=A["start"][pop_idx],
                        end_t=A["end"][pop_idx],
-                       outcome=A["out"][pop_idx],
+                       outcome=out_p,
                        staleness=version - A["ver"][pop_idx])
             # per-slot chain tip among the pops -> its successor goes
             # in-flight (fancy-index write is made unique by the tip mask)
@@ -761,6 +971,13 @@ class AsyncStrategy(Strategy):
         offsets = np.concatenate([[0], np.cumsum(concs)])
         max_ts = [r.max_hours * 3600.0 for r in pack.runs]
         max_rounds = [r.max_rounds for r in pack.runs]
+        # per-lane recovery policy (0 disables; see serial `_loop`)
+        retry_lim = np.asarray(
+            [f.retry_limit if s.has_faults else 0
+             for f, s in zip(feds, lanes.samplers)], np.int64)
+        retry_bo = np.asarray([f.retry_backoff_s for f in feds])
+        retry_on = bool((retry_lim > 0).any())
+        F, R = OUTCOME_CODE["failed"], OUTCOME_CODE["retried"]
         # ---- initial cohorts: one batched resolve across all lanes ------
         rngs = [np.random.default_rng(f.seed + 2) for f in feds]
         cohorts, starts0 = [], []
@@ -834,6 +1051,8 @@ class AsyncStrategy(Strategy):
             gen_all = flight["gen"][rows_idx]
             end_all = flight["end"][rows_idx]
             ok_all = flight["ok"][rows_idx]
+            att_all = flight["att"][rows_idx]
+            out_run = flight["out"][rows_idx] if retry_on else None
             parts: Dict[str, List[np.ndarray]] = \
                 {f: [flight[f][rows_idx]] for f in _DEFERRED}
             succ = np.full(len(rows_idx), -1, np.int64)
@@ -890,8 +1109,20 @@ class AsyncStrategy(Strategy):
                 slots_n = slot_all[need]
                 gens_n = gen_all[need] + 1
                 starts_n = np.maximum(t0[lanes_n], end_all[need])
+                if retry_on:
+                    prev_att = att_all[need]
+                    rf = (out_run[need] == F) \
+                        & (prev_att < retry_lim[lanes_n])
+                    att_n = np.where(rf, prev_att + 1, 0)
+                    starts_n = starts_n + np.where(
+                        rf, retry_bo[lanes_n] * 2.0 ** prev_att, 0.0)
+                else:
+                    att_n = np.zeros(len(need), np.int64)
                 ids_n = self._lane_replacement_ids(pack, lanes_n, slots_n,
                                                    gens_n, starts_n, k)
+                if retry_on and rf.any():
+                    ids_n[rf] = lanes.retry_stream_ids(
+                        lanes_n[rf], slots_n[rf], gens_n[rf], _POPULATION)
                 _, bn, okn = lanes.plan_resolve(lanes_n, ids_n, k, starts_n)
                 end_n = bn["end_t"]
                 succ[need] = n_rows + np.arange(len(need))
@@ -906,9 +1137,12 @@ class AsyncStrategy(Strategy):
                 gen_all = np.concatenate([gen_all, gens_n])
                 end_all = np.concatenate([end_all, end_n])
                 ok_all = np.concatenate([ok_all, okn])
-                new = _async_rows_cols(slots_n, gens_n, k, bn, okn)
+                att_all = np.concatenate([att_all, att_n])
+                new = _async_rows_cols(slots_n, gens_n, k, bn, okn, att_n)
                 for f in _DEFERRED:
                     parts[f].append(new[f])
+                if retry_on:
+                    out_run = np.concatenate([out_run, new["out"]])
                 if below:
                     n_ok_lane = n_ok_lane + np.bincount(lanes_n[okn],
                                                         minlength=L)
@@ -917,7 +1151,7 @@ class AsyncStrategy(Strategy):
                     np.minimum.at(over_min, lanes_n[ov], end_n[ov])
             # ---- per-lane exact close (unchanged serial logic on slices)
             A = {"slot": slot_all, "gen": gen_all,
-                 "end": end_all, "ok": ok_all,
+                 "end": end_all, "ok": ok_all, "att": att_all,
                  **{f: np.concatenate(p) if len(p) > 1 else p[0]
                     for f, p in parts.items()}}
             # ONE lexsort settles every lane's boundary: keying by (lane,
@@ -981,6 +1215,13 @@ class AsyncStrategy(Strategy):
             # (within-lane order is pop order, which is all that matters);
             # cancelled flushes follow so a closing lane's store order
             # stays pops-then-cancelled like the serial loop's
+            out_p = A["out"][pops]
+            if retry_on:
+                # relabel on the fancy-index copy only (see serial `_loop`)
+                out_p = np.where((out_p == F)
+                                 & (A["att"][pops]
+                                    < retry_lim[pop_lane_rep]),
+                                 R, out_p)
             pack.acc.append(lane=pop_lane_rep,
                             client_id=cid_p,
                             round_idx=ver_p,
@@ -993,7 +1234,7 @@ class AsyncStrategy(Strategy):
                             bytes_up=A["bu"][pops],
                             start_t=A["start"][pops],
                             end_t=end_p,
-                            outcome=A["out"][pops],
+                            outcome=out_p,
                             staleness=k - ver_p)
             redis: List[Tuple[int, int, int]] = []   # (lane, slot, gen)
             flush_q: List[Tuple[int, float, int]] = []
@@ -1216,12 +1457,13 @@ class _LanePack:
         self.active = np.ones(self.n_lanes, bool)
         self.n_logged = np.zeros(self.n_lanes, np.int64)
 
-    def close_round(self, i: int, round_idx: int, mode: str) -> None:
+    def close_round(self, i: int, round_idx: int, mode: str,
+                    starved: bool = False) -> None:
         """Per-lane post-update bookkeeping (log + streamed RoundEvent),
         identical to the serial loops' tail."""
         stop = self.stoppers[i]
         sm = stop.smoothed or self.ppl[i]
-        self.logs[i].log_round(self.t[i])
+        self.logs[i].log_round(self.t[i], starved=starved)
         self.logs[i].log_eval(self.t[i], round_idx, self.ppl[i], sm)
         cb = self.tasks[i].on_round
         if cb is not None:
@@ -1279,7 +1521,8 @@ class LaneRunner:
             out.append(TaskResult(log, carbons[i], stop.reached,
                                   int(pack.rounds[i]),
                                   float(pack.t[i]) / 3600.0, ppl,
-                                  stop.smoothed or ppl))
+                                  stop.smoothed or ppl,
+                                  aborted=stop.aborted))
         return out
 
 

@@ -1,0 +1,378 @@
+"""Fault injection & recovery (PR 7): correlated failure bursts,
+retry/backoff re-dispatch, quorum starvation and the carbon price of
+wasted work.
+
+The contract under test:
+
+* an all-zero ``FaultModel`` is **bit-for-bit** today's fault-free engine
+  (static AND diurnal intensity schedules — the goldens in
+  ``test_columnar.py`` pin the absolute numbers, here we pin equality);
+* with faults enabled, the columnar engines, lane packs and the scalar
+  oracle agree seed for seed (summaries/participation exact between the
+  columnar paths; oracle durations to the usual libm-ulp tolerance);
+* ``contributed + wasted`` carbon sums exactly to total CO2e in streaming
+  and materialized telemetry alike — including cancelled in-flight
+  cohorts;
+* retry/backoff, quorum starvation and task abort behave as configured,
+  and every construction-time knob validates with a ``ValueError``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (Environment, Experiment, ExperimentSpec, ModelRef,
+                       sweep)
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.carbon import UTC_OFFSET_H
+from repro.core.faults import FaultModel, wave_hazard_schedule
+from repro.core.streaming import StreamedLog
+from repro.core.telemetry import OUTCOMES
+from repro.federated.events import SessionSampler
+from repro.federated.reference import run_scalar
+from repro.federated.runtime import get_strategy
+from repro.federated.surrogate import SurrogateLearner
+
+CFG = get_config("paper-charlm")
+
+_COLS = ("client_id", "round_idx", "device_idx", "country_idx",
+         "download_s", "compute_s", "upload_s", "bytes_down", "bytes_up",
+         "start_t", "end_t", "outcome", "staleness")
+
+_COUNTRIES = ("US", "FR", "BR", "IN", "SE", "NO")
+
+_BURSTY = FaultModel(hazard={"US": 0.12, "FR": 0.08, "WORLD": 0.06},
+                     burst_rate_per_day=6.0, burst_duration_s=2400.0,
+                     burst_fail_prob=0.6, seed=3)
+_DIURNAL_HAZARD = FaultModel(
+    hazard_schedule=wave_hazard_schedule(_COUNTRIES, base=0.10),
+    hazard_phase_h={c: UTC_OFFSET_H.get(c, 0.0) for c in _COUNTRIES},
+    burst_rate_per_day=4.0, burst_fail_prob=0.5, seed=7)
+
+_FAULTS = (_BURSTY, _DIURNAL_HAZARD)
+
+_MODES = ("sync", "async", "carbon-aware")
+
+
+def _spec(mode: str, conc: int, goal_frac: float, seed: int,
+          max_rounds: int, fault: FaultModel = _BURSTY,
+          env_kw: dict = None, telemetry: str = "full",
+          **fed_kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(
+            mode=mode, concurrency=conc,
+            aggregation_goal=max(1, int(conc * goal_frac)),
+            seed=seed, dropout_rate=0.05, **fed_kw),
+        run=RunConfig(target_perplexity=175.0, max_rounds=max_rounds,
+                      telemetry=telemetry, telemetry_sample=64),
+        environment=Environment(fault=fault, **(env_kw or {})),
+        learner="surrogate")
+
+
+def _assert_same(res_a, res_b, cols: bool = True) -> None:
+    sa, sb = res_a.summary(), res_b.summary()
+    assert sa == sb, {k: (sa[k], sb[k]) for k in sa if sa[k] != sb[k]}
+    assert res_a.log.participation() == res_b.log.participation()
+    assert res_a.log.starved_rounds == res_b.log.starved_rounds
+    if cols:
+        ca, cb = res_a.log.columns(), res_b.log.columns()
+        for f in _COLS:
+            assert np.array_equal(getattr(ca, f), getattr(cb, f)), f
+
+
+# ------------------------------------------------------- zero-rate identity
+@pytest.mark.parametrize("mode", list(_MODES))
+@pytest.mark.parametrize("diurnal", [False, True])
+def test_zero_rate_fault_model_is_bit_identical(mode, diurnal):
+    """An all-zero FaultModel (even with retry/quorum knobs armed) takes
+    the fault-free fast path untouched: summaries AND session columns are
+    bit-for-bit the no-fault run, on static and diurnal schedules."""
+    env_kw = {"intensity_schedule": Environment.preset("diurnal")
+              .intensity_schedule} if diurnal else {}
+    base = _spec(mode, 24, 0.8, 11, 8, fault=FaultModel(), env_kw=env_kw,
+                 retry_limit=3, retry_backoff_s=60.0,
+                 min_report_fraction=0.0, starvation_patience=0)
+    plain = base.replace(environment=Environment(**(env_kw or {})))
+    ra, rb = Experiment(base).run(), Experiment(plain).run()
+    assert not FaultModel().enabled
+    _assert_same(ra, rb)
+    assert ra.log.participation().get("failed", 0) == 0
+    assert ra.log.participation().get("retried", 0) == 0
+
+
+# -------------------------------------------------- serial == lane == oracle
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_faulty_lane_pack_matches_serial_property(seed0):
+    """Randomized faulty packs (all three modes, both fault models, mixed
+    retry/quorum knobs, diurnal hazards) are bit-for-bit equal to per-spec
+    serial runs — summary scalars AND session columns."""
+    rng = np.random.default_rng(seed0)
+    specs = []
+    for j in range(int(rng.integers(3, 6))):
+        specs.append(_spec(
+            mode=_MODES[int(rng.integers(len(_MODES)))],
+            conc=int(rng.integers(10, 40)),
+            goal_frac=float(rng.uniform(0.4, 1.0)),
+            seed=int(rng.integers(0, 2 ** 31)),
+            max_rounds=int(rng.integers(4, 14)),
+            fault=_FAULTS[int(rng.integers(len(_FAULTS)))],
+            retry_limit=int(rng.integers(0, 4)),
+            retry_backoff_s=float(rng.choice([0.0, 15.0, 45.0])),
+            min_report_fraction=float(rng.choice([0.0, 0.3, 0.7])),
+            starvation_patience=int(rng.integers(0, 4))))
+    serial = [Experiment(s).run() for s in specs]
+    lane = sweep(specs, workers=1, vectorize=True)
+    saw_faults = False
+    for rl, rs in zip(lane, serial):
+        _assert_same(rl, rs)
+        assert rl.aborted == rs.aborted
+        p = rl.log.participation()
+        if p.get("failed") or p.get("retried"):
+            saw_faults = True
+    assert saw_faults
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_faulty_engine_matches_scalar_oracle(mode):
+    """With faults + retries live, the columnar engine replays the scalar
+    oracle seed for seed: identical ids/outcomes/rounds/starts, durations
+    to the scalar-vs-vector libm tolerance (same bar as the fault-free
+    oracle tests), carbon split included."""
+    fed = FederatedConfig(mode=mode, concurrency=30, aggregation_goal=20,
+                          seed=5, retry_limit=2, retry_backoff_s=15.0,
+                          min_report_fraction=0.4, starvation_patience=4)
+    run = RunConfig(target_perplexity=175.0, max_rounds=15)
+    mk = lambda: SessionSampler(CFG, fed, 64, fault=_DIURNAL_HAZARD)
+    vec = get_strategy(mode).run(CFG, fed, run,
+                                 SurrogateLearner(CFG, fed, run),
+                                 sampler=mk())
+    ref = run_scalar(CFG, fed, run, SurrogateLearner(CFG, fed, run),
+                     sampler=mk())
+    assert vec.rounds == ref.rounds
+    assert vec.log.participation() == ref.log.participation()
+    assert vec.log.participation().get("retried", 0) > 0
+    assert vec.log.starved_rounds == ref.log.starved_rounds
+    assert vec.aborted == ref.aborted
+    for k, v in vec.carbon.as_dict().items():
+        assert v == pytest.approx(ref.carbon.as_dict()[k], rel=1e-9), k
+    bv, br = vec.log.columns(), ref.log.columns()
+    # the oracle's vocab is built in order of appearance — remap
+    dmap = np.asarray([bv.device_names.index(x) for x in br.device_names])
+    cmap = np.asarray([bv.country_names.index(x) for x in br.country_names])
+    assert np.array_equal(bv.client_id, br.client_id)
+    assert np.array_equal(bv.round_idx, br.round_idx)
+    assert np.array_equal(bv.outcome, br.outcome)
+    assert np.array_equal(bv.staleness, br.staleness)
+    assert np.array_equal(bv.device_idx, dmap[br.device_idx])
+    assert np.array_equal(bv.country_idx, cmap[br.country_idx])
+    for f in ("download_s", "compute_s", "upload_s", "bytes_down",
+              "bytes_up", "start_t", "end_t"):
+        np.testing.assert_allclose(getattr(bv, f), getattr(br, f),
+                                   rtol=1e-9, atol=1e-12, err_msg=f)
+
+
+# ------------------------------------------------- contributed + wasted split
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_contributed_plus_wasted_sums_exactly_to_total(mode):
+    """The carbon split partitions sessions by completion: contributed +
+    wasted == total **exactly** (not approx) in materialized AND streaming
+    telemetry, the two paths agree bit-for-bit, and a faulty run wastes
+    strictly more than zero."""
+    spec = _spec(mode, 28, 0.7, 9, 10, retry_limit=2)
+    full = Experiment(spec).run()
+    stream = Experiment(spec.replace(run=dataclasses.replace(
+        spec.run, telemetry="streaming"))).run()
+    for res in (full, stream):
+        c = res.carbon
+        assert c.contributed_kg + c.wasted_kg == c.total_kg   # exact
+        assert c.wasted_kg > 0
+        assert c.contributed_kg > c.server_kg > 0
+    assert isinstance(stream.log, StreamedLog)
+    assert full.summary() == stream.summary()                 # bit-for-bit
+    # the split matches a per-session reference reduction
+    b = full.log.columns()
+    est = spec.environment.estimator()
+    scalar = est.estimate_scalar(full.log)
+    assert full.carbon.contributed_kg == pytest.approx(
+        scalar.contributed_kg, rel=1e-9)
+    assert full.carbon.wasted_kg == pytest.approx(scalar.wasted_kg,
+                                                  rel=1e-9)
+    assert (b.outcome != OUTCOMES.index("completed")).any()
+
+
+def test_streaming_cancelled_cohort_carbon_accounting():
+    """Satellite: an async task cut at the round cap leaves a cancelled
+    in-flight cohort; under ``telemetry="streaming"`` its truncated energy
+    must land in ``wasted_kg`` exactly as the materialized path charges
+    it (the PR 5 cancel-flush, folded instead of stored)."""
+    spec = _spec("async", 48, 0.8, 4, 8, fault=FaultModel(),
+                 telemetry="streaming")
+    stream = Experiment(spec).run()
+    full = Experiment(spec.replace(run=dataclasses.replace(
+        spec.run, telemetry="full"))).run()
+    parts = stream.log.participation()
+    assert parts.get("cancelled", 0) > 0
+    assert stream.summary() == full.summary()
+    assert stream.carbon.wasted_kg == full.carbon.wasted_kg > 0
+    assert stream.carbon.contributed_kg + stream.carbon.wasted_kg \
+        == stream.carbon.total_kg
+    # cancelled energy is real (not all-zero rows) and counted as waste:
+    # dropping the cancelled rows out of the materialized log must shrink
+    # wasted_kg
+    from repro.core.telemetry import TaskLog
+    sub = TaskLog()
+    for s in full.log.sessions:
+        if s.outcome != "cancelled":
+            sub.log_session(s)
+    sub.duration_s = full.log.duration_s
+    est = spec.environment.estimator()
+    assert est.estimate(sub).wasted_kg < full.carbon.wasted_kg
+
+
+# --------------------------------------------------------- recovery behavior
+def test_retry_labels_and_backoff():
+    """Failures below the attempt budget are logged ``retried`` (a retry
+    went out), only final-attempt failures stay ``failed``; with
+    ``retry_limit=0`` nothing is ever relabeled. Backoff delays are
+    visible as retry sessions starting strictly after the failure that
+    spawned them."""
+    with_retry = Experiment(_spec("async", 24, 0.8, 2, 12, retry_limit=2,
+                                  retry_backoff_s=30.0)).run()
+    p = with_retry.log.participation()
+    assert p.get("retried", 0) > 0
+    no_retry = Experiment(_spec("async", 24, 0.8, 2, 12,
+                                retry_limit=0)).run()
+    p0 = no_retry.log.participation()
+    assert p0.get("retried", 0) == 0 and p0.get("failed", 0) > 0
+    # sync: every attempt is charged — the faulty run logs MORE sessions
+    # than concurrency*rounds (the retry waves ride along)
+    sy = Experiment(_spec("sync", 20, 0.8, 3, 10, retry_limit=3)).run()
+    assert sy.log.n_sessions > 20 * sy.rounds
+    assert sy.log.participation().get("retried", 0) > 0
+
+
+def test_starvation_quorum_and_abort():
+    """A hazard-saturated sync task under a full quorum starves every
+    round and aborts after ``starvation_patience`` rounds — surfaced on
+    Result.aborted and the summary — identically in serial and lane runs.
+    Async never starves per-round (no round deadline), so the same config
+    runs to its cap un-aborted."""
+    dead = FaultModel(hazard={"WORLD": 1.0})   # every survivor fails
+    spec = _spec("sync", 12, 1.0, 1, 50, fault=dead,
+                 min_report_fraction=1.0, starvation_patience=3,
+                 retry_limit=1)
+    spec = spec.replace(federated=dataclasses.replace(
+        spec.federated, dropout_rate=0.0))
+    res = Experiment(spec).run()
+    assert res.aborted and res.summary()["aborted"] == 1.0
+    assert res.rounds == 3                       # patience, then abort
+    assert res.log.starved_rounds == 3
+    assert res.log.participation().get("completed", 0) == 0
+    lane = sweep([spec], workers=1, vectorize=True)[0]
+    _assert_same(lane, res)
+    assert lane.aborted
+    oracle = run_scalar(CFG, spec.federated, spec.run,
+                        SurrogateLearner(CFG, spec.federated, spec.run),
+                        sampler=spec.environment.sampler(CFG, spec.federated,
+                                                         spec.seq_len))
+    assert oracle.aborted and oracle.rounds == 3
+    assert oracle.log.starved_rounds == 3
+    # async: same saturation, no per-round quorum -> no abort (the
+    # duration budget, not starvation, ends a task that never aggregates)
+    aspec = spec.replace(
+        federated=dataclasses.replace(spec.federated, mode="async"),
+        run=dataclasses.replace(spec.run, max_hours=0.5))
+    ares = Experiment(aspec).run()
+    assert not ares.aborted
+    assert ares.log.participation().get("completed", 0) == 0
+    # without patience, the sync task starves forever but still walks to
+    # its round cap instead of aborting
+    pspec = spec.replace(federated=dataclasses.replace(
+        spec.federated, starvation_patience=0),
+        run=dataclasses.replace(spec.run, max_rounds=6))
+    pres = Experiment(pspec).run()
+    assert not pres.aborted and pres.rounds == 6
+    assert pres.log.starved_rounds == 6
+
+
+# ------------------------------------------------------- validation + wiring
+def test_construction_time_validation():
+    """Satellite: bad knobs fail loudly at construction, not mid-run."""
+    with pytest.raises(ValueError, match="dropout_rate"):
+        FederatedConfig(dropout_rate=-0.1)
+    with pytest.raises(ValueError, match="aggregation_goal"):
+        FederatedConfig(aggregation_goal=0)
+    with pytest.raises(ValueError, match="concurrency"):
+        FederatedConfig(concurrency=0)
+    with pytest.raises(ValueError, match="retry_limit"):
+        FederatedConfig(retry_limit=-1)
+    with pytest.raises(ValueError, match="retry_backoff_s"):
+        FederatedConfig(retry_backoff_s=-5.0)
+    with pytest.raises(ValueError, match="min_report_fraction"):
+        FederatedConfig(min_report_fraction=1.5)
+    with pytest.raises(ValueError, match="starvation_patience"):
+        FederatedConfig(starvation_patience=-2)
+    with pytest.raises(ValueError, match="carbon_topk"):
+        FederatedConfig(carbon_topk=0)
+    with pytest.raises(ValueError, match="hazard"):
+        FaultModel(hazard={"US": 1.5})
+    with pytest.raises(ValueError, match="hazard_schedule"):
+        FaultModel(hazard_schedule={"US": ()})
+    with pytest.raises(ValueError, match="burst_rate_per_day"):
+        FaultModel(burst_rate_per_day=-1.0)
+    with pytest.raises(ValueError, match="burst_fail_prob"):
+        FaultModel(burst_fail_prob=2.0)
+    with pytest.raises(ValueError, match="country_mix"):
+        Environment(country_mix={"US": -1.0})
+    # carbon_topk wider than the participation vocabulary: caught when
+    # the sampler binds the config to an Environment's country mix
+    fed = FederatedConfig(mode="carbon-aware", carbon_topk=6)
+    env = Environment(country_mix={"US": 0.5, "FR": 0.5})
+    with pytest.raises(ValueError, match="carbon_topk"):
+        env.sampler(CFG, fed, 64)
+
+
+def test_fault_model_json_round_trip():
+    """FaultModel (and the whole faulty Environment) survives the spec
+    JSON round trip — and the round-tripped spec reruns bit-for-bit."""
+    spec = _spec("async", 16, 0.8, 6, 6, fault=_DIURNAL_HAZARD,
+                 retry_limit=2, min_report_fraction=0.25)
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back.environment.fault == spec.environment.fault
+    assert back.federated.retry_limit == 2
+    assert FaultModel.from_dict(FaultModel().to_dict()) == FaultModel()
+    _assert_same(Experiment(back).run(), Experiment(spec).run())
+
+
+def test_sweep_failures_name_the_lane_and_spec():
+    """Satellite: a spec that dies inside a lane pack is annotated with
+    its lane and sweep index (the pool fallback already names the
+    remaining spec indices)."""
+    good = _spec("carbon-aware", 10, 0.8, 0, 4, fault=FaultModel())
+    bad = good.replace(environment=Environment(
+        country_mix={"US": 0.5, "FR": 0.5}))   # carbon_topk 6 > 2 countries
+    with pytest.raises(ValueError, match=r"lane 1 \(spec index 1\)"):
+        sweep([good, bad, good.replace(
+            federated=dataclasses.replace(good.federated, seed=1))],
+            workers=1, vectorize=True)
+
+
+def test_sweep_fallback_warning_names_spec_indices(monkeypatch):
+    """The serial-fallback warning now says WHICH specs it reruns."""
+    import importlib
+    sweep_mod = importlib.import_module("repro.api.sweep")
+    specs = [_spec("sync", 8, 0.8, s, 3, fault=FaultModel())
+             for s in range(3)]
+
+    def broken_pool(jobs, specs_, n, deliver):
+        deliver([0], [sweep_mod.run_spec(specs_[0])])
+        raise OSError("pool vanished")
+
+    monkeypatch.setattr(sweep_mod, "_sweep_pool", broken_pool)
+    with pytest.warns(RuntimeWarning,
+                      match=r"spec indices \[1, 2\]"):
+        results = sweep(specs, workers=3)
+    assert all(r is not None for r in results)

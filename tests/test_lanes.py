@@ -35,7 +35,8 @@ _ENVS = (Environment(),
                      network=NetworkEnergyModel(e_access_nj=80.0),
                      fleet=FLEET[:3], pue=1.3,
                      carbon_intensity={"WORLD": 300.0, "US": 100.0}),
-         Environment(country_mix={"US": 0.5, "FR": 0.5}),
+         Environment(country_mix={"US": 0.3, "FR": 0.2, "BR": 0.15,
+                                  "IN": 0.15, "SE": 0.1, "NO": 0.1}),
          Environment.preset("diurnal"))
 
 _MODES = ("sync", "async", "carbon-aware")
@@ -345,7 +346,7 @@ def test_batch_carbon_empty_task_log_is_all_zero_but_server():
     est = CarbonEstimator()
     d = est.batch_carbon(SessionBatch.empty())
     assert d == {"client_compute_kg": 0.0, "upload_kg": 0.0,
-                 "download_kg": 0.0}
+                 "download_kg": 0.0, "ok_kg": 0.0, "waste_kg": 0.0}
     log = TaskLog()
     bd = est.estimate(log)
     assert bd.total_kg == 0.0 and bd.server_kg == 0.0
@@ -364,7 +365,8 @@ def test_empty_batch_accumulator_to_batch_is_well_formed():
     assert isinstance(b, SessionBatch) and len(b) == 0
     est = CarbonEstimator()
     assert est.batch_carbon(b) == {"client_compute_kg": 0.0,
-                                   "upload_kg": 0.0, "download_kg": 0.0}
+                                   "upload_kg": 0.0, "download_kg": 0.0,
+                                   "ok_kg": 0.0, "waste_kg": 0.0}
     log = TaskLog()
     log.log_batch(b)
     assert log.n_sessions == 0 and est.estimate(log).total_kg == 0.0
