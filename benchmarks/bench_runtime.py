@@ -50,6 +50,11 @@ workload so CI quick runs never clobber the full baseline:
   correlated burst windows and retry/backoff re-dispatch all live —
   throughput of the fault weave + retry stream keying, gated at 2x like
   the per-mode points, with the outcome mix recorded for context.
+  ``churn_stress`` records the availability point (PR 8): async at fig5
+  scale with fine-grained per-country eligibility curves (288-segment
+  admission + exit-time scans per resolve), mid-session churn
+  interruptions, checkpoint/resume salvage on the retry stream, and the
+  salvaged/lost waste split — gated at 2x with its own history column.
   ``population_stress`` records the streaming-telemetry scale point
   (async at concurrency 10^5 quick / 10^6 full, ≥10^7 sessions full):
   throughput, ``peak_rss_mb`` (process high-water mark, gated under
@@ -211,6 +216,48 @@ def _run_fault_stress(quick: bool) -> Dict:
             "wasted_kg": res.carbon.wasted_kg}
 
 
+def _run_churn_stress(quick: bool) -> Dict:
+    """Columnar async point with the availability machinery fully live at
+    fig5 scale (PR 8): fine-grained alternating per-country eligibility
+    curves (288 segments — every resolve walks the boundary scan and the
+    admission draw), mid-session churn interruptions, checkpoint/resume
+    salvage on the retry stream, and the salvaged/lost waste split in the
+    estimator. Gates the cost of the availability weave in the hot
+    loop."""
+    import dataclasses
+    from repro.core.availability import AvailabilityModel
+    cfg = get_config("paper-charlm")
+    cfg.param_count()
+    conc = 200 if quick else 1000
+    fed = FederatedConfig(mode="async", concurrency=conc,
+                          aggregation_goal=conc, retry_limit=2,
+                          retry_backoff_s=30.0, checkpoint_period_s=120.0)
+    run = RunConfig(target_perplexity=175.0,
+                    max_rounds=80 if quick else 10_000)
+    env = Environment()
+    env = dataclasses.replace(env, availability=AvailabilityModel(
+        eligibility_schedule={c: (0.95, 0.45) * 144
+                              for c in env.country_mix}))
+    learner = SurrogateLearner(cfg, fed, run)
+    t0 = time.time()
+    res = get_strategy("async").run(cfg, fed, run, learner,
+                                    sampler=env.sampler(cfg, fed, 64),
+                                    estimator=env.estimator())
+    wall = time.time() - t0
+    n = res.log.n_sessions
+    parts = res.log.participation()
+    c = res.carbon
+    assert c.wasted_kg == c.salvaged_kg + c.lost_kg     # the split is live
+    return {"concurrency": conc, "aggregation_goal": conc,
+            "retry_limit": 2, "checkpoint_period_s": 120.0,
+            "sessions": n, "wall_s": round(wall, 4),
+            "sessions_per_s": round(n / max(wall, 1e-9)),
+            "rounds": res.rounds,
+            "interrupted": parts.get("interrupted", 0),
+            "carbon_total_kg": c.total_kg,
+            "salvaged_kg": c.salvaged_kg, "lost_kg": c.lost_kg}
+
+
 def _run_population(quick: bool) -> Dict:
     """Population-scale async point through the streaming telemetry path
     (PR 6): quick = concurrency 10^5, full = concurrency 10^6 driven past
@@ -290,6 +337,7 @@ def run_bench(quick: bool) -> Dict:
             for m in columnar["per_mode"]},
         "population_stress": population,
         "fault_stress": _run_fault_stress(quick),
+        "churn_stress": _run_churn_stress(quick),
     }
     # the engines must simulate the identical workload (seed-for-seed)
     for m in columnar["per_mode"]:
@@ -320,6 +368,11 @@ def check_regression(fresh: Dict, baseline: Dict) -> int:
         gates.append(("fault_stress",
                       baseline.get("fault_stress", {})
                       .get("sessions_per_s", 0), flt["sessions_per_s"]))
+    chn = fresh.get("churn_stress")
+    if chn:
+        gates.append(("churn_stress",
+                      baseline.get("churn_stress", {})
+                      .get("sessions_per_s", 0), chn["sessions_per_s"]))
     pop = fresh.get("population_stress")
     if pop:
         gates.append(("population_stress",
@@ -406,6 +459,9 @@ def append_history(key: str, fresh: Dict, path: str) -> None:
     if "fault_stress" in fresh:
         row["fault_stress_sessions_per_s"] = \
             fresh["fault_stress"]["sessions_per_s"]
+    if "churn_stress" in fresh:
+        row["churn_stress_sessions_per_s"] = \
+            fresh["churn_stress"]["sessions_per_s"]
     append_history_row(row, path)
 
 

@@ -6,12 +6,14 @@
 #
 # Step 2 loads the committed spec artifacts (one sync, one async, one
 # carbon-aware on the diurnal grid, one streaming-telemetry population
-# point at concurrency 10^5, and one faulty async point with diurnal
-# hazards + correlated bursts + retry/backoff recovery), runs each, then
+# point at concurrency 10^5, one faulty async point with diurnal
+# hazards + correlated bursts + retry/backoff recovery, and one
+# availability-churn async point with diurnal eligibility curves +
+# checkpoint/resume salvage), runs each, then
 # re-serializes, reloads and re-runs, asserting both runs produce the
 # identical Result.summary() — the repro.api reproducibility contract,
 # exercised on ALL THREE event loops (and on the intensity_schedule,
-# FaultModel and telemetry round-trips).
+# FaultModel, AvailabilityModel and telemetry round-trips).
 #
 # Step 3 runs the quick fig5-style engine benchmark (columnar vs scalar),
 # refreshes BENCH_runtime.json + BENCH_history.json, and FAILS if the
@@ -44,6 +46,8 @@ python -m repro.api examples/specs/charlm_carbonaware_small.json \
 python -m repro.api examples/specs/charlm_streaming_pop.json \
     --roundtrip-check --quiet
 python -m repro.api examples/specs/charlm_faulty_bursts.json \
+    --roundtrip-check --quiet
+python -m repro.api examples/specs/charlm_avail_churn.json \
     --roundtrip-check --quiet
 
 echo "== smoke 3/4: runtime benchmark (quick, per-mode 2x regression gate) =="

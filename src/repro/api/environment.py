@@ -25,6 +25,7 @@ from dataclasses import dataclass, field
 from typing import Mapping, Optional, Sequence, Tuple
 
 from repro.configs.base import FederatedConfig, ModelConfig
+from repro.core.availability import AvailabilityModel
 from repro.core.carbon import (CARBON_INTENSITY, DATACENTER_LOCATIONS, PUE,
                                UTC_OFFSET_H, IntensityModel,
                                diurnal_schedule)
@@ -62,6 +63,13 @@ class Environment:
     # failure process: per-country (time-varying) hazards + correlated
     # burst outages; the all-zero default is the fault-free engine
     fault: FaultModel = field(default_factory=FaultModel)
+    # device availability: per-country (time-varying) eligibility curves
+    # gating admission + mid-session churn; the all-available default is
+    # the availability-blind engine (see repro.core.availability —
+    # ``diurnal_availability(countries)`` builds the canonical
+    # anti-correlated evening-charging-peak model)
+    availability: AvailabilityModel = field(
+        default_factory=AvailabilityModel)
 
     def __post_init__(self):
         if self.download_bps <= 0 or self.upload_bps <= 0:
@@ -146,7 +154,8 @@ class Environment:
                               country_mix=self.country_mix,
                               download_bps=self.download_bps,
                               upload_bps=self.upload_bps,
-                              fault=self.fault)
+                              fault=self.fault,
+                              availability=self.availability)
 
     # ------------------------------------------------- JSON round-tripping
     def to_dict(self) -> dict:
@@ -167,6 +176,9 @@ class Environment:
         fd = self.fault.to_dict()
         if fd:                      # default (fault-free) stays implicit
             out["fault"] = fd
+        ad = self.availability.to_dict()
+        if ad:                      # default (all-available) stays implicit
+            out["availability"] = ad
         return out
 
     @classmethod
@@ -182,4 +194,7 @@ class Environment:
                 for p in d["fleet"])
         if not isinstance(d.get("fault"), FaultModel):
             d["fault"] = FaultModel.from_dict(d.get("fault"))
+        if not isinstance(d.get("availability"), AvailabilityModel):
+            d["availability"] = AvailabilityModel.from_dict(
+                d.get("availability"))
         return cls(**d)

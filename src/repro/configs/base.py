@@ -180,6 +180,15 @@ class FederatedConfig:
     retry_backoff_s: float = 30.0
     min_report_fraction: float = 0.0
     starvation_patience: int = 0
+    # availability recovery (pairs with Environment.availability): an
+    # interrupted session keeps the local steps it checkpointed every
+    # `checkpoint_period_s` of compute (0 = no checkpointing, everything
+    # is lost), and its retry redoes only the remainder. Sync rounds may
+    # over-select — dispatch ceil((1 + over_select_fraction) * goal)
+    # clients, close on the goal-th completer, surplus relabeled
+    # "cancelled" and charged as wasted (the paper's over-commitment).
+    checkpoint_period_s: float = 0.0
+    over_select_fraction: float = 0.0
 
     def __post_init__(self):
         if self.mode not in ("sync", "async", "carbon-aware"):
@@ -219,6 +228,14 @@ class FederatedConfig:
         if self.starvation_patience < 0:
             raise ValueError(f"starvation_patience must be >= 0, got "
                              f"{self.starvation_patience!r}")
+        if not (math.isfinite(self.checkpoint_period_s)
+                and self.checkpoint_period_s >= 0):
+            raise ValueError(f"checkpoint_period_s must be finite and >= 0, "
+                             f"got {self.checkpoint_period_s!r}")
+        if not (math.isfinite(self.over_select_fraction)
+                and self.over_select_fraction >= 0):
+            raise ValueError(f"over_select_fraction must be finite and >= 0, "
+                             f"got {self.over_select_fraction!r}")
 
 
 @dataclass(frozen=True)

@@ -30,7 +30,8 @@ from repro.core.carbon import IntensityModel
 from repro.core.energy import SERVER_TASK_POWER_W, server_energy_j
 from repro.core.network import DEFAULT_NETWORK, NetworkEnergyModel
 from repro.core.profiles import FLEET, DeviceProfile
-from repro.core.telemetry import ClientSession, SessionBatch, TaskLog
+from repro.core.telemetry import (OUTCOME_CODE, ClientSession, SessionBatch,
+                                  TaskLog)
 
 _EXACT_CHUNK = 1 << 25
 
@@ -124,10 +125,18 @@ class CarbonBreakdown:
     # contributed vs wasted split (the paper's over-commitment price):
     # contributed = completed sessions' client-side carbon + the server;
     # wasted = every non-completed session (dropped, timed out, cancelled,
-    # failed, retried) — work that burned carbon but never aggregated.
-    # When populated, total_kg == contributed_kg + wasted_kg by definition.
+    # failed, retried, interrupted) — work that burned carbon but never
+    # aggregated. When populated, total_kg == contributed_kg + wasted_kg
+    # by definition.
     contributed_kg: float = 0.0
     wasted_kg: float = 0.0
+    # checkpoint/resume refinement of the waste: an interrupted session's
+    # compute up to its last checkpoint is *salvaged* (a retry resumed
+    # from it instead of redoing the work); everything else non-completed
+    # is *lost*. wasted_kg == salvaged_kg + lost_kg exactly whenever a
+    # checkpoint period was live (both are 0/waste otherwise).
+    salvaged_kg: float = 0.0
+    lost_kg: float = 0.0
 
     @property
     def total_kg(self) -> float:
@@ -153,6 +162,8 @@ class CarbonBreakdown:
             "server_kg": self.server_kg,
             "contributed_kg": self.contributed_kg,
             "wasted_kg": self.wasted_kg,
+            "salvaged_kg": self.salvaged_kg,
+            "lost_kg": self.lost_kg,
             "total_kg": self.total_kg,
         }
 
@@ -184,16 +195,23 @@ class CarbonEstimator:
                 "upload_kg": float(kg[1, 0]),
                 "download_kg": float(kg[2, 0])}
 
-    def batch_carbon(self, b: SessionBatch) -> Dict[str, float]:
+    def batch_carbon(self, b: SessionBatch,
+                     checkpoint_period_s: float = 0.0) -> Dict[str, float]:
         """Fig. 5 component sums for a whole SessionBatch via group-by-
         device/country array reductions (no per-session loop). The three
         component energies land in one (3, n) matrix so the grid-intensity
         conversion is a single fused pass instead of three, and dropped/
         timed-out/cancelled rows need no masks — their truncated durations
-        and prorated bytes already carry the burned-energy accounting."""
+        and prorated bytes already carry the burned-energy accounting.
+
+        With ``checkpoint_period_s`` > 0 (availability churn + resume
+        live), interrupted rows' compute waste splits at the last
+        checkpoint into salvaged vs lost (``_salvage_kg``); otherwise
+        salvaged is 0 and lost == waste bit-for-bit."""
         if not len(b):
             return {"client_compute_kg": 0.0, "upload_kg": 0.0,
-                    "download_kg": 0.0, "ok_kg": 0.0, "waste_kg": 0.0}
+                    "download_kg": 0.0, "ok_kg": 0.0, "waste_kg": 0.0,
+                    "salvaged_kg": 0.0, "lost_kg": 0.0}
         kg = _kg_rows(self, b.device_names, b.device_idx, b.country_names,
                       b.country_idx, b.compute_s, b.upload_s, b.download_s,
                       b.bytes_up, b.bytes_down, b.start_t)
@@ -201,13 +219,31 @@ class CarbonEstimator:
         # independent of row order or chunking — which is exactly what lets
         # the streaming telemetry fold reproduce this path bit-for-bit.
         # ok/waste split the same rows by completion (wasted work: dropped,
-        # timed out, cancelled, failed, retried) — same exactness contract.
+        # timed out, cancelled, failed, retried, interrupted) — same
+        # exactness contract.
         okm = b.completed_mask
-        return {"client_compute_kg": exact_sum(kg[0]),
-                "upload_kg": exact_sum(kg[1]),
-                "download_kg": exact_sum(kg[2]),
-                "ok_kg": exact_sum(kg[:, okm]),
-                "waste_kg": exact_sum(kg[:, ~okm])}
+        out = {"client_compute_kg": exact_sum(kg[0]),
+               "upload_kg": exact_sum(kg[1]),
+               "download_kg": exact_sum(kg[2]),
+               "ok_kg": exact_sum(kg[:, okm])}
+        P = float(checkpoint_period_s)
+        im = (b.outcome == OUTCOME_CODE["interrupted"]) if P > 0 else None
+        if im is None or not im.any():
+            w = exact_sum(kg[:, ~okm])
+            out.update(waste_kg=w, salvaged_kg=0.0, lost_kg=w)
+            return out
+        iw = np.flatnonzero(im)
+        salv_kg, tail_kg = _salvage_kg(
+            self, b.device_names, b.device_idx[iw], b.country_names,
+            b.country_idx[iw], b.compute_s[iw], b.download_s[iw],
+            b.start_t[iw], P)
+        ow = ~okm & ~im
+        salv = exact_sum(salv_kg)
+        lost = ExactSum().add(tail_kg).add(kg[1, iw]).add(kg[2, iw]) \
+            .add(kg[:, ow]).value()
+        # waste == salvaged + lost exactly (one well-defined float add)
+        out.update(waste_kg=salv + lost, salvaged_kg=salv, lost_kg=lost)
+        return out
 
     def _server_kg_s(self, duration_s: float) -> float:
         srv_j = server_energy_j(duration_s, pue=self.intensity.pue,
@@ -226,19 +262,26 @@ class CarbonEstimator:
         if comp is not None:
             d = comp(self)
         else:
-            d = self.batch_carbon(log.columns() if hasattr(log, "columns")
-                                  else SessionBatch.from_sessions(
-                                      log.sessions))
+            d = self.batch_carbon(
+                log.columns() if hasattr(log, "columns")
+                else SessionBatch.from_sessions(log.sessions),
+                checkpoint_period_s=getattr(log, "checkpoint_period_s",
+                                            0.0))
         srv = self._server_kg(log)
         return CarbonBreakdown(d["client_compute_kg"], d["upload_kg"],
                                d["download_kg"], srv,
                                contributed_kg=d.get("ok_kg", 0.0) + srv,
-                               wasted_kg=d.get("waste_kg", 0.0))
+                               wasted_kg=d.get("waste_kg", 0.0),
+                               salvaged_kg=d.get("salvaged_kg", 0.0),
+                               lost_kg=d.get("lost_kg",
+                                             d.get("waste_kg", 0.0)))
 
     def estimate_scalar(self, log: TaskLog) -> CarbonBreakdown:
         """Per-session reference loop — equivalence-test and benchmark twin
-        of the vectorized ``estimate``."""
-        cc = up = dn = okk = wst = 0.0
+        of the vectorized ``estimate`` (including the checkpoint salvage
+        split, via ``_salvage_kg`` batch-of-1)."""
+        P = float(getattr(log, "checkpoint_period_s", 0.0))
+        cc = up = dn = okk = salv = lost = 0.0
         for s in log.sessions:
             d = self.session_carbon(s)
             cc += d["client_compute_kg"]
@@ -247,11 +290,20 @@ class CarbonEstimator:
             row = d["client_compute_kg"] + d["upload_kg"] + d["download_kg"]
             if s.completed:
                 okk += row
+            elif P > 0 and s.outcome == "interrupted":
+                b = SessionBatch.from_sessions([s])
+                sk, tk = _salvage_kg(self, b.device_names, b.device_idx,
+                                     b.country_names, b.country_idx,
+                                     b.compute_s, b.download_s, b.start_t,
+                                     P)
+                salv += float(sk[0])
+                lost += float(tk[0]) + d["upload_kg"] + d["download_kg"]
             else:
-                wst += row
+                lost += row
         srv = self._server_kg(log)
         return CarbonBreakdown(cc, up, dn, srv, contributed_kg=okk + srv,
-                               wasted_kg=wst)
+                               wasted_kg=salv + lost, salvaged_kg=salv,
+                               lost_kg=lost)
 
 
 def _kg_rows(est: CarbonEstimator, device_names, device_idx, country_names,
@@ -296,11 +348,42 @@ def _kg_rows(est: CarbonEstimator, device_names, device_idx, country_names,
     return (kg, e) if with_energy else kg
 
 
+def _salvage_kg(est: CarbonEstimator, device_names, device_idx,
+                country_names, country_idx, compute_s, download_s, start_t,
+                period_s: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Checkpoint split of interrupted rows' burned compute carbon:
+    ``floor(burned / P) * P`` seconds of compute survived to the last
+    checkpoint (salvaged — a resume reused it), the remainder is lost.
+    Under a diurnal grid each part is charged the mean intensity over its
+    own sub-span of the compute phase, mirroring ``_kg_rows``'s phase
+    integration — a row with zero salvage reproduces its ``_kg_rows``
+    compute entry bit-for-bit (``c - 0.0 == c``, same span mean). Returns
+    per-row ``(salvaged_kg, lost_kg)`` arrays; row-pure, so any blocking
+    (streaming folds, lane segments, batch-of-1 scalar) agrees exactly."""
+    profs = [est.profiles[n] for n in device_names]
+    cpu_w = np.asarray([p.cpu_power_w for p in profs])[device_idx]
+    salv_s = np.floor(compute_s / period_s) * period_s
+    e_salv = cpu_w * salv_s
+    e_tail = cpu_w * (compute_s - salv_s)
+    tab = est.intensity.vocab_schedule(tuple(country_names))
+    if not tab.any_dynamic:
+        ci = tab.static[country_idx]
+        return (est.intensity.co2e_kg(e_salv, ci),
+                est.intensity.co2e_kg(e_tail, ci))
+    a1 = start_t + download_s
+    am = a1 + salv_s
+    a2 = a1 + compute_s
+    return (est.intensity.co2e_kg(e_salv, tab.mean(country_idx, a1, am)),
+            est.intensity.co2e_kg(e_tail, tab.mean(country_idx, am, a2)))
+
+
 def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
                 estimators: Sequence[CarbonEstimator],
                 device_names: Sequence[Tuple[str, ...]],
                 country_names: Sequence[Tuple[str, ...]],
-                durations_s: Sequence[float]) -> List[CarbonBreakdown]:
+                durations_s: Sequence[float],
+                checkpoint_period_s: Optional[Sequence[float]] = None
+                ) -> List[CarbonBreakdown]:
     """Per-lane CarbonBreakdowns from one shared lane-columnar session
     store (the lane-batched sweep engine's ``LaneAccumulator``), as
     segment reductions over the lane-sorted columns instead of S
@@ -313,7 +396,9 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
     bit-for-bit by construction — the lane-equivalence invariant
     (lane-batched == serial, seed for seed) needs no summation-order
     gymnastics. Per-lane estimators may differ in any Environment knob —
-    profiles, intensity tables, network model, PUE, server power."""
+    profiles, intensity tables, network model, PUE, server power.
+    ``checkpoint_period_s`` carries each lane's effective salvage period
+    (0 disables the split — lost == waste, like ``batch_carbon``)."""
     order = np.argsort(lane, kind="stable")
     bounds = np.searchsorted(lane[order], np.arange(len(estimators) + 1))
     dev_s = cols["device_idx"][order]
@@ -329,6 +414,7 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
     for i, est in enumerate(estimators):
         sl = slice(int(bounds[i]), int(bounds[i + 1]))
         srv = est._server_kg_s(durations_s[i])
+        P = float(checkpoint_period_s[i]) if checkpoint_period_s else 0.0
         if sl.start == sl.stop:
             out.append(CarbonBreakdown(0.0, 0.0, 0.0, srv,
                                        contributed_kg=srv, wasted_kg=0.0))
@@ -337,8 +423,25 @@ def lane_carbon(cols: Dict[str, np.ndarray], lane: np.ndarray,
                       ctry_s[sl], comp_s[sl], up_s[sl], down_s[sl],
                       bu_s[sl], bd_s[sl], st_s[sl])
         okm = out_s[sl] == 0  # OUTCOME_CODE["completed"]
+        im = (out_s[sl] == OUTCOME_CODE["interrupted"]) if P > 0 else None
+        if im is None or not im.any():
+            w = exact_sum(kg[:, ~okm])
+            out.append(CarbonBreakdown(
+                exact_sum(kg[0]), exact_sum(kg[1]), exact_sum(kg[2]), srv,
+                contributed_kg=exact_sum(kg[:, okm]) + srv,
+                wasted_kg=w, lost_kg=w))
+            continue
+        iw = np.flatnonzero(im)
+        salv_kg, tail_kg = _salvage_kg(
+            est, device_names[i], dev_s[sl][iw], country_names[i],
+            ctry_s[sl][iw], comp_s[sl][iw], down_s[sl][iw], st_s[sl][iw],
+            P)
+        ow = ~okm & ~im
+        salv = exact_sum(salv_kg)
+        lost = ExactSum().add(tail_kg).add(kg[1, iw]).add(kg[2, iw]) \
+            .add(kg[:, ow]).value()
         out.append(CarbonBreakdown(
             exact_sum(kg[0]), exact_sum(kg[1]), exact_sum(kg[2]), srv,
             contributed_kg=exact_sum(kg[:, okm]) + srv,
-            wasted_kg=exact_sum(kg[:, ~okm])))
+            wasted_kg=salv + lost, salvaged_kg=salv, lost_kg=lost))
     return out

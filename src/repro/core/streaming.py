@@ -45,8 +45,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core.carbon import SECONDS_PER_DAY
-from repro.core.telemetry import (OUTCOMES, SessionBatch, TaskLog,
-                                  _ACC_DTYPES)
+from repro.core.telemetry import (OUTCOME_CODE, OUTCOMES, SessionBatch,
+                                  TaskLog, _ACC_DTYPES)
 
 _MEASURES = ("co2e_kg", "energy_j", "bytes", "duration_s", "count")
 
@@ -62,21 +62,28 @@ class StreamingAccumulator:
 
     def __init__(self, estimator, device_names: Tuple[str, ...],
                  country_names: Tuple[str, ...], *, seed: int,
-                 sample: int):
+                 sample: int, checkpoint_period_s: float = 0.0):
         from repro.core.estimator import ExactSum
         self.estimator = estimator
         self.device_names = tuple(device_names)
         self.country_names = tuple(country_names)
         self.seed = int(seed)
         self.sample = int(sample)
+        self.checkpoint_period_s = float(checkpoint_period_s)
         assert self.sample > 0
         self._n = 0
         # exact component sums (bit-for-bit vs materialized batch_carbon)
         self._kg = [ExactSum(), ExactSum(), ExactSum()]
         # exact contributed/wasted split over the same rows: completed vs
-        # everything else (dropped/timeout/cancelled/failed/retried)
+        # everything else (dropped/timeout/cancelled/failed/retried/
+        # interrupted). With a live checkpoint period the waste further
+        # splits into salvaged (interrupted compute up to the last
+        # checkpoint, reused by a resume) vs lost — exact sums are
+        # associative, so the fold matches batch_carbon's split
+        # bit-for-bit regardless of block boundaries.
         self._kg_ok = ExactSum()
-        self._kg_waste = ExactSum()
+        self._kg_salv = ExactSum()
+        self._kg_lost = ExactSum()
         self._bytes_up = ExactSum()
         self._bytes_down = ExactSum()
         # exact integer counters
@@ -126,7 +133,21 @@ class StreamingAccumulator:
         self._outcome_counts += np.bincount(out, minlength=len(OUTCOMES))
         ok = out == 0  # OUTCOME_CODE["completed"]
         self._kg_ok.add(kg[:, ok])
-        self._kg_waste.add(kg[:, ~ok])
+        P = self.checkpoint_period_s
+        im = (out == OUTCOME_CODE["interrupted"]) if P > 0 else None
+        if im is None or not im.any():
+            self._kg_lost.add(kg[:, ~ok])
+        else:
+            from repro.core.estimator import _salvage_kg
+            iw = np.flatnonzero(im)
+            salv_kg, tail_kg = _salvage_kg(
+                self.estimator, self.device_names, block["device_idx"][iw],
+                self.country_names, block["country_idx"][iw],
+                block["compute_s"][iw], block["download_s"][iw],
+                block["start_t"][iw], P)
+            self._kg_salv.add(salv_kg)
+            self._kg_lost.add(tail_kg).add(kg[1, iw]).add(kg[2, iw]) \
+                .add(kg[:, ~ok & ~im])
         self._stale_sum += int(block["staleness"][ok].sum(dtype=np.int64))
         self._fold_groups(block, kg, e, out)
         self._fold_reservoir(block, n)
@@ -202,11 +223,18 @@ class StreamingAccumulator:
 
     # ---------------------------------------------------------------- views
     def carbon_components(self) -> Dict[str, float]:
+        salv = self._kg_salv.value()
+        lost = self._kg_lost.value()
+        # waste == salvaged + lost exactly (one float add, matching
+        # batch_carbon); with no live checkpoint period salv is 0.0 and
+        # 0.0 + lost == lost bitwise, so the key stays back-compatible
         return {"client_compute_kg": self._kg[0].value(),
                 "upload_kg": self._kg[1].value(),
                 "download_kg": self._kg[2].value(),
                 "ok_kg": self._kg_ok.value(),
-                "waste_kg": self._kg_waste.value()}
+                "waste_kg": salv + lost,
+                "salvaged_kg": salv,
+                "lost_kg": lost}
 
     def total_bytes(self) -> Dict[str, float]:
         return {"up": self._bytes_up.value(),
@@ -262,12 +290,14 @@ class StreamedLog(TaskLog):
 
     def __init__(self, estimator, device_names: Tuple[str, ...],
                  country_names: Tuple[str, ...], *, seed: int,
-                 sample: int = 4096, mode: str = ""):
+                 sample: int = 4096, mode: str = "",
+                 checkpoint_period_s: float = 0.0):
         super().__init__()
         self.mode = mode
-        self._acc = StreamingAccumulator(estimator, device_names,
-                                         country_names, seed=seed,
-                                         sample=sample)
+        self.checkpoint_period_s = float(checkpoint_period_s)
+        self._acc = StreamingAccumulator(
+            estimator, device_names, country_names, seed=seed,
+            sample=sample, checkpoint_period_s=checkpoint_period_s)
 
     def __len__(self) -> int:
         return self._acc._n

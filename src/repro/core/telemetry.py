@@ -25,9 +25,13 @@ import numpy as np
 
 # Append-only: codes are positional and live in persisted telemetry.
 # "failed" = killed by the fault model (hazard or burst); "retried" = a
-# failed attempt whose slot was re-dispatched (the retry is its own row).
+# failed attempt whose slot was re-dispatched (the retry is its own row);
+# "interrupted" = the device exited availability-model eligibility (refused
+# at admission, or churned mid-flight) — kept distinct from "failed" even
+# when re-dispatched, because the checkpoint/resume salvage accounting
+# needs to find these rows at estimate time.
 OUTCOMES: Tuple[str, ...] = ("completed", "dropped", "timeout", "cancelled",
-                             "failed", "retried")
+                             "failed", "retried", "interrupted")
 OUTCOME_CODE: Dict[str, int] = {name: i for i, name in enumerate(OUTCOMES)}
 
 

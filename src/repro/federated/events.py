@@ -31,6 +31,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig
+from repro.core.availability import AvailabilityModel, exit_times
 from repro.core.faults import FaultModel
 from repro.core.profiles import (COUNTRY_MIX, DOWNLOAD_BPS, FLEET, UPLOAD_BPS,
                                  DeviceProfile)
@@ -337,7 +338,8 @@ class SessionSampler:
                  country_mix: Optional[Mapping[str, float]] = None,
                  download_bps: Optional[float] = None,
                  upload_bps: Optional[float] = None,
-                 fault: Optional[FaultModel] = None):
+                 fault: Optional[FaultModel] = None,
+                 availability: Optional[AvailabilityModel] = None):
         self.cfg = model_cfg
         self.fed = fed
         self.seq_len = seq_len
@@ -381,6 +383,14 @@ class SessionSampler:
             self._hazard_tab = fault.hazard_table(self.country_names)
             self._burst_start, self._burst_end = fault.burst_windows()
             self._burst_p = fault.burst_fail_prob
+        # availability: a disabled (all-available) model keeps has_avail
+        # False and every resolve path runs the availability-free code
+        # verbatim — the admission/churn uniform is never even drawn
+        self.availability = availability
+        self.has_avail = availability is not None and availability.enabled
+        if self.has_avail:
+            self._avail_tab = availability.eligibility_table(
+                self.country_names)
 
     def country_draw(self, client_ids: Union[np.ndarray, Sequence[int]],
                      round_idx: int) -> np.ndarray:
@@ -397,6 +407,30 @@ class SessionSampler:
             vals = _splitmix64_arr(base_r + _U64(_GOLDEN))
         u1 = (vals >> _U64(11)).astype(np.float64) * _INV53
         return np.searchsorted(self._ccum, u1).astype(np.int32)
+
+    # ------------------------------------------------------- availability
+    def admission_uniforms(self, client_ids: Union[np.ndarray,
+                                                   Sequence[int]],
+                           round_idx: int) -> np.ndarray:
+        """The availability-model admission/churn uniform for each
+        ``(seed, client_id, round_idx)`` — a dedicated counter stream
+        (key base ``round_idx + 3_000_000``) so it never aliases the
+        planner, outcome or fault draws. The carbon-aware coordinator
+        re-derives these to screen candidates; bit-identical to the draw
+        a subsequent ``resolve_batch`` of the same ids consumes."""
+        return _uniforms_batch(self.fed.seed, client_ids,
+                               round_idx + 3_000_000, 1)[:, 0]
+
+    def _avail_masks(self, country_idx: np.ndarray, start: np.ndarray,
+                     ua: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Availability overlay for one cohort: ``(not_admitted,
+        exit_t)``. A device is eligible exactly while ``ua <
+        eligibility(t)`` — one uniform couples admission (at ``start``)
+        and mid-flight churn (the first segment boundary where the curve
+        falls to or below the draw). Element-wise, so any per-lane subset
+        of a pack reproduces this bit for bit."""
+        e0 = self._avail_tab.at(country_idx, start)
+        return ua >= e0, exit_times(self._avail_tab, country_idx, ua, start)
 
     # ----------------------------------------------------------- faults
     def _fault_masks(self, country_idx: np.ndarray, start: np.ndarray,
@@ -457,16 +491,20 @@ class SessionSampler:
 
     def resolve_batch(self, pb: PlanBatch, round_idx: int,
                       start_t: Union[float, np.ndarray],
-                      deadline: Optional[float] = None
+                      deadline: Optional[float] = None,
+                      late_code: Optional[int] = None
                       ) -> Tuple[SessionBatch, np.ndarray]:
         """Resolve a planned cohort's outcomes; returns ``(batch, ok)``
         where ``ok[i]`` is True iff session i completed (contributed).
 
         start_t may be a scalar or a per-client array of task-clock starts;
         deadline is the absolute task-clock time after which the round no
-        longer accepts results (sync round close / over-selection cancel).
-        Downlink bytes are prorated by the completed download fraction so a
-        client dropped mid-download isn't charged the full payload."""
+        longer accepts results (sync round close / over-selection cancel);
+        late_code relabels deadline-cut rows (default "dropped" — the sync
+        over-selection path passes "cancelled" so the surplus it invited is
+        visibly its own doing). Downlink bytes are prorated by the
+        completed download fraction so a client dropped mid-download isn't
+        charged the full payload."""
         fed = self.fed
         n = len(pb)
         uu = _uniforms_batch(fed.seed, pb.client_ids, round_idx + 1_000_000, 2)
@@ -479,18 +517,36 @@ class SessionSampler:
 
         dropped = uu[:, 0] < fed.dropout_rate
         timeout = ~dropped & (full_c > fed.client_timeout_s)
+        if self.has_avail:
+            # inadmissible devices interrupt at zero cost; admitted ones
+            # interrupt mid-flight when their curve dips to their draw
+            ua = self.admission_uniforms(pb.client_ids, round_idx)
+            not_adm, exit_t = self._avail_masks(pb.country_idx, start, ua)
+            churned = ~not_adm & ~dropped & ~timeout & (exit_t < end_full)
+            inter = not_adm | churned
+            iburn = np.where(not_adm, 0.0,
+                             np.minimum(np.maximum(exit_t - start, 0.0),
+                                        full))
+            dropped &= ~not_adm
+            timeout &= ~not_adm
+        else:
+            inter = None
         if self.has_faults:
+            pre = dropped | timeout
+            if inter is not None:
+                pre = pre | inter
             uf = _uniforms_batch(fed.seed, pb.client_ids,
                                  round_idx + 2_000_000, 3)
             failed, fburn = self._fault_masks(pb.country_idx, start,
-                                              end_full, full, uf,
-                                              dropped | timeout)
+                                              end_full, full, uf, pre)
         else:
             failed = None
         if deadline is not None:
             late = ~dropped & ~timeout & (end_full > deadline)
             if failed is not None:
                 late &= ~failed
+            if inter is not None:
+                late &= ~inter
         else:
             late = np.zeros(n, bool)
         # burn budget for the cut-short sessions: dropout picks a random
@@ -502,6 +558,9 @@ class SessionSampler:
         if failed is not None:
             burn = np.where(failed, fburn, burn)
             cut = cut | failed
+        if inter is not None:
+            burn = np.where(inter, iburn, burn)
+            cut = cut | inter
         d = np.where(cut, np.minimum(full_d, burn), full_d)
         c = np.where(cut, np.minimum(full_c,
                                      np.maximum(0.0, burn - full_d)),
@@ -516,6 +575,8 @@ class SessionSampler:
         end = np.where(timeout, start + full_d + fed.client_timeout_s, end)
         if failed is not None:
             end = np.where(failed, start + fburn, end)
+        if inter is not None:
+            end = np.where(inter, start + iburn, end)
         if deadline is not None:
             # retries may start after the round closed: never end < start
             end = np.where(late, np.maximum(start, deadline), end)
@@ -525,6 +586,10 @@ class SessionSampler:
         outcome[timeout] = OUTCOME_CODE["timeout"]
         if failed is not None:
             outcome[failed] = OUTCOME_CODE["failed"]
+        if inter is not None:
+            outcome[inter] = OUTCOME_CODE["interrupted"]
+        if late_code is not None and late_code != OUTCOME_CODE["dropped"]:
+            outcome[late] = late_code
         ok = outcome == OUTCOME_CODE["completed"]
         frac_down = np.divide(d, full_d, out=np.zeros(n), where=full_d > 0)
         batch = SessionBatch(
@@ -542,14 +607,17 @@ class SessionSampler:
         return batch, ok
 
     def apply_deadline(self, pb: PlanBatch, batch: SessionBatch,
-                       ok: np.ndarray, deadline: float) -> None:
+                       ok: np.ndarray, deadline: float,
+                       late_code: Optional[int] = None) -> None:
         """Patch a no-deadline ``resolve_batch`` into its with-deadline
         twin, in place (the serial twin of ``LaneSampler.apply_deadline``):
         only completed rows that finish past the deadline change — they
-        burn budget until the round closes and drop. Bit-identical to
-        resolving with the deadline up front, because dropped / timeout /
-        failed rows never depend on it. Lets the sync fault path resolve
-        retry chains before the round deadline is known."""
+        burn budget until the round closes and drop (or relabel to
+        ``late_code`` — the over-selection surplus outcome). Bit-identical
+        to resolving with the deadline up front, because dropped / timeout
+        / failed / interrupted rows never depend on it. Lets the sync
+        fault path resolve retry chains before the round deadline is
+        known."""
         idx = np.flatnonzero(ok & (batch.end_t > deadline))
         if not len(idx):
             return
@@ -565,7 +633,8 @@ class SessionSampler:
         batch.bytes_down[idx] = pb.bytes_down[idx] * np.minimum(1.0, frac)
         batch.bytes_up[idx] = 0.0
         batch.end_t[idx] = np.maximum(deadline, batch.start_t[idx])
-        batch.outcome[idx] = OUTCOME_CODE["dropped"]
+        batch.outcome[idx] = OUTCOME_CODE["dropped"] if late_code is None \
+            else late_code
         ok[idx] = False
 
     # ------------------------------------------------- scalar (batch of 1)
@@ -578,8 +647,8 @@ class SessionSampler:
                            self.bytes_up, int(pb.n_examples[0]))
 
     def resolve(self, plan: SessionPlan, round_idx: int, start_t: float,
-                deadline: Optional[float] = None
-                ) -> Tuple[dict, bool]:
+                deadline: Optional[float] = None,
+                late_code: Optional[int] = None) -> Tuple[dict, bool]:
         """Resolve the outcome; returns (session_kwargs, contributed)."""
         pb = PlanBatch(np.asarray([plan.client_id], np.int64),
                        np.asarray([self.fleet.index(plan.device)], np.int32),
@@ -591,7 +660,8 @@ class SessionSampler:
                        np.asarray([plan.bytes_down]),
                        np.asarray([plan.bytes_up]),
                        np.asarray([plan.n_examples], np.int64))
-        b, ok = self.resolve_batch(pb, round_idx, start_t, deadline)
+        b, ok = self.resolve_batch(pb, round_idx, start_t, deadline,
+                                   late_code=late_code)
         s = b.to_sessions()[0]
         kw = {f: getattr(s, f) for f in
               ("client_id", "round_idx", "device", "country", "download_s",
@@ -620,7 +690,8 @@ class SessionSampler:
                            upload_s, self.bytes_down, self.bytes_up, n_ex)
 
     def resolve_scalar(self, plan: SessionPlan, round_idx: int,
-                       start_t: float, deadline: Optional[float] = None
+                       start_t: float, deadline: Optional[float] = None,
+                       late_outcome: Optional[str] = None
                        ) -> Tuple[dict, bool]:
         """Original pure-Python outcome resolution (see plan_scalar)."""
         fed = self.fed
@@ -630,9 +701,27 @@ class SessionSampler:
         outcome = "completed"
         d, c, u = full_d, full_c, full_u
 
+        not_adm = False
+        churn_burn = None
+        if self.has_avail:
+            ua = _uniforms(fed.seed, plan.client_id,
+                           round_idx + 3_000_000, 1)[0]
+            ci = np.asarray([self._countries.index(plan.country)], np.int32)
+            e0 = float(self._avail_tab.at(ci, np.asarray([start_t]))[0])
+            not_adm = ua >= e0
+            if not not_adm and not (uu[0] < fed.dropout_rate
+                                    or full_c > fed.client_timeout_s):
+                et = float(exit_times(self._avail_tab, ci,
+                                      np.asarray([ua]),
+                                      np.asarray([start_t]))[0])
+                if et < end:
+                    full = full_d + full_c + full_u
+                    churn_burn = min(max(et - start_t, 0.0), full)
+
         fail_burn = None
         if self.has_faults and not (uu[0] < fed.dropout_rate
-                                    or full_c > fed.client_timeout_s):
+                                    or full_c > fed.client_timeout_s
+                                    or not_adm or churn_burn is not None):
             uf = _uniforms(fed.seed, plan.client_id, round_idx + 2_000_000, 3)
             ci = np.asarray([self._countries.index(plan.country)], np.int32)
             hz = float(self._hazard_tab.at(ci, np.asarray([start_t]))[0])
@@ -648,7 +737,12 @@ class SessionSampler:
                     fail_burn = min(max(0.0, float(self._burst_start[i])
                                         - start_t), full)
 
-        if uu[0] < fed.dropout_rate:
+        if not_adm:
+            # refused at admission: the device isn't eligible right now
+            d = c = u = 0.0
+            end = start_t
+            outcome = "interrupted"
+        elif uu[0] < fed.dropout_rate:
             # device stopped being idle/charging at a random point
             frac = uu[1]
             burn = frac * (full_d + full_c + full_u)
@@ -663,6 +757,13 @@ class SessionSampler:
             u = 0.0
             end = start_t + d + c
             outcome = "timeout"
+        elif churn_burn is not None:
+            # exited eligibility mid-flight (unplugged, off wifi)
+            d = min(full_d, churn_burn)
+            c = min(full_c, max(0.0, churn_burn - full_d))
+            u = min(full_u, max(0.0, churn_burn - full_d - full_c))
+            end = start_t + churn_burn
+            outcome = "interrupted"
         elif fail_burn is not None:
             # killed by the fault model (hazard or burst)
             d = min(full_d, fail_burn)
@@ -676,7 +777,7 @@ class SessionSampler:
             c = min(full_c, max(0.0, burn - full_d))
             u = min(full_u, max(0.0, burn - full_d - full_c))
             end = max(start_t, deadline)   # retries may start post-close
-            outcome = "dropped"
+            outcome = late_outcome or "dropped"
 
         frac_down = d / full_d if full_d > 0 else 0.0
         kw = dict(client_id=plan.client_id, round_idx=round_idx,
@@ -749,6 +850,11 @@ class LaneSampler:
         # an all-fault-free pack skips the overlay entirely
         self._fault_lanes = np.asarray([s.has_faults for s in ss], bool)
         self.any_faults = bool(self._fault_lanes.any())
+        # availability lanes delegate the admission/churn overlay to their
+        # own sampler's element-wise _avail_masks (per-lane eligibility
+        # tables); an all-available pack never draws the admission uniform
+        self._avail_lanes = np.asarray([s.has_avail for s in ss], bool)
+        self.any_avail = bool(self._avail_lanes.any())
 
     # ------------------------------------------------------------- planning
     def _plan_from_u(self, lane: np.ndarray, ids: np.ndarray,
@@ -784,42 +890,51 @@ class LaneSampler:
     # ------------------------------------------------------------ resolving
     def plan_resolve(self, lane: np.ndarray,
                      client_ids: Union[np.ndarray, Sequence[int]],
-                     round_idx: int, start_t: Union[float, np.ndarray]
+                     round_idx: int, start_t: Union[float, np.ndarray],
+                     rem: Optional[np.ndarray] = None
                      ) -> Tuple[PlanBatch, Dict[str, np.ndarray],
                                 np.ndarray]:
         """Plan AND resolve one row per (lane, client) off a single fused
         splitmix pass — the lane loops' dispatch fast path (they always
-        resolve what they just planned). Returns ``(pb, cols, ok)``,
-        bit-identical to ``plan_batch`` + ``resolve_batch``."""
+        resolve what they just planned). ``rem`` scales each row's planned
+        compute before resolution (checkpoint/resume retries redo only the
+        remainder; ``x * 1.0`` is IEEE-exact, so all-ones rows are
+        untouched). Returns ``(pb, cols, ok)``, bit-identical to
+        ``plan_batch`` + compute scaling + ``resolve_batch``."""
         ids = np.asarray(client_ids, np.int64)
         lane = np.asarray(lane, np.intp)
         u = _fused_uniforms_rows(self.seeds[lane], ids.astype(np.uint64),
                                  round_idx)
         pb = self._plan_from_u(lane, ids, u)
+        if rem is not None:
+            np.multiply(pb.compute_s, rem, out=pb.compute_s)
         cols, ok = self._resolve_from_u(pb, lane, round_idx, start_t,
                                         u[:, 9:11], copy_start=False)
         return pb, cols, ok
 
     def resolve_batch(self, pb: PlanBatch, lane: np.ndarray, round_idx: int,
                       start_t: Union[float, np.ndarray],
-                      deadline: Optional[np.ndarray] = None
+                      deadline: Optional[np.ndarray] = None,
+                      late_code: Optional[np.ndarray] = None
                       ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         """Resolve a lane-planned cohort; returns ``(cols, ok)`` where
         ``cols`` holds every SessionBatch column (device/country indices
         lane-local, ``staleness`` zeroed) keyed for a ``LaneAccumulator``
         append. ``deadline`` may be a per-row array (each lane closes its
-        own round)."""
+        own round); ``late_code`` relabels each row's deadline cut
+        (scalar or per-row — over-selecting lanes pass "cancelled")."""
         lane = np.asarray(lane, np.intp)
         uu = _uniforms_batch_rows(self.seeds[lane], pb.client_ids,
                                   round_idx + 1_000_000, 2)
         return self._resolve_from_u(pb, lane, round_idx, start_t, uu,
-                                    deadline=deadline)
+                                    deadline=deadline, late_code=late_code)
 
     def _resolve_from_u(self, pb: PlanBatch, lane: np.ndarray,
                         round_idx: int, start_t: Union[float, np.ndarray],
                         uu: np.ndarray,
                         deadline: Optional[np.ndarray] = None,
-                        copy_start: bool = True
+                        copy_start: bool = True,
+                        late_code: Optional[np.ndarray] = None
                         ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
         """Outcome math over a resolve-uniforms block (2 columns).
         ``copy_start=False`` lets a caller that hands over a fresh start
@@ -834,10 +949,32 @@ class LaneSampler:
         timeout_s = self.timeout_s[lane]
         dropped = uu[:, 0] < self.dropout_rate[lane]
         timeout = ~dropped & (full_c > timeout_s)
+        if self.any_avail:
+            ua = _uniforms_batch_rows(self.seeds[lane], pb.client_ids,
+                                      round_idx + 3_000_000, 1)[:, 0]
+            not_adm = np.zeros(n, bool)
+            exit_t = np.full(n, np.inf)
+            for li in np.unique(lane[self._avail_lanes[lane]]):
+                m = lane == li
+                na_, et_ = self.samplers[li]._avail_masks(
+                    pb.country_idx[m], start[m], ua[m])
+                not_adm[m] = na_
+                exit_t[m] = et_
+            churned = ~not_adm & ~dropped & ~timeout & (exit_t < end_full)
+            inter = not_adm | churned
+            iburn = np.where(not_adm, 0.0,
+                             np.minimum(np.maximum(exit_t - start, 0.0),
+                                        full))
+            dropped &= ~not_adm
+            timeout &= ~not_adm
+        else:
+            inter = None
         if self.any_faults:
             uf = _uniforms_batch_rows(self.seeds[lane], pb.client_ids,
                                       round_idx + 2_000_000, 3)
             pre = dropped | timeout
+            if inter is not None:
+                pre = pre | inter
             failed = np.zeros(n, bool)
             fburn = np.zeros(n, np.float64)
             for li in np.unique(lane[self._fault_lanes[lane]]):
@@ -853,6 +990,8 @@ class LaneSampler:
             late = ~dropped & ~timeout & (end_full > deadline)
             if failed is not None:
                 late &= ~failed
+            if inter is not None:
+                late &= ~inter
         else:
             late = np.zeros(n, bool)
         burn = uu[:, 1] * full
@@ -862,6 +1001,9 @@ class LaneSampler:
         if failed is not None:
             burn = np.where(failed, fburn, burn)
             cut = cut | failed
+        if inter is not None:
+            burn = np.where(inter, iburn, burn)
+            cut = cut | inter
         d = np.where(cut, np.minimum(full_d, burn), full_d)
         c = np.where(cut, np.minimum(full_c,
                                      np.maximum(0.0, burn - full_d)),
@@ -875,6 +1017,8 @@ class LaneSampler:
         end = np.where(timeout, start + full_d + timeout_s, end)
         if failed is not None:
             end = np.where(failed, start + fburn, end)
+        if inter is not None:
+            end = np.where(inter, start + iburn, end)
         if deadline is not None:
             # retries may start after the round closed: never end < start
             end = np.where(late, np.maximum(start, deadline), end)
@@ -884,6 +1028,12 @@ class LaneSampler:
         outcome[timeout] = OUTCOME_CODE["timeout"]
         if failed is not None:
             outcome[failed] = OUTCOME_CODE["failed"]
+        if inter is not None:
+            outcome[inter] = OUTCOME_CODE["interrupted"]
+        if late_code is not None:
+            lc = np.broadcast_to(np.asarray(late_code, np.int8), (n,))
+            relabel = late & (lc != OUTCOME_CODE["dropped"])
+            outcome[relabel] = lc[relabel]
         ok = outcome == OUTCOME_CODE["completed"]
         frac_down = np.divide(d, full_d, out=np.zeros(n), where=full_d > 0)
         cols = dict(
@@ -902,14 +1052,17 @@ class LaneSampler:
         return cols, ok
 
     def apply_deadline(self, pb: PlanBatch, cols: Dict[str, np.ndarray],
-                       ok: np.ndarray, deadline: np.ndarray) -> None:
+                       ok: np.ndarray, deadline: np.ndarray,
+                       late_code: Optional[np.ndarray] = None) -> None:
         """Patch a no-deadline resolve into its with-deadline twin, in
         place: only rows that completed past the deadline change (they
-        burn budget until the round closes and drop), every other row is
-        untouched — so the sync lane round needs ONE resolve pass instead
-        of two. Bit-identical to ``resolve_batch(..., deadline=...)``:
-        dropped/timeout rows never depend on the deadline, and a completed
-        row's ``end_t`` equals its full-duration end."""
+        burn budget until the round closes and drop, or relabel to their
+        lane's ``late_code`` — the over-selection surplus outcome), every
+        other row is untouched — so the sync lane round needs ONE resolve
+        pass instead of two. Bit-identical to ``resolve_batch(...,
+        deadline=...)``: dropped/timeout/failed/interrupted rows never
+        depend on the deadline, and a completed row's ``end_t`` equals its
+        full-duration end."""
         idx = np.flatnonzero(ok & (cols["end_t"] > deadline))
         if not len(idx):
             return
@@ -926,7 +1079,12 @@ class LaneSampler:
         cols["bytes_down"][idx] = pb.bytes_down[idx] * np.minimum(1.0, frac)
         cols["bytes_up"][idx] = 0.0
         cols["end_t"][idx] = np.maximum(dl, cols["start_t"][idx])
-        cols["outcome"][idx] = OUTCOME_CODE["dropped"]
+        if late_code is None:
+            cols["outcome"][idx] = OUTCOME_CODE["dropped"]
+        else:
+            lc = np.broadcast_to(np.asarray(late_code, np.int8),
+                                 ok.shape)
+            cols["outcome"][idx] = lc[idx]
         ok[idx] = False
 
     # --------------------------------------------------- replacement streams

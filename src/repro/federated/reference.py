@@ -25,6 +25,7 @@ cancelled-session flush at task end).
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from typing import List, Optional, Tuple
 
@@ -32,11 +33,23 @@ import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
 from repro.core.estimator import CarbonEstimator
-from repro.core.telemetry import ClientSession, TaskLog
+from repro.core.telemetry import OUTCOME_CODE, ClientSession, TaskLog
 from repro.federated.events import (SessionSampler, retry_stream_id,
                                     slot_stream_id)
 from repro.federated.runtime import (_POPULATION, _SERVER_AGG_S, TaskResult,
-                                     _select_cohort, _Stopper)
+                                     _retry_rem, _select_cohort,
+                                     _sync_dispatch_n, _Stopper)
+
+
+def _rem_after(kw: dict, planned_c: float, rem: float,
+               period_s: float) -> float:
+    """Scalar twin of the engine's per-row remainder bookkeeping: wraps
+    ``_retry_rem`` batch-of-1 so the float op sequence (floor, divide,
+    multiply) is shared verbatim with the columnar loops."""
+    return float(_retry_rem(
+        np.asarray([OUTCOME_CODE[kw["outcome"]]], np.int8),
+        np.asarray([planned_c]), np.asarray([kw["compute_s"]]),
+        np.asarray([rem]), period_s)[0])
 
 
 def run_scalar(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
@@ -47,6 +60,9 @@ def run_scalar(model_cfg: ModelConfig, fed: FederatedConfig, run: RunConfig,
     sampler = sampler or SessionSampler(model_cfg, fed, seq_len)
     est = estimator or CarbonEstimator()
     log = TaskLog()
+    # mirror Strategy.run's effective salvage period for estimate_scalar
+    log.checkpoint_period_s = fed.checkpoint_period_s \
+        if (sampler.has_avail and fed.retry_limit > 0) else 0.0
     stop = _Stopper(run)
     if fed.mode == "sync":
         t, rounds, ppl = _sync_loop(model_cfg, fed, learner, sampler, log,
@@ -85,14 +101,18 @@ def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
     rounds = 0
     ppl = float(model_cfg.vocab_size)
     goal = min(fed.aggregation_goal, fed.concurrency)
+    ndisp = _sync_dispatch_n(fed, goal)
+    lo = "cancelled" if fed.over_select_fraction > 0 else None
     quorum = max(1, int(np.ceil(fed.min_report_fraction * goal)))
     streak = 0
 
     while True:
-        cohort = _select_cohort(rng, fed.concurrency, population=_POPULATION)
-        if sampler.has_faults:
+        cohort = _select_cohort(rng, ndisp, population=_POPULATION)
+        if sampler.has_faults or (sampler.has_avail
+                                  and fed.retry_limit > 0):
             n_ok, contributors, round_end = _sync_faulty_round(
-                fed, sampler, log, cohort, rounds, t, goal)
+                fed, sampler, log, cohort, rounds, t, goal,
+                late_outcome=lo)
         else:
             plans = [sampler.plan_scalar(int(c), rounds) for c in cohort]
             tentative = [sampler.resolve_scalar(p, rounds, t) for p in plans]
@@ -108,7 +128,8 @@ def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
             contributors: List[int] = []
             for p in plans:
                 kw, ok = sampler.resolve_scalar(p, rounds, t,
-                                                deadline=round_end)
+                                                deadline=round_end,
+                                                late_outcome=lo)
                 log.log_session(ClientSession(**kw))
                 if ok:
                     n_ok += 1
@@ -143,28 +164,42 @@ def _sync_loop(model_cfg, fed, learner, sampler, log, stop):
     return t, rounds, ppl
 
 
-def _sync_faulty_round(fed, sampler, log, cohort, rounds, t, goal):
-    """Scalar twin of ``SyncStrategy._faulty_round``: chase failed slots
-    through retry re-dispatches (distinct counter-keyed ids, exponential
-    backoff), close the round over all attempts' survivors, then re-resolve
-    every row WITH the deadline for logging (bit-identical to the engine's
-    in-place ``apply_deadline`` patch). Returns (n_ok, contributors,
-    round_end)."""
+def _sync_faulty_round(fed, sampler, log, cohort, rounds, t, goal,
+                       late_outcome=None):
+    """Scalar twin of ``SyncStrategy._faulty_round``: chase failed AND
+    churn-interrupted slots through retry re-dispatches (distinct
+    counter-keyed ids, exponential backoff; an interrupted attempt's
+    retry redoes only the un-checkpointed remainder when
+    ``checkpoint_period_s`` > 0), close the round over all attempts'
+    survivors, then re-resolve every row WITH the deadline for logging
+    (bit-identical to the engine's in-place ``apply_deadline`` patch).
+    Returns (n_ok, contributors, round_end)."""
+    salv_on = sampler.has_avail and fed.retry_limit > 0 \
+        and fed.checkpoint_period_s > 0
     pos = list(range(len(cohort)))
     ids = [int(c) for c in cohort]
     starts = [t] * len(cohort)
-    blocks = []            # per attempt: list of (plan, start, kw_nodl)
+    rems = [1.0] * len(cohort)
+    blocks = []      # per attempt: list of (scaled_plan, start, kw_nodl)
     for att in range(fed.retry_limit + 1):
         rows = []
-        for cid, s0 in zip(ids, starts):
+        for cid, s0, rm in zip(ids, starts, rems):
             plan = sampler.plan_scalar(cid, rounds)
+            if salv_on and att:
+                plan = dataclasses.replace(plan,
+                                           compute_s=plan.compute_s * rm)
             kw, _ = sampler.resolve_scalar(plan, rounds, s0)
             rows.append((plan, s0, kw))
         blocks.append(rows)
         fm = [j for j, (_, _, kw) in enumerate(rows)
-              if kw["outcome"] == "failed"]
+              if kw["outcome"] in ("failed", "interrupted")]
         if att == fed.retry_limit or not fm:
             break
+        if salv_on:
+            rems = [_rem_after(rows[j][2], rows[j][0].compute_s, rems[j],
+                               fed.checkpoint_period_s) for j in fm]
+        else:
+            rems = [1.0] * len(fm)
         pos = [pos[j] for j in fm]
         ids = [retry_stream_id(fed.seed, p,
                                rounds * (fed.retry_limit + 1) + att + 1,
@@ -184,9 +219,11 @@ def _sync_faulty_round(fed, sampler, log, cohort, rounds, t, goal):
     for att, rows in enumerate(blocks):
         for plan, s0, _ in rows:
             kw, ok = sampler.resolve_scalar(plan, rounds, s0,
-                                            deadline=round_end)
+                                            deadline=round_end,
+                                            late_outcome=late_outcome)
             if att < fed.retry_limit and kw["outcome"] == "failed":
-                # a retry went out for this failure
+                # a retry went out for this failure (interrupted rows
+                # keep their label — churn vs crash stays separable)
                 kw = dict(kw, outcome="retried")
             log.log_session(ClientSession(**kw))
             if ok:
@@ -223,7 +260,10 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
     if pick_id is None:
         def pick_id(slot, gen, now, version):
             return slot_stream_id(fed.seed, slot, gen, _POPULATION)
-    retry_on = sampler.has_faults and fed.retry_limit > 0
+    retry_on = (sampler.has_faults or sampler.has_avail) \
+        and fed.retry_limit > 0
+    salv_on = retry_on and sampler.has_avail \
+        and fed.checkpoint_period_s > 0
     rng = np.random.default_rng(fed.seed + 2)
     t = 0.0
     version = 0
@@ -235,11 +275,19 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
     # identity is independent of pop order in both engines.
     heap: List[tuple] = []
 
-    def dispatch(slot: int, gen: int, cid: int, now: float, att: int = 0):
+    def dispatch(slot: int, gen: int, cid: int, now: float, att: int = 0,
+                 rem: float = 1.0):
         plan = sampler.plan_scalar(cid, version)
+        if salv_on:
+            # checkpoint/resume: a retry redoes only its parent's
+            # remainder (x * 1.0 is exact for fresh dispatches)
+            plan = dataclasses.replace(plan,
+                                       compute_s=plan.compute_s * rem)
         kw, ok = sampler.resolve_scalar(plan, version, now)
+        nrem = _rem_after(kw, plan.compute_s, rem,
+                          fed.checkpoint_period_s) if salv_on else 1.0
         heapq.heappush(heap, (kw["end_t"], slot, gen, cid,
-                              (kw, ok, version, att)))
+                              (kw, ok, version, att, nrem)))
 
     for slot, c in enumerate(_select_cohort(rng, fed.concurrency,
                                             population=_POPULATION)):
@@ -248,15 +296,19 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
     while heap:
         if stop.out_of_budget(t, version):
             break
-        end, slot, gen, cid, (kw, ok, ver_sent, att) = heapq.heappop(heap)
+        end, slot, gen, cid, (kw, ok, ver_sent, att, nrem) = \
+            heapq.heappop(heap)
         t = max(t, end)
-        # a failed pop with attempt budget left schedules a retry below
-        # (distinct id stream, exponential backoff) -> logged as "retried"
-        will_retry = retry_on and kw["outcome"] == "failed" \
+        # a failed/interrupted pop with attempt budget left schedules a
+        # retry below (distinct id stream, exponential backoff) -> a
+        # failure logs as "retried"; churn keeps its "interrupted" label
+        will_retry = retry_on \
+            and kw["outcome"] in ("failed", "interrupted") \
             and att < fed.retry_limit
         log.log_session(ClientSession(
             staleness=version - ver_sent,
-            **(dict(kw, outcome="retried") if will_retry else kw)))
+            **(dict(kw, outcome="retried")
+               if will_retry and kw["outcome"] == "failed" else kw)))
         if ok:
             buffer.append((cid, ver_sent))
             if len(buffer) >= fed.aggregation_goal:
@@ -285,13 +337,14 @@ def _async_loop(model_cfg, fed, learner, sampler, log, stop, pick_id=None):
         if will_retry:
             nid = retry_stream_id(fed.seed, slot, gen + 1, _POPULATION)
             dispatch(slot, gen + 1, nid,
-                     t + fed.retry_backoff_s * 2.0 ** att, att + 1)
+                     t + fed.retry_backoff_s * 2.0 ** att, att + 1,
+                     rem=nrem)
         else:
             nid = pick_id(slot, gen + 1, t, version)
             dispatch(slot, gen + 1, nid, t)
     # task end: sessions still in flight are logged as cancelled,
     # truncated at the final clock (keeps energy accounting complete)
-    for end, slot, gen, cid, (kw, ok, ver_sent, att) in sorted(
+    for end, slot, gen, cid, (kw, ok, ver_sent, att, nrem) in sorted(
             heap, key=lambda r: r[1]):
         log.log_session(ClientSession(staleness=version - ver_sent,
                                       **_cancel_scalar(kw, t)))

@@ -50,6 +50,7 @@ Lane-batched results are seed-for-seed identical to per-spec runs;
 """
 from __future__ import annotations
 
+import math
 import warnings
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
@@ -151,6 +152,42 @@ def _select_cohort(rng: np.random.Generator, k: int,
     return rng.choice(population, size=k, replace=False).astype(np.int64)
 
 
+def _sync_dispatch_n(fed: FederatedConfig, goal: int) -> int:
+    """Sync round cohort size. With ``over_select_fraction`` f > 0 the
+    coordinator explicitly dispatches ceil((1+f)*goal) clients (always
+    >= goal) and cancels the surplus at the round close; f == 0 keeps the
+    legacy concurrency-sized cohort."""
+    if fed.over_select_fraction > 0:
+        return int(math.ceil((1.0 + fed.over_select_fraction) * goal))
+    return fed.concurrency
+
+
+def _retry_rem(outcome: np.ndarray, planned_c: np.ndarray,
+               burned_c: np.ndarray, rem, period_s) -> np.ndarray:
+    """Per-row remainder fraction (of an ORIGINAL full session's compute)
+    a retry child must redo, given its parent attempt's outcome. Failed
+    attempts redo their parent's whole remainder ``rem``; interrupted
+    attempts salvage local progress to the last checkpoint —
+    ``floor(burned / P) * P`` of the parent's (already rem-scaled)
+    planned compute survives the interruption, so the child's remainder
+    shrinks by that completed fraction. With ``period_s`` == 0 (salvage
+    off) every entry stays at its parent's ``rem`` (1.0 for fresh
+    dispatches), and all downstream ``compute_s * rem`` multiplies are
+    IEEE-exact no-ops — fault-only runs are untouched bit for bit.
+    Row-pure, shared verbatim by the scalar oracle."""
+    F, I = OUTCOME_CODE["failed"], OUTCOME_CODE["interrupted"]
+    out = np.where((outcome == F) | (outcome == I),
+                   np.asarray(rem, np.float64), 1.0)
+    P = np.broadcast_to(np.asarray(period_s, np.float64), outcome.shape)
+    im = np.flatnonzero((outcome == I) & (P > 0))
+    if len(im):
+        salv = np.floor(burned_c[im] / P[im]) * P[im]
+        fc = planned_c[im]
+        frac = np.divide(salv, fc, out=np.zeros(len(im)), where=fc > 0)
+        out[im] = out[im] * (1.0 - frac)
+    return out
+
+
 def _sync_server_update(learner, contributors: List[int]) -> float:
     """One FedAvg server update from a round's contributor list; returns
     the fresh eval perplexity (shared by the serial and lane loops)."""
@@ -234,13 +271,21 @@ class Strategy:
         # selection policies may read the environment's grid model (the
         # carbon-aware strategy screens candidates by intensity-at-clock)
         self._estimator = est
+        # checkpoint/resume salvage only counts when a resume can actually
+        # use the checkpoint: availability churn live AND retries enabled.
+        # The estimator reads this off the log to split interrupted rows'
+        # wasted compute into salvaged (pre-checkpoint) vs lost.
+        ckpt = fed.checkpoint_period_s \
+            if (sampler.has_avail and fed.retry_limit > 0) else 0.0
         if run.telemetry == "streaming":
             log: TaskLog = StreamedLog(est, sampler.device_names,
                                        sampler.country_names, seed=fed.seed,
                                        sample=run.telemetry_sample,
-                                       mode=self.mode)
+                                       mode=self.mode,
+                                       checkpoint_period_s=ckpt)
         else:
             log = TaskLog()
+            log.checkpoint_period_s = ckpt
         stop = _Stopper(run)
         t, rounds, ppl = self._loop(model_cfg, fed, learner, sampler, log,
                                     stop, on_round)
@@ -287,6 +332,11 @@ class SyncStrategy(Strategy):
         rounds = 0
         ppl = float(model_cfg.vocab_size)
         goal = min(fed.aggregation_goal, fed.concurrency)
+        # explicit over-selection: surplus sessions past the round close
+        # relabel "cancelled" (dropped is the implicit-deadline legacy)
+        ndisp = _sync_dispatch_n(fed, goal)
+        lc = OUTCOME_CODE["cancelled"] if fed.over_select_fraction > 0 \
+            else None
         # graceful degradation: a round that closes with fewer than
         # `quorum` completions is *starved* — it still charges its cohort,
         # but the server skips the update; `starvation_patience`
@@ -295,11 +345,12 @@ class SyncStrategy(Strategy):
         streak = 0
 
         while True:
-            cohort = _select_cohort(rng, fed.concurrency,
-                                    population=_POPULATION)
-            if sampler.has_faults:
+            cohort = _select_cohort(rng, ndisp, population=_POPULATION)
+            if sampler.has_faults or (sampler.has_avail
+                                      and fed.retry_limit > 0):
                 n_ok, contributors, round_end = self._faulty_round(
-                    fed, sampler, log, cohort, rounds, t, goal)
+                    fed, sampler, log, cohort, rounds, t, goal,
+                    late_code=lc)
             elif len(cohort) <= _DISPATCH_CHUNK:
                 pb = sampler.plan_batch(cohort, rounds)
                 # pass 1: tentative outcomes, find when the goal-th result
@@ -319,7 +370,8 @@ class SyncStrategy(Strategy):
                 # pass 2: sessions against the round deadline (cancel
                 # stragglers)
                 fb, ok2 = sampler.resolve_batch(pb, rounds, t,
-                                                deadline=round_end)
+                                                deadline=round_end,
+                                                late_code=lc)
                 log.log_batch(fb)
                 n_ok = int(np.count_nonzero(ok2))
                 contributors: List[int] = \
@@ -352,7 +404,7 @@ class SyncStrategy(Strategy):
                     ch = cohort[lo:lo + _DISPATCH_CHUNK]
                     fb, ok2c = sampler.resolve_batch(
                         sampler.plan_batch(ch, rounds), rounds, t,
-                        deadline=round_end)
+                        deadline=round_end, late_code=lc)
                     log.log_batch(fb)
                     ok2_parts.append(ok2c)
                 ok2 = np.concatenate(ok2_parts)
@@ -381,31 +433,43 @@ class SyncStrategy(Strategy):
         return t, rounds, ppl
 
     @staticmethod
-    def _faulty_round(fed, sampler, log, cohort, rounds, t, goal):
-        """One sync round under a live fault model: resolve the cohort
-        with no deadline, chase failed slots through up to ``retry_limit``
-        re-dispatches (exponential backoff, distinct counter-keyed retry
-        ids — every attempt is charged), close the round over ALL
-        attempts' survivors, then patch the deadline in and log the
-        blocks attempt-major. Cohorts resolve one-shot (no
-        ``_DISPATCH_CHUNK`` pass — retry waves shrink geometrically, the
-        cohort block dominates). Returns (n_ok, contributors,
-        round_end)."""
-        F = OUTCOME_CODE["failed"]
+    def _faulty_round(fed, sampler, log, cohort, rounds, t, goal,
+                      late_code=None):
+        """One sync round under a live fault and/or churn model: resolve
+        the cohort with no deadline, chase failed AND interrupted slots
+        through up to ``retry_limit`` re-dispatches (exponential backoff,
+        distinct counter-keyed retry ids — every attempt is charged),
+        close the round over ALL attempts' survivors, then patch the
+        deadline in and log the blocks attempt-major. Checkpoint/resume:
+        when ``checkpoint_period_s`` > 0 an interrupted attempt's retry
+        redoes only the un-checkpointed remainder (its planned compute is
+        scaled by the running ``rem`` fraction — see ``_retry_rem``).
+        Cohorts resolve one-shot (no ``_DISPATCH_CHUNK`` pass — retry
+        waves shrink geometrically, the cohort block dominates). Returns
+        (n_ok, contributors, round_end)."""
+        F, I = OUTCOME_CODE["failed"], OUTCOME_CODE["interrupted"]
+        salv_on = sampler.has_avail and fed.retry_limit > 0 \
+            and fed.checkpoint_period_s > 0
         pos = np.arange(len(cohort), dtype=np.int64)
         ids = cohort
         starts = t
+        rem = np.ones(len(cohort))
         blocks = []
         for att in range(fed.retry_limit + 1):
             pb = sampler.plan_batch(ids, rounds)
+            if salv_on and att:
+                np.multiply(pb.compute_s, rem, out=pb.compute_s)
             fb, ok = sampler.resolve_batch(pb, rounds, starts)
             blocks.append((pb, fb, ok))
-            fm = np.flatnonzero(fb.outcome == F)
+            fm = np.flatnonzero((fb.outcome == F) | (fb.outcome == I))
             if att == fed.retry_limit or not len(fm):
                 break
-            # failed slots re-dispatch: a fresh client id off the retry
-            # stream (keyed by cohort position + a round-scoped attempt
-            # counter) after an exponential-backoff delay
+            # failed/interrupted slots re-dispatch: a fresh client id off
+            # the retry stream (keyed by cohort position + a round-scoped
+            # attempt counter) after an exponential-backoff delay
+            if salv_on:
+                rem = _retry_rem(fb.outcome, pb.compute_s, fb.compute_s,
+                                 rem, fed.checkpoint_period_s)[fm]
             pos = pos[fm]
             ids = retry_stream_ids(
                 fed.seed, pos,
@@ -423,9 +487,12 @@ class SyncStrategy(Strategy):
         n_ok = 0
         contributors: List[int] = []
         for att, (pb, fb, ok) in enumerate(blocks):
-            sampler.apply_deadline(pb, fb, ok, round_end)
+            sampler.apply_deadline(pb, fb, ok, round_end,
+                                   late_code=late_code)
             if att < fed.retry_limit:
                 # a retry went out for every one of these failures
+                # (interrupted rows keep their label — the outcome
+                # taxonomy separates churn from the crash-retry path)
                 fb.outcome[fb.outcome == F] = OUTCOME_CODE["retried"]
             log.log_batch(fb)
             n_ok += int(np.count_nonzero(ok))
@@ -452,58 +519,86 @@ class SyncStrategy(Strategy):
         starvation bookkeeping runs per lane on scalars."""
         lanes = pack.lanes
         rngs = [np.random.default_rng(f.seed + 1) for f in pack.feds]
-        concs = [f.concurrency for f in pack.feds]
         goals = [min(f.aggregation_goal, f.concurrency) for f in pack.feds]
+        ndisp = [_sync_dispatch_n(f, goals[i])
+                 for i, f in enumerate(pack.feds)]
         L = pack.n_lanes
         quorum = [max(1, int(np.ceil(f.min_report_fraction * goals[i])))
                   for i, f in enumerate(pack.feds)]
-        retry_lim = np.asarray([f.retry_limit if s.has_faults else 0
+        retry_lim = np.asarray([f.retry_limit
+                                if (s.has_faults or s.has_avail) else 0
                                 for f, s in zip(pack.feds, lanes.samplers)],
                                np.int64)
         retry_bo = np.asarray([f.retry_backoff_s for f in pack.feds])
         any_faults = any(s.has_faults for s in lanes.samplers)
+        # retry waves run when any lane chases failures (fault lanes
+        # resolve one-shot even at retry 0, like the serial route) or
+        # retries churn interruptions
+        any_retry = any_faults or bool((retry_lim > 0).any())
+        # per-lane checkpoint salvage (see serial _faulty_round)
+        salv_P = np.asarray([f.checkpoint_period_s
+                             if (s.has_avail and f.retry_limit > 0) else 0.0
+                             for f, s in zip(pack.feds, lanes.samplers)])
+        any_salv = bool((salv_P > 0).any())
+        # per-lane late-straggler label (cancelled under over-selection)
+        late_arr = np.asarray(
+            [OUTCOME_CODE["cancelled"] if f.over_select_fraction > 0
+             else OUTCOME_CODE["dropped"] for f in pack.feds], np.int8)
+        any_osel = any(f.over_select_fraction > 0 for f in pack.feds)
         streak = np.zeros(L, np.int64)
         F, R = OUTCOME_CODE["failed"], OUTCOME_CODE["retried"]
+        I = OUTCOME_CODE["interrupted"]
         k = 0                        # == every active lane's `rounds`
         while pack.active.any():
             act = np.flatnonzero(pack.active)
-            cohorts = [_select_cohort(rngs[i], concs[i], _POPULATION)
+            cohorts = [_select_cohort(rngs[i], ndisp[i], _POPULATION)
                        for i in act]
-            sizes = np.asarray([concs[i] for i in act], np.int64)
+            sizes = np.asarray([ndisp[i] for i in act], np.int64)
             offs = np.concatenate([[0], np.cumsum(sizes)])
             lane_row = np.repeat(act, sizes)
             start = pack.t[lane_row]
             ids = np.concatenate(cohorts)
             total = len(lane_row)
-            # fault lanes resolve one-shot, like the serial fault path
-            chunked = total > _DISPATCH_CHUNK and not any_faults
+            # retry lanes resolve one-shot, like the serial fault path
+            chunked = total > _DISPATCH_CHUNK and not any_retry
             if not chunked:
                 pb, fb, ok = lanes.plan_resolve(lane_row, ids, k, start)
                 blocks = [(lane_row, pb, fb, ok)]
-                if any_faults:
+                if any_retry:
                     # lockstep retry waves: wave a re-dispatches every
-                    # lane's attempt-(a-1) failures in ONE batched resolve
-                    prev_lane, prev_fb = lane_row, fb
+                    # lane's attempt-(a-1) failures AND interruptions in
+                    # ONE batched resolve
+                    prev_lane, prev_pb, prev_fb = lane_row, pb, fb
                     prev_pos = np.concatenate(
-                        [np.arange(concs[i], dtype=np.int64) for i in act])
+                        [np.arange(ndisp[i], dtype=np.int64) for i in act])
+                    prev_rem = np.ones(total) if any_salv else None
                     att = 0
                     while True:
-                        sel = np.flatnonzero((prev_fb["outcome"] == F)
-                                             & (retry_lim[prev_lane] > att))
+                        sel = np.flatnonzero(
+                            ((prev_fb["outcome"] == F)
+                             | (prev_fb["outcome"] == I))
+                            & (retry_lim[prev_lane] > att))
                         att += 1
                         if not len(sel):
                             break
                         lane_r = prev_lane[sel]
                         pos_r = prev_pos[sel]
+                        rem_r = None
+                        if any_salv:
+                            rem_r = _retry_rem(
+                                prev_fb["outcome"], prev_pb.compute_s,
+                                prev_fb["compute_s"], prev_rem,
+                                salv_P[prev_lane])[sel]
                         ids_r = lanes.retry_stream_ids(
                             lane_r, pos_r,
                             k * (retry_lim[lane_r] + 1) + att, _POPULATION)
                         starts_r = prev_fb["end_t"][sel] \
                             + retry_bo[lane_r] * 2.0 ** (att - 1)
                         pb_r, fb_r, ok_r = lanes.plan_resolve(
-                            lane_r, ids_r, k, starts_r)
+                            lane_r, ids_r, k, starts_r, rem=rem_r)
                         blocks.append((lane_r, pb_r, fb_r, ok_r))
-                        prev_lane, prev_fb, prev_pos = lane_r, fb_r, pos_r
+                        prev_lane, prev_pb, prev_fb = lane_r, pb_r, fb_r
+                        prev_pos, prev_rem = pos_r, rem_r
                 # per-block per-lane segment bounds (every block stays
                 # lane-sorted: attempt 0 by construction, retry waves
                 # because flatnonzero preserves the sorted row order)
@@ -531,9 +626,10 @@ class SyncStrategy(Strategy):
                 deadline_lane = np.empty(L)
                 deadline_lane[act] = round_end
                 for att_i, (lane_b, pb_b, fb_b, ok_b) in enumerate(blocks):
-                    lanes.apply_deadline(pb_b, fb_b, ok_b,
-                                         deadline_lane[lane_b])
-                    if any_faults:
+                    lanes.apply_deadline(
+                        pb_b, fb_b, ok_b, deadline_lane[lane_b],
+                        late_code=late_arr[lane_b] if any_osel else None)
+                    if any_retry:
                         m = (fb_b["outcome"] == F) \
                             & (retry_lim[lane_b] > att_i)
                         fb_b["outcome"][m] = R
@@ -582,8 +678,10 @@ class SyncStrategy(Strategy):
                     sc = slice(lo, lo + _DISPATCH_CHUNK)
                     pb_c, fb_c, ok2_c = lanes.plan_resolve(
                         lane_row[sc], ids[sc], k, start[sc])
-                    lanes.apply_deadline(pb_c, fb_c, ok2_c,
-                                         deadline_rows[sc])
+                    lanes.apply_deadline(
+                        pb_c, fb_c, ok2_c, deadline_rows[sc],
+                        late_code=(late_arr[lane_row[sc]]
+                                   if any_osel else None))
                     pack.acc.append(lane=lane_row[sc], **fb_c)
                     ok2_parts.append(ok2_c)
                 ok2 = np.concatenate(ok2_parts)
@@ -631,11 +729,14 @@ _DEFERRED = ("cid", "ver", "start", "d", "c", "u", "bd", "bu",
 
 def _async_rows(slots: np.ndarray, gens: np.ndarray, version: int,
                 batch: SessionBatch, ok: np.ndarray,
-                att: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+                att: Optional[np.ndarray] = None,
+                nrem: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
     """One column block of dispatched async sessions (slot + generation
     identify the session; everything else comes from ``resolve_batch``).
     ``att`` is the row's consecutive-failure retry counter (0 = a fresh
-    dispatch, not a retry)."""
+    dispatch, not a retry); ``nrem`` the remainder fraction this row's
+    retry successor would redo (1.0 outside checkpoint/resume salvage —
+    see ``_retry_rem``)."""
     n = len(ok)
     return dict(slot=np.asarray(slots, np.int64),
                 gen=np.asarray(gens, np.int64),
@@ -647,12 +748,15 @@ def _async_rows(slots: np.ndarray, gens: np.ndarray, version: int,
                 dev=batch.device_idx, ctry=batch.country_idx,
                 out=batch.outcome, ok=ok,
                 att=(np.zeros(n, np.int64) if att is None
-                     else np.asarray(att, np.int64)))
+                     else np.asarray(att, np.int64)),
+                nrem=(np.ones(n) if nrem is None
+                      else np.asarray(nrem, np.float64)))
 
 
 def _async_rows_cols(slots: np.ndarray, gens: np.ndarray, version: int,
                      cols: Dict[str, np.ndarray], ok: np.ndarray,
-                     att: Optional[np.ndarray] = None
+                     att: Optional[np.ndarray] = None,
+                     nrem: Optional[np.ndarray] = None
                      ) -> Dict[str, np.ndarray]:
     """``_async_rows`` over a LaneSampler column dict instead of a
     SessionBatch (the lane-batched async loop's dispatch format)."""
@@ -668,7 +772,9 @@ def _async_rows_cols(slots: np.ndarray, gens: np.ndarray, version: int,
                 dev=cols["device_idx"], ctry=cols["country_idx"],
                 out=cols["outcome"], ok=ok,
                 att=(np.zeros(n, np.int64) if att is None
-                     else np.asarray(att, np.int64)))
+                     else np.asarray(att, np.int64)),
+                nrem=(np.ones(n) if nrem is None
+                      else np.asarray(nrem, np.float64)))
 
 
 def _truncate_cancelled(flight: Dict[str, np.ndarray], idx: np.ndarray,
@@ -751,11 +857,18 @@ class AsyncStrategy(Strategy):
         max_t = stop.run.max_hours * 3600.0
         acc = self._make_sink(log, sampler.device_names,
                               sampler.country_names)
-        # recovery policy: failed rows chain a RETRY successor (distinct
-        # id stream, exponential backoff, attempt counter up) instead of
-        # a fresh replacement; `att` rides the flight/expansion columns
-        retry_on = sampler.has_faults and fed.retry_limit > 0
+        # recovery policy: failed AND churn-interrupted rows chain a RETRY
+        # successor (distinct id stream, exponential backoff, attempt
+        # counter up) instead of a fresh replacement; `att` rides the
+        # flight/expansion columns. Checkpoint/resume: an interrupted
+        # row's retry redoes only the un-checkpointed remainder (`nrem`
+        # rides along — see ``_retry_rem``).
+        retry_on = (sampler.has_faults or sampler.has_avail) \
+            and fed.retry_limit > 0
+        salv_on = retry_on and sampler.has_avail \
+            and fed.checkpoint_period_s > 0
         F, R = OUTCOME_CODE["failed"], OUTCOME_CODE["retried"]
+        I = OUTCOME_CODE["interrupted"]
 
         # initial cohort: batched plan/resolve with jittered starts, in
         # bounded chunks at population scale (row-pure, so chunking is
@@ -766,12 +879,14 @@ class AsyncStrategy(Strategy):
         flight: Optional[Dict[str, np.ndarray]] = None
         for lo in range(0, conc, _DISPATCH_CHUNK):
             sc = slice(lo, min(lo + _DISPATCH_CHUNK, conc))
-            b0, ok0 = sampler.resolve_batch(
-                sampler.plan_batch(cohort[sc], version), version,
-                starts0[sc])
+            pb0 = sampler.plan_batch(cohort[sc], version)
+            b0, ok0 = sampler.resolve_batch(pb0, version, starts0[sc])
+            nr0 = _retry_rem(b0.outcome, pb0.compute_s, b0.compute_s,
+                             np.ones(len(ok0)), fed.checkpoint_period_s) \
+                if salv_on else None
             rows = _async_rows(np.arange(sc.start, sc.stop, dtype=np.int64),
                                np.zeros(sc.stop - sc.start, np.int64),
-                               version, b0, ok0)
+                               version, b0, ok0, nrem=nr0)
             if flight is None and conc <= _DISPATCH_CHUNK:
                 flight = rows
                 break
@@ -796,6 +911,7 @@ class AsyncStrategy(Strategy):
             slot_all, gen_all = flight["slot"], flight["gen"]
             end_all, ok_all = flight["end"], flight["ok"]
             att_all = flight["att"]
+            nrem_all = flight["nrem"]
             out_run = flight["out"] if retry_on else None
             parts: Dict[str, List[np.ndarray]] = \
                 {f: [flight[f]] for f in _DEFERRED}
@@ -823,7 +939,8 @@ class AsyncStrategy(Strategy):
                 starts_n = np.maximum(t0, end_all[need])
                 if retry_on:
                     prev_att = att_all[need]
-                    rf = (out_run[need] == F) & (prev_att < fed.retry_limit)
+                    rf = ((out_run[need] == F) | (out_run[need] == I)) \
+                        & (prev_att < fed.retry_limit)
                     att_n = np.where(rf, prev_att + 1, 0)
                     starts_n = starts_n + np.where(
                         rf, fed.retry_backoff_s * 2.0 ** prev_att, 0.0)
@@ -834,8 +951,17 @@ class AsyncStrategy(Strategy):
                 if retry_on and rf.any():
                     ids_n[rf] = retry_stream_ids(fed.seed, slots_n[rf],
                                                  gens_n[rf], _POPULATION)
-                bn, okn = sampler.resolve_batch(
-                    sampler.plan_batch(ids_n, version), version, starts_n)
+                pb_n = sampler.plan_batch(ids_n, version)
+                rem_n = None
+                if salv_on:
+                    # retry children redo their parent's remainder only
+                    rem_n = np.where(rf, nrem_all[need], 1.0)
+                    np.multiply(pb_n.compute_s, rem_n, out=pb_n.compute_s)
+                bn, okn = sampler.resolve_batch(pb_n, version, starts_n)
+                nrem_n = _retry_rem(bn.outcome, pb_n.compute_s,
+                                    bn.compute_s, rem_n,
+                                    fed.checkpoint_period_s) \
+                    if salv_on else None
                 succ[need] = n_rows + np.arange(len(need))
                 n_rows += len(need)
                 succ = np.concatenate(
@@ -845,7 +971,9 @@ class AsyncStrategy(Strategy):
                 end_all = np.concatenate([end_all, bn.end_t])
                 ok_all = np.concatenate([ok_all, okn])
                 att_all = np.concatenate([att_all, att_n])
-                new = _async_rows(slots_n, gens_n, version, bn, okn, att_n)
+                new = _async_rows(slots_n, gens_n, version, bn, okn, att_n,
+                                  nrem=nrem_n)
+                nrem_all = np.concatenate([nrem_all, new["nrem"]])
                 for f in _DEFERRED:
                     parts[f].append(new[f])
                 if retry_on:
@@ -866,6 +994,7 @@ class AsyncStrategy(Strategy):
             assert succ[pop_idx].min() >= 0
             A = {"slot": slot_all, "gen": gen_all,
                  "end": end_all, "ok": ok_all, "att": att_all,
+                 "nrem": nrem_all,
                  **{f: np.concatenate(p) if len(p) > 1 else p[0]
                     for f, p in parts.items()}}
             # ---- log pops, advance per-slot chains ----------------------
@@ -929,10 +1058,14 @@ class AsyncStrategy(Strategy):
                                         np.asarray([b_slot], np.int64),
                                         np.asarray([b_gen], np.int64),
                                         np.asarray([t]), version)
-            b1, okb = sampler.resolve_batch(
-                sampler.plan_batch(nid, version), version, t)
+            pb_b1 = sampler.plan_batch(nid, version)
+            b1, okb = sampler.resolve_batch(pb_b1, version, t)
+            nrem_b = _retry_rem(b1.outcome, pb_b1.compute_s, b1.compute_s,
+                                np.ones(1), fed.checkpoint_period_s) \
+                if salv_on else None
             row = _async_rows(np.asarray([b_slot], np.int64),
-                              np.asarray([b_gen], np.int64), version, b1, okb)
+                              np.asarray([b_gen], np.int64), version, b1,
+                              okb, nrem=nrem_b)
             for f in flight:
                 flight[f][b_slot] = row[f][0]
 
@@ -973,11 +1106,18 @@ class AsyncStrategy(Strategy):
         max_rounds = [r.max_rounds for r in pack.runs]
         # per-lane recovery policy (0 disables; see serial `_loop`)
         retry_lim = np.asarray(
-            [f.retry_limit if s.has_faults else 0
+            [f.retry_limit if (s.has_faults or s.has_avail) else 0
              for f, s in zip(feds, lanes.samplers)], np.int64)
         retry_bo = np.asarray([f.retry_backoff_s for f in feds])
         retry_on = bool((retry_lim > 0).any())
+        # per-lane checkpoint salvage (see serial `_loop`)
+        lane_P = np.asarray(
+            [f.checkpoint_period_s
+             if (s.has_avail and f.retry_limit > 0) else 0.0
+             for f, s in zip(feds, lanes.samplers)])
+        any_salv = bool((lane_P > 0).any())
         F, R = OUTCOME_CODE["failed"], OUTCOME_CODE["retried"]
+        I = OUTCOME_CODE["interrupted"]
         # ---- initial cohorts: one batched resolve across all lanes ------
         rngs = [np.random.default_rng(f.seed + 2) for f in feds]
         cohorts, starts0 = [], []
@@ -992,21 +1132,30 @@ class AsyncStrategy(Strategy):
         st0 = np.concatenate(starts0)
         n_slots = len(slot_of)
         if n_slots <= _DISPATCH_CHUNK:
-            _, b0, ok0 = lanes.plan_resolve(lane_of, ids0, 0, st0)
+            pb0, b0, ok0 = lanes.plan_resolve(lane_of, ids0, 0, st0)
+            nr0 = _retry_rem(b0["outcome"], pb0.compute_s, b0["compute_s"],
+                             np.ones(n_slots), lane_P[lane_of]) \
+                if any_salv else None
             flight = _async_rows_cols(slot_of,
                                       np.zeros(n_slots, np.int64),
-                                      0, b0, ok0)
+                                      0, b0, ok0, nrem=nr0)
         else:
             # population-scale pack: bounded-chunk dispatch (row-pure,
             # bit-identical to the one-shot resolve)
             flight = None
             for lo in range(0, n_slots, _DISPATCH_CHUNK):
                 sc = slice(lo, min(lo + _DISPATCH_CHUNK, n_slots))
-                _, b0, ok0 = lanes.plan_resolve(lane_of[sc], ids0[sc], 0,
-                                                st0[sc])
+                pb0, b0, ok0 = lanes.plan_resolve(lane_of[sc], ids0[sc], 0,
+                                                  st0[sc])
+                nr0 = _retry_rem(b0["outcome"], pb0.compute_s,
+                                 b0["compute_s"],
+                                 np.ones(sc.stop - sc.start),
+                                 lane_P[lane_of[sc]]) \
+                    if any_salv else None
                 rows = _async_rows_cols(slot_of[sc],
                                         np.zeros(sc.stop - sc.start,
-                                                 np.int64), 0, b0, ok0)
+                                                 np.int64), 0, b0, ok0,
+                                        nrem=nr0)
                 if flight is None:
                     flight = {f: np.empty(n_slots, a.dtype)
                               for f, a in rows.items()}
@@ -1052,6 +1201,7 @@ class AsyncStrategy(Strategy):
             end_all = flight["end"][rows_idx]
             ok_all = flight["ok"][rows_idx]
             att_all = flight["att"][rows_idx]
+            nrem_all = flight["nrem"][rows_idx]
             out_run = flight["out"][rows_idx] if retry_on else None
             parts: Dict[str, List[np.ndarray]] = \
                 {f: [flight[f][rows_idx]] for f in _DEFERRED}
@@ -1111,7 +1261,7 @@ class AsyncStrategy(Strategy):
                 starts_n = np.maximum(t0[lanes_n], end_all[need])
                 if retry_on:
                     prev_att = att_all[need]
-                    rf = (out_run[need] == F) \
+                    rf = ((out_run[need] == F) | (out_run[need] == I)) \
                         & (prev_att < retry_lim[lanes_n])
                     att_n = np.where(rf, prev_att + 1, 0)
                     starts_n = starts_n + np.where(
@@ -1123,7 +1273,16 @@ class AsyncStrategy(Strategy):
                 if retry_on and rf.any():
                     ids_n[rf] = lanes.retry_stream_ids(
                         lanes_n[rf], slots_n[rf], gens_n[rf], _POPULATION)
-                _, bn, okn = lanes.plan_resolve(lanes_n, ids_n, k, starts_n)
+                rem_n = None
+                if any_salv:
+                    # retry children redo their parent's remainder only
+                    rem_n = np.where(rf, nrem_all[need], 1.0)
+                pb_n, bn, okn = lanes.plan_resolve(lanes_n, ids_n, k,
+                                                   starts_n, rem=rem_n)
+                nrem_n = _retry_rem(bn["outcome"], pb_n.compute_s,
+                                    bn["compute_s"], rem_n,
+                                    lane_P[lanes_n]) \
+                    if any_salv else None
                 end_n = bn["end_t"]
                 succ[need] = n_rows + np.arange(len(need))
                 unexp = np.concatenate(
@@ -1138,7 +1297,9 @@ class AsyncStrategy(Strategy):
                 end_all = np.concatenate([end_all, end_n])
                 ok_all = np.concatenate([ok_all, okn])
                 att_all = np.concatenate([att_all, att_n])
-                new = _async_rows_cols(slots_n, gens_n, k, bn, okn, att_n)
+                new = _async_rows_cols(slots_n, gens_n, k, bn, okn, att_n,
+                                       nrem=nrem_n)
+                nrem_all = np.concatenate([nrem_all, new["nrem"]])
                 for f in _DEFERRED:
                     parts[f].append(new[f])
                 if retry_on:
@@ -1152,6 +1313,7 @@ class AsyncStrategy(Strategy):
             # ---- per-lane exact close (unchanged serial logic on slices)
             A = {"slot": slot_all, "gen": gen_all,
                  "end": end_all, "ok": ok_all, "att": att_all,
+                 "nrem": nrem_all,
                  **{f: np.concatenate(p) if len(p) > 1 else p[0]
                     for f, p in parts.items()}}
             # ONE lexsort settles every lane's boundary: keying by (lane,
@@ -1271,8 +1433,12 @@ class AsyncStrategy(Strategy):
                 rg = np.asarray([r[2] for r in redis], np.int64)
                 nid = self._lane_replacement_ids(pack, rl, rs, rg,
                                                  pack.t[rl], k + 1)
-                _, bb, okb = lanes.plan_resolve(rl, nid, k + 1, pack.t[rl])
-                row = _async_rows_cols(rs, rg, k + 1, bb, okb)
+                pb_b, bb, okb = lanes.plan_resolve(rl, nid, k + 1,
+                                                   pack.t[rl])
+                nrem_b = _retry_rem(bb["outcome"], pb_b.compute_s,
+                                    bb["compute_s"], np.ones(len(rl)),
+                                    lane_P[rl]) if any_salv else None
+                row = _async_rows_cols(rs, rg, k + 1, bb, okb, nrem=nrem_b)
                 fl_rows = offsets[rl] + rs
                 for f in flight:
                     flight[f][fl_rows] = row[f]
@@ -1296,6 +1462,13 @@ def carbon_pick_ids(sampler: SessionSampler, intensity, fed: FederatedConfig,
     clock; rows under the ``fed.carbon_explore`` floor (and rows where all
     ``_CARBON_PROBES`` candidates miss) take the unscreened first probe.
 
+    Under a live ``AvailabilityModel`` the screen also intersects each
+    candidate's admission test (its own counter-keyed admission uniform vs
+    eligibility at the dispatch clock — the exact draw ``resolve`` will
+    re-derive), preferring low-carbon AND admissible; rows with no
+    admissible low-carbon candidate fall back to the first admissible
+    probe, then to the unscreened first probe.
+
     Every output is a pure per-row function of (seed, slot, generation,
     start clock, version) and the environment — never of batch grouping or
     global arrival order — so the serial loop, the lane-batched engine and
@@ -1307,26 +1480,41 @@ def carbon_pick_ids(sampler: SessionSampler, intensity, fed: FederatedConfig,
     cand = (u[:, 1:] * _POPULATION).astype(np.int64)
     names = sampler.country_names
     k = min(int(fed.carbon_topk), len(names))
-    if k >= len(names):
+    if k >= len(names) and not sampler.has_avail:
         return cand[:, 0]
+    starts = np.broadcast_to(np.asarray(starts, np.float64), (n,))
     ctry = sampler.country_draw(cand.reshape(-1), version) \
         .reshape(n, _CARBON_PROBES)
-    # the allowed set is "intensity <= the k-th smallest" — a value
-    # threshold, not an argpartition rank, so ties resolve identically
-    # everywhere regardless of partition order
-    tab = intensity.vocab_schedule(names)
-    if not tab.any_dynamic:
-        # static grid: the allowed-country mask is clock-independent —
-        # one (V,) threshold serves every row (the window merge issues
-        # many small dispatch batches; skip the per-row (n, V) work)
-        allowed_row = tab.static <= np.partition(tab.static, k - 1)[k - 1]
-        allowed = allowed_row[ctry]
+    if k >= len(names):
+        allowed = np.ones((n, _CARBON_PROBES), bool)
     else:
-        starts = np.broadcast_to(np.asarray(starts, np.float64), (n,))
-        ci = intensity.intensity_at(names, starts[:, None])   # (n, V)
-        tau = np.partition(ci, k - 1, axis=1)[:, k - 1:k]
-        allowed = (ci <= tau)[np.arange(n)[:, None], ctry]
-    j = np.where(allowed.any(axis=1), np.argmax(allowed, axis=1), 0)
+        # the allowed set is "intensity <= the k-th smallest" — a value
+        # threshold, not an argpartition rank, so ties resolve identically
+        # everywhere regardless of partition order
+        tab = intensity.vocab_schedule(names)
+        if not tab.any_dynamic:
+            # static grid: the allowed-country mask is clock-independent —
+            # one (V,) threshold serves every row (the window merge issues
+            # many small dispatch batches; skip the per-row (n, V) work)
+            allowed_row = tab.static <= np.partition(tab.static,
+                                                     k - 1)[k - 1]
+            allowed = allowed_row[ctry]
+        else:
+            ci = intensity.intensity_at(names, starts[:, None])   # (n, V)
+            tau = np.partition(ci, k - 1, axis=1)[:, k - 1:k]
+            allowed = (ci <= tau)[np.arange(n)[:, None], ctry]
+    if sampler.has_avail:
+        ua = sampler.admission_uniforms(cand.reshape(-1), version) \
+            .reshape(n, _CARBON_PROBES)
+        e = sampler._avail_tab.at(ctry.reshape(-1),
+                                  np.repeat(starts, _CARBON_PROBES)) \
+            .reshape(n, _CARBON_PROBES)
+        adm = ua < e
+        both = allowed & adm
+        j = np.where(both.any(axis=1), np.argmax(both, axis=1),
+                     np.where(adm.any(axis=1), np.argmax(adm, axis=1), 0))
+    else:
+        j = np.where(allowed.any(axis=1), np.argmax(allowed, axis=1), 0)
     j[u[:, 0] < fed.carbon_explore] = 0
     return cand[np.arange(n), j]
 
@@ -1440,15 +1628,22 @@ class _LanePack:
         assert all((t.run.telemetry == "streaming") == self.streaming
                    for t in tasks), \
             "lane packs must not mix streaming and full telemetry"
+        # per-lane effective checkpoint period (see Strategy.run)
+        self.ckpt = [t.fed.checkpoint_period_s
+                     if (t.sampler.has_avail and t.fed.retry_limit > 0)
+                     else 0.0 for t in tasks]
         if self.streaming:
             self.logs: List[TaskLog] = [
                 StreamedLog(t.estimator, t.sampler.device_names,
                             t.sampler.country_names, seed=t.fed.seed,
-                            sample=t.run.telemetry_sample, mode=t.fed.mode)
-                for t in tasks]
+                            sample=t.run.telemetry_sample, mode=t.fed.mode,
+                            checkpoint_period_s=self.ckpt[i])
+                for i, t in enumerate(tasks)]
             self.acc = _LaneStreamSink(self.logs)
         else:
             self.logs = [TaskLog() for _ in tasks]
+            for i, log in enumerate(self.logs):
+                log.checkpoint_period_s = self.ckpt[i]
             self.acc = LaneAccumulator(self.lanes.device_names,
                                        self.lanes.country_names)
         self.t = np.zeros(self.n_lanes)
@@ -1510,7 +1705,8 @@ class LaneRunner:
                                   [t.estimator for t in tasks],
                                   pack.lanes.device_names,
                                   pack.lanes.country_names,
-                                  [log.duration_s for log in pack.logs])
+                                  [log.duration_s for log in pack.logs],
+                                  checkpoint_period_s=pack.ckpt)
         out: List[TaskResult] = []
         for i, task in enumerate(tasks):
             log = pack.logs[i]

@@ -1,0 +1,384 @@
+"""Availability is first-class (PR 8): diurnal device eligibility,
+mid-session churn with checkpoint/resume salvage, and sync
+over-selection.
+
+The contract under test:
+
+* an all-available ``AvailabilityModel`` (the default — even with the
+  checkpoint/retry knobs armed) is **bit-for-bit** today's
+  availability-blind engine, on static AND diurnal intensity schedules;
+* with availability gating + churn live, the columnar engines, lane
+  packs and the scalar oracle agree seed for seed — including the
+  checkpoint/resume salvage arithmetic and sync over-selection;
+* the waste split is exact: ``wasted_kg == salvaged_kg + lost_kg`` and
+  ``contributed_kg + wasted_kg == total_kg`` (plain ``==``, not approx)
+  in materialized AND streaming telemetry, and the two paths agree
+  bit-for-bit;
+* sync over-selection dispatches ``ceil((1+f)*goal)``, closes on the
+  goal-th completer and cancels (and charges) the surplus;
+* the carbon-aware CO2e win over async survives the anti-correlated
+  default availability model (the PR's acceptance criterion);
+* every new construction-time knob validates with a ``ValueError``, and
+  the whole model JSON round-trips through ``ExperimentSpec``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import (Environment, Experiment, ExperimentSpec, ModelRef,
+                       sweep)
+from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.availability import (AVAIL_SHAPE, AvailabilityModel,
+                                     diurnal_availability)
+from repro.core.carbon import DIURNAL_SHAPE
+from repro.core.faults import FaultModel
+from repro.core.streaming import StreamedLog
+from repro.core.telemetry import OUTCOMES
+from repro.federated.reference import run_scalar
+from repro.federated.runtime import get_strategy
+from repro.federated.surrogate import SurrogateLearner
+
+CFG = get_config("paper-charlm")
+
+_COLS = ("client_id", "round_idx", "device_idx", "country_idx",
+         "download_s", "compute_s", "upload_s", "bytes_down", "bytes_up",
+         "start_t", "end_t", "outcome", "staleness")
+
+_MIX = tuple(Environment().country_mix)
+
+# canonical anti-correlated evening-charging-peak model (3 h segments:
+# admission gating dominates, churn needs the task clock to cross hours)
+_DIURNAL_AV = diurnal_availability(_MIX)
+# fine-grained churny model: 288 alternating 5-minute segments, so an
+# admitted draw in the (0.45, 0.95) band exits eligibility at the next
+# boundary — mid-session churn within minutes-long sessions
+_CHURNY_AV = AvailabilityModel(
+    eligibility_schedule={c: (0.95, 0.45) * 144 for c in _MIX})
+
+_AVAILS = (_DIURNAL_AV, _CHURNY_AV)
+
+
+def _spec(mode, conc, goal_frac, seed, max_rounds, avail=_CHURNY_AV,
+          env_kw=None, telemetry="full", dropout=0.05,
+          **fed_kw) -> ExperimentSpec:
+    return ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(
+            mode=mode, concurrency=conc,
+            aggregation_goal=max(1, int(conc * goal_frac)),
+            seed=seed, dropout_rate=dropout, **fed_kw),
+        run=RunConfig(target_perplexity=175.0, max_rounds=max_rounds,
+                      telemetry=telemetry, telemetry_sample=64),
+        environment=Environment(availability=avail, **(env_kw or {})),
+        learner="surrogate")
+
+
+def _assert_same(res_a, res_b, cols=True) -> None:
+    sa, sb = res_a.summary(), res_b.summary()
+    assert sa == sb, {k: (sa[k], sb[k]) for k in sa if sa[k] != sb[k]}
+    assert res_a.log.participation() == res_b.log.participation()
+    if cols:
+        ca, cb = res_a.log.columns(), res_b.log.columns()
+        for f in _COLS:
+            assert np.array_equal(getattr(ca, f), getattr(cb, f)), f
+
+
+def _assert_split_exact(c) -> None:
+    """The PR's accounting identity, as plain float equality."""
+    assert c.wasted_kg == c.salvaged_kg + c.lost_kg
+    assert c.contributed_kg + c.wasted_kg == c.total_kg
+
+
+# ------------------------------------------------------ all-available identity
+@pytest.mark.parametrize("mode", ["sync", "async", "carbon-aware"])
+@pytest.mark.parametrize("diurnal", [False, True])
+def test_all_available_model_is_bit_identical(mode, diurnal):
+    """The default AvailabilityModel — even with checkpoint_period_s and
+    retry_limit armed — takes the availability-free fast path untouched:
+    summaries AND session columns are bit-for-bit the availability-blind
+    run, on static and diurnal intensity schedules."""
+    env_kw = {"intensity_schedule": Environment.preset("diurnal")
+              .intensity_schedule} if diurnal else {}
+    armed = _spec(mode, 24, 0.8, 11, 8, avail=AvailabilityModel(),
+                  env_kw=env_kw, retry_limit=3, retry_backoff_s=60.0,
+                  checkpoint_period_s=300.0)
+    plain = _spec(mode, 24, 0.8, 11, 8, avail=AvailabilityModel(),
+                  env_kw=env_kw)
+    assert not AvailabilityModel().enabled
+    ra, rb = Experiment(armed).run(), Experiment(plain).run()
+    _assert_same(ra, rb)
+    assert ra.log.participation().get("interrupted", 0) == 0
+    # the waste split degenerates cleanly: nothing salvaged, lost == waste
+    assert ra.carbon.salvaged_kg == 0.0
+    assert ra.carbon.lost_kg == ra.carbon.wasted_kg
+
+
+# --------------------------------------------------- serial == lane == oracle
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_churny_lane_pack_matches_serial_property(seed0):
+    """Randomized heterogeneous packs (all three modes, both availability
+    models, faults riding along, mixed checkpoint / retry / over-selection
+    knobs) are bit-for-bit equal to per-spec serial runs — summary scalars
+    AND session columns. Lanes with DIFFERENT AvailabilityModels pack
+    together, including availability-free lanes."""
+    rng = np.random.default_rng(seed0)
+    specs = []
+    for j in range(int(rng.integers(3, 6))):
+        mode = ("sync", "async", "carbon-aware")[int(rng.integers(3))]
+        avail = (_DIURNAL_AV, _CHURNY_AV,
+                 AvailabilityModel())[int(rng.integers(3))]
+        fault = (FaultModel(),
+                 FaultModel(hazard={"WORLD": 0.08},
+                            seed=3))[int(rng.integers(2))]
+        specs.append(_spec(
+            mode=mode, conc=int(rng.integers(10, 40)),
+            goal_frac=float(rng.uniform(0.4, 1.0)),
+            seed=int(rng.integers(0, 2 ** 31)),
+            max_rounds=int(rng.integers(4, 12)),
+            avail=avail, env_kw={"fault": fault},
+            retry_limit=int(rng.integers(0, 4)),
+            retry_backoff_s=float(rng.choice([0.0, 20.0])),
+            checkpoint_period_s=float(rng.choice([0.0, 60.0, 150.0])),
+            over_select_fraction=(float(rng.choice([0.0, 0.25]))
+                                  if mode == "sync" else 0.0)))
+    serial = [Experiment(s).run() for s in specs]
+    lane = sweep(specs, workers=1, vectorize=True)
+    saw_interrupted = False
+    for rl, rs in zip(lane, serial):
+        _assert_same(rl, rs)
+        _assert_split_exact(rl.carbon)
+        if rl.log.participation().get("interrupted"):
+            saw_interrupted = True
+    assert saw_interrupted
+
+
+@pytest.mark.parametrize("mode", ["sync", "async", "carbon-aware"])
+def test_churny_engine_matches_scalar_oracle(mode):
+    """With availability churn + faults + checkpoint/resume retries live,
+    the columnar engine replays the scalar oracle seed for seed:
+    identical outcomes/participation, carbon split (salvaged and lost
+    included) to the scalar-vs-vector libm tolerance."""
+    env = Environment(availability=_CHURNY_AV,
+                      fault=FaultModel(hazard={"WORLD": 0.06}, seed=3))
+    fed = FederatedConfig(mode=mode, concurrency=28, aggregation_goal=20,
+                          seed=5, retry_limit=2, retry_backoff_s=20.0,
+                          checkpoint_period_s=60.0)
+    run = RunConfig(target_perplexity=175.0, max_rounds=12)
+    vec = get_strategy(mode).run(CFG, fed, run,
+                                 SurrogateLearner(CFG, fed, run),
+                                 sampler=env.sampler(CFG, fed, 64),
+                                 estimator=env.estimator())
+    ref = run_scalar(CFG, fed, run, SurrogateLearner(CFG, fed, run),
+                     sampler=env.sampler(CFG, fed, 64),
+                     estimator=env.estimator())
+    assert vec.rounds == ref.rounds
+    assert vec.log.participation() == ref.log.participation()
+    assert vec.log.participation().get("interrupted", 0) > 0
+    assert vec.carbon.salvaged_kg > 0
+    for k, v in vec.carbon.as_dict().items():
+        assert v == pytest.approx(ref.carbon.as_dict()[k], rel=1e-9), k
+    bv, br = vec.log.columns(), ref.log.columns()
+    dmap = np.asarray([bv.device_names.index(x) for x in br.device_names])
+    cmap = np.asarray([bv.country_names.index(x) for x in br.country_names])
+    assert np.array_equal(bv.client_id, br.client_id)
+    assert np.array_equal(bv.round_idx, br.round_idx)
+    assert np.array_equal(bv.outcome, br.outcome)
+    assert np.array_equal(bv.device_idx, dmap[br.device_idx])
+    assert np.array_equal(bv.country_idx, cmap[br.country_idx])
+    for f in ("download_s", "compute_s", "upload_s", "start_t", "end_t"):
+        np.testing.assert_allclose(getattr(bv, f), getattr(br, f),
+                                   rtol=1e-9, atol=1e-12, err_msg=f)
+
+
+# ----------------------------------------------------- exact salvage split
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_salvaged_plus_lost_sums_exactly_to_wasted(mode):
+    """Checkpointed churn splits the waste: ``wasted == salvaged + lost``
+    and ``contributed + wasted == total`` hold as plain float equality in
+    materialized AND streaming telemetry, the two agree bit-for-bit, both
+    parts are strictly positive, and the scalar estimator twin agrees."""
+    spec = _spec(mode, 24, 0.75, 5, 10, retry_limit=2,
+                 retry_backoff_s=20.0, checkpoint_period_s=60.0)
+    full = Experiment(spec).run()
+    stream = Experiment(spec.replace(run=dataclasses.replace(
+        spec.run, telemetry="streaming"))).run()
+    for res in (full, stream):
+        c = res.carbon
+        _assert_split_exact(c)
+        assert c.salvaged_kg > 0 and c.lost_kg > 0
+        assert res.log.participation().get("interrupted", 0) > 0
+    assert isinstance(stream.log, StreamedLog)
+    assert full.summary() == stream.summary()                # bit-for-bit
+    assert full.carbon.salvaged_kg == stream.carbon.salvaged_kg
+    assert full.carbon.lost_kg == stream.carbon.lost_kg
+    scalar = spec.environment.estimator().estimate_scalar(full.log)
+    assert full.carbon.salvaged_kg == pytest.approx(scalar.salvaged_kg,
+                                                    rel=1e-9)
+    assert full.carbon.lost_kg == pytest.approx(scalar.lost_kg, rel=1e-9)
+    # the split keys surface in the serialized breakdown
+    d = full.carbon.as_dict()
+    assert d["salvaged_kg"] == full.carbon.salvaged_kg
+    assert d["lost_kg"] == full.carbon.lost_kg
+
+
+def test_checkpoint_salvage_requires_resume():
+    """Salvage is only real when a retry actually resumes: with
+    ``retry_limit=0`` (no resume) or ``checkpoint_period_s=0`` nothing is
+    salvaged and ``lost == wasted`` exactly; with both armed the salvage
+    shows up, the resume arithmetic redoes only the remainder, and the
+    engine trajectory actually diverges from the redo-everything twin."""
+    from repro.federated.runtime import _retry_rem
+    from repro.core.telemetry import OUTCOME_CODE
+    base = dict(mode="async", conc=24, goal_frac=0.75, seed=5,
+                max_rounds=10, retry_backoff_s=20.0)
+    for kw in ({"retry_limit": 0, "checkpoint_period_s": 60.0},
+               {"retry_limit": 2, "checkpoint_period_s": 0.0}):
+        res = Experiment(_spec(**base, **kw)).run()
+        assert res.carbon.salvaged_kg == 0.0
+        assert res.carbon.lost_kg == res.carbon.wasted_kg
+        _assert_split_exact(res.carbon)
+    ckpt = Experiment(_spec(**base, retry_limit=2,
+                            checkpoint_period_s=60.0)).run()
+    redo = Experiment(_spec(**base, retry_limit=2,
+                            checkpoint_period_s=0.0)).run()
+    assert ckpt.carbon.salvaged_kg > 0 and redo.carbon.salvaged_kg == 0.0
+    # the resumed children really run shorter sessions: the engine
+    # trajectories diverge row-for-row (same seeds, same draws)
+    assert not np.array_equal(ckpt.log.columns().compute_s,
+                              redo.log.columns().compute_s)
+    # the remainder arithmetic itself: an interruption 130 s into a 200 s
+    # plan with 60 s checkpoints salvages 120 s -> the resume redoes 0.4
+    # of the original; a second interruption before the next checkpoint
+    # salvages nothing more; failed rows always redo their full remainder
+    I, F = OUTCOME_CODE["interrupted"], OUTCOME_CODE["failed"]
+    r1 = _retry_rem(np.asarray([I], np.int8), np.asarray([200.0]),
+                    np.asarray([130.0]), np.asarray([1.0]), 60.0)
+    assert r1[0] == pytest.approx(0.4)
+    r2 = _retry_rem(np.asarray([I], np.int8), np.asarray([80.0]),
+                    np.asarray([30.0]), r1, 60.0)
+    assert r2[0] == r1[0]
+    assert _retry_rem(np.asarray([F], np.int8), np.asarray([200.0]),
+                      np.asarray([130.0]), np.asarray([0.4]), 60.0)[0] \
+        == 0.4
+    # interrupted keeps its label even when a resume went out — churn
+    # stays separable from crash-retries in the outcome taxonomy
+    assert ckpt.log.participation().get("interrupted", 0) > 0
+    assert OUTCOMES[-1] == "interrupted"
+
+
+# -------------------------------------------------------- sync over-selection
+def test_sync_over_selection_cancels_surplus():
+    """over_select_fraction dispatches ceil((1+f)*goal) per round, the
+    round closes on the goal-th completer, and the surplus is relabeled
+    ``cancelled`` (and charged as waste) — identically in serial, lane
+    and oracle runs."""
+    spec = _spec("sync", 40, 0.5, 9, 8, avail=AvailabilityModel(),
+                 dropout=0.0, over_select_fraction=0.3)
+    res = Experiment(spec).run()
+    goal, f = 20, 0.3
+    ndisp = int(np.ceil((1 + f) * goal))                     # 26
+    assert res.log.n_sessions == ndisp * res.rounds
+    p = res.log.participation()
+    assert p.get("cancelled", 0) > 0
+    assert p["completed"] == goal * res.rounds               # goal-th closes
+    assert res.carbon.wasted_kg > 0
+    _assert_same(sweep([spec], workers=1, vectorize=True)[0], res)
+    oracle = run_scalar(CFG, spec.federated, spec.run,
+                        SurrogateLearner(CFG, spec.federated, spec.run),
+                        sampler=spec.environment.sampler(
+                            CFG, spec.federated, spec.seq_len),
+                        estimator=spec.environment.estimator())
+    assert oracle.log.participation() == p
+    # f == 0 keeps the legacy dispatch width (full concurrency)
+    plain = Experiment(_spec("sync", 40, 0.5, 9, 8,
+                             avail=AvailabilityModel(), dropout=0.0)).run()
+    assert plain.log.n_sessions == 40 * plain.rounds
+    assert plain.log.participation().get("cancelled", 0) == 0
+
+
+# ---------------------------------------------- carbon-aware x availability
+def test_carbon_aware_win_survives_availability():
+    """Acceptance: with the anti-correlated default availability model ON
+    TOP of the diurnal grid, carbon-aware still reports strictly lower
+    total CO2e than async at equal aggregation goal — and its probe
+    screening (top-k mask intersected with the availability mask at the
+    dispatch clock) wastes far fewer dispatches on ineligible devices."""
+    env = Environment.preset("diurnal", availability=_DIURNAL_AV)
+    run = RunConfig(target_perplexity=175.0, max_rounds=60)
+    out = {}
+    for mode in ("async", "carbon-aware"):
+        fed = FederatedConfig(mode=mode, concurrency=100,
+                              aggregation_goal=80)
+        out[mode] = get_strategy(mode).run(
+            CFG, fed, run, SurrogateLearner(CFG, fed, run),
+            sampler=env.sampler(CFG, fed, 64), estimator=env.estimator())
+    ca, asy = out["carbon-aware"], out["async"]
+    assert ca.rounds == asy.rounds                   # same update budget
+    assert ca.carbon.total_kg < 0.8 * asy.carbon.total_kg
+    assert ca.final_perplexity == pytest.approx(asy.final_perplexity,
+                                                rel=0.05)
+    # the availability intersection is doing work: async burns thousands
+    # of dispatches on ineligible devices, carbon-aware screens them out
+    ia = ca.log.participation().get("interrupted", 0)
+    ib = asy.log.participation().get("interrupted", 0)
+    assert ib > 0 and ia < 0.25 * ib
+
+
+def test_default_shape_is_anticorrelated_with_intensity():
+    """The canonical availability shape peaks where the diurnal intensity
+    shape peaks (evening charging vs evening fossil peak) and dips over
+    the midday solar belly — the tension the PR's scheduling result turns
+    on is structural, not tuned."""
+    av = np.asarray(AVAIL_SHAPE)
+    ci = np.asarray(DIURNAL_SHAPE)
+    assert len(av) == len(ci) == 8
+    assert av.min() >= 0 and av.max() <= 1
+    # availability trough sits inside the low-intensity (solar) half
+    assert ci[int(np.argmin(av))] < 0
+    # positive correlation: cheap-carbon hours are scarce-device hours
+    assert float(np.corrcoef(av, ci)[0, 1]) > 0.5
+
+
+# ------------------------------------------------------- validation + wiring
+def test_construction_time_validation():
+    """Satellite: every new knob fails loudly at construction."""
+    with pytest.raises(ValueError, match="eligibility"):
+        AvailabilityModel(eligibility={"US": 1.5})
+    with pytest.raises(ValueError, match="eligibility"):
+        AvailabilityModel(eligibility={"US": -0.1})
+    with pytest.raises(ValueError, match="eligibility_schedule"):
+        AvailabilityModel(eligibility_schedule={"US": ()})
+    with pytest.raises(ValueError, match="eligibility_schedule"):
+        AvailabilityModel(eligibility_schedule={"US": (0.5, 2.0)})
+    with pytest.raises(ValueError, match="eligibility_phase_h"):
+        AvailabilityModel(eligibility_schedule={"US": (0.5,)},
+                          eligibility_phase_h={"US": float("nan")})
+    with pytest.raises(ValueError, match="checkpoint_period_s"):
+        FederatedConfig(checkpoint_period_s=-1.0)
+    with pytest.raises(ValueError, match="checkpoint_period_s"):
+        FederatedConfig(checkpoint_period_s=float("inf"))
+    with pytest.raises(ValueError, match="over_select_fraction"):
+        FederatedConfig(over_select_fraction=-0.1)
+    with pytest.raises(ValueError, match="over_select_fraction"):
+        FederatedConfig(over_select_fraction=float("nan"))
+
+
+def test_availability_json_round_trip():
+    """AvailabilityModel (and the whole churny Environment + the new
+    FederatedConfig knobs) survives the spec JSON round trip — and the
+    round-tripped spec reruns bit-for-bit."""
+    spec = _spec("async", 16, 0.8, 6, 6, avail=_DIURNAL_AV,
+                 retry_limit=2, checkpoint_period_s=120.0)
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back.environment.availability == _DIURNAL_AV
+    assert back.federated.checkpoint_period_s == 120.0
+    assert AvailabilityModel.from_dict(
+        AvailabilityModel().to_dict()) == AvailabilityModel()
+    assert AvailabilityModel.from_dict(
+        _CHURNY_AV.to_dict()) == _CHURNY_AV
+    # the all-available default stays implicit in the JSON
+    assert "availability" not in Environment().to_dict()
+    _assert_same(Experiment(back).run(), Experiment(spec).run())

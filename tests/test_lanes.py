@@ -17,6 +17,7 @@ sweep_mod = importlib.import_module("repro.api.sweep")
 from repro.api import (Environment, Experiment, ExperimentSpec, LaneRunner,
                        ModelRef, sweep)
 from repro.configs import FederatedConfig, RunConfig, get_config
+from repro.core.availability import diurnal_availability
 from repro.core.estimator import CarbonEstimator
 from repro.core.network import NetworkEnergyModel
 from repro.core.profiles import FLEET
@@ -37,7 +38,12 @@ _ENVS = (Environment(),
                      carbon_intensity={"WORLD": 300.0, "US": 100.0}),
          Environment(country_mix={"US": 0.3, "FR": 0.2, "BR": 0.15,
                                   "IN": 0.15, "SE": 0.1, "NO": 0.1}),
-         Environment.preset("diurnal"))
+         Environment.preset("diurnal"),
+         # availability-gated lanes pack against availability-free ones
+         Environment(availability=diurnal_availability(
+             tuple(Environment().country_mix))),
+         Environment.preset("diurnal", availability=diurnal_availability(
+             tuple(Environment().country_mix))))
 
 _MODES = ("sync", "async", "carbon-aware")
 
@@ -346,7 +352,8 @@ def test_batch_carbon_empty_task_log_is_all_zero_but_server():
     est = CarbonEstimator()
     d = est.batch_carbon(SessionBatch.empty())
     assert d == {"client_compute_kg": 0.0, "upload_kg": 0.0,
-                 "download_kg": 0.0, "ok_kg": 0.0, "waste_kg": 0.0}
+                 "download_kg": 0.0, "ok_kg": 0.0, "waste_kg": 0.0,
+                 "salvaged_kg": 0.0, "lost_kg": 0.0}
     log = TaskLog()
     bd = est.estimate(log)
     assert bd.total_kg == 0.0 and bd.server_kg == 0.0
@@ -366,7 +373,8 @@ def test_empty_batch_accumulator_to_batch_is_well_formed():
     est = CarbonEstimator()
     assert est.batch_carbon(b) == {"client_compute_kg": 0.0,
                                    "upload_kg": 0.0, "download_kg": 0.0,
-                                   "ok_kg": 0.0, "waste_kg": 0.0}
+                                   "ok_kg": 0.0, "waste_kg": 0.0,
+                                   "salvaged_kg": 0.0, "lost_kg": 0.0}
     log = TaskLog()
     log.log_batch(b)
     assert log.n_sessions == 0 and est.estimate(log).total_kg == 0.0
