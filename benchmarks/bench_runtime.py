@@ -55,6 +55,12 @@ workload so CI quick runs never clobber the full baseline:
   admission + exit-time scans per resolve), mid-session churn
   interruptions, checkpoint/resume salvage on the retry stream, and the
   salvaged/lost waste split — gated at 2x with its own history column.
+  ``checkpoint_overhead`` records the engine-snapshot point (PR 9): the
+  async fig5-scale run with ``checkpoint_every_rounds=50``; the
+  ``overhead_ratio`` (checkpointed wall over the same run's wall minus
+  its measured save time, median of 5 runs) is gated under 1.1x and the
+  checkpointed run's summary is asserted identical to the plain one
+  (snapshots never perturb the simulation).
   ``population_stress`` records the streaming-telemetry scale point
   (async at concurrency 10^5 quick / 10^6 full, ≥10^7 sessions full):
   throughput, ``peak_rss_mb`` (process high-water mark, gated under
@@ -101,6 +107,9 @@ REGRESSION_FACTOR = 2.0
 # streaming throughput stays within this factor of the materialized twin
 POPULATION_RSS_LIMIT_MB = 2048.0
 POPULATION_SLOWDOWN_LIMIT = 1.5
+# engine snapshots (PR 9): checkpointing every 50 windows must cost less
+# than this factor of the no-checkpoint wall
+CHECKPOINT_OVERHEAD_LIMIT = 1.1
 
 
 def sweep_points(quick: bool) -> List[Dict]:
@@ -258,6 +267,77 @@ def _run_churn_stress(quick: bool) -> Dict:
             "salvaged_kg": c.salvaged_kg, "lost_kg": c.lost_kg}
 
 
+def _run_checkpoint_overhead(quick: bool) -> Dict:
+    """Engine-snapshot cost (PR 9): the async fig5 point run through the
+    `Experiment` surface with ``checkpoint_every_rounds=50``. A
+    checkpoint is one window-boundary serialization of loop state (rows
+    sidecar append + flight columns + header JSON behind an atomic
+    tmp+rename); the hook reports what its saves cost
+    (``Result.checkpoint_stats``), and the gated ``overhead_ratio`` is
+    the checkpointed wall over that same run's wall minus its save time
+    — median over 5 runs — kept under CHECKPOINT_OVERHEAD_LIMIT. The
+    checkpointed summary is asserted equal to a plain run's — snapshots
+    observe the loop, they never perturb it."""
+    import gc
+    import statistics
+    import tempfile
+    from repro.api import Experiment, ExperimentSpec, ModelRef
+    conc = 200 if quick else 1000
+    # quick keeps fig5 concurrency but runs 400 rounds so several
+    # checkpoints land inside one run
+    spec = ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(mode="async", concurrency=conc,
+                                  aggregation_goal=conc),
+        run=RunConfig(target_perplexity=175.0,
+                      max_rounds=400 if quick else 10_000),
+        learner="surrogate")
+
+    def timed(**run_kw):
+        # collector pauses scale with the whole bench process's heap, not
+        # with this workload — keep them out of the timer (as timeit does)
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.time()
+            res = Experiment(spec).run(**run_kw)
+            return time.time() - t0, res
+        finally:
+            gc.enable()
+
+    # The gated ratio comes from WITHIN each checkpointed run: the hook
+    # reports what its saves cost (Result.checkpoint_stats), so the
+    # implied no-checkpoint wall is the same run minus that — numerator
+    # and denominator share one machine-speed regime. Differencing two
+    # separate runs is hopeless on a shared box whose effective CPU speed
+    # drifts by tens of percent between half-second runs.
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "bench_ckpt.npz")
+        ckpt_kw = dict(checkpoint_path=path, checkpoint_every_rounds=50)
+        timed()                                 # warmup (shape caches etc.)
+        wall_plain, res_plain = timed()         # reference run, info only
+        ratios, walls_ckpt, save_walls = [], [], []
+        for _ in range(5):
+            w, res_ckpt = timed(**ckpt_kw)
+            stats = res_ckpt.checkpoint_stats
+            ratios.append(w / max(w - stats["save_wall_s"], 1e-9))
+            walls_ckpt.append(w)
+            save_walls.append(stats["save_wall_s"])
+        ratio = statistics.median(ratios)
+        size_kb = round((os.path.getsize(path)
+                         + os.path.getsize(path + ".rows")) / 1024.0, 1)
+    assert res_ckpt.summary() == res_plain.summary()
+    n = res_plain.log.n_sessions
+    return {"concurrency": conc, "checkpoint_every_rounds": 50,
+            "rounds": res_plain.rounds, "sessions": n,
+            "saves": res_ckpt.checkpoint_stats["saves"],
+            "wall_s_plain": round(wall_plain, 4),
+            "wall_s_checkpointed": round(min(walls_ckpt), 4),
+            "save_wall_s": round(statistics.median(save_walls), 4),
+            "checkpoint_file_kb": size_kb,
+            "overhead_ratio": round(ratio, 3)}
+
+
 def _run_population(quick: bool) -> Dict:
     """Population-scale async point through the streaming telemetry path
     (PR 6): quick = concurrency 10^5, full = concurrency 10^6 driven past
@@ -338,6 +418,7 @@ def run_bench(quick: bool) -> Dict:
         "population_stress": population,
         "fault_stress": _run_fault_stress(quick),
         "churn_stress": _run_churn_stress(quick),
+        "checkpoint_overhead": _run_checkpoint_overhead(quick),
     }
     # the engines must simulate the identical workload (seed-for-seed)
     for m in columnar["per_mode"]:
@@ -373,6 +454,16 @@ def check_regression(fresh: Dict, baseline: Dict) -> int:
         gates.append(("churn_stress",
                       baseline.get("churn_stress", {})
                       .get("sessions_per_s", 0), chn["sessions_per_s"]))
+    cko = fresh.get("checkpoint_overhead")
+    if cko:
+        if cko["overhead_ratio"] > CHECKPOINT_OVERHEAD_LIMIT:
+            print(f"bench: REGRESSION — checkpointing cost "
+                  f"{cko['overhead_ratio']}x the plain wall "
+                  f"(> {CHECKPOINT_OVERHEAD_LIMIT}x limit)")
+            status = 1
+        else:
+            print(f"bench: checkpoint_overhead {cko['overhead_ratio']}x "
+                  f"vs plain (limit {CHECKPOINT_OVERHEAD_LIMIT}x) — ok")
     pop = fresh.get("population_stress")
     if pop:
         gates.append(("population_stress",
@@ -462,6 +553,9 @@ def append_history(key: str, fresh: Dict, path: str) -> None:
     if "churn_stress" in fresh:
         row["churn_stress_sessions_per_s"] = \
             fresh["churn_stress"]["sessions_per_s"]
+    if "checkpoint_overhead" in fresh:
+        row["checkpoint_overhead_ratio"] = \
+            fresh["checkpoint_overhead"]["overhead_ratio"]
     append_history_row(row, path)
 
 

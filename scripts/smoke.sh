@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI smoke: tier-1 test suite + ExperimentSpec JSON dry-runs end-to-end
-# + the simulation-engine runtime benchmark.
+# + the crash-inject/resume contract + the simulation-engine runtime
+# benchmark.
 #
 #   bash scripts/smoke.sh            # from the repo root
 #
@@ -15,16 +16,21 @@
 # exercised on ALL THREE event loops (and on the intensity_schedule,
 # FaultModel, AvailabilityModel and telemetry round-trips).
 #
-# Step 3 runs the quick fig5-style engine benchmark (columnar vs scalar),
+# Step 3 proves the PR 9 resume contract on the availability-churn spec:
+# run it uninterrupted, run it again with checkpointing while the crash
+# injector kills the run mid-way, resume from the checkpoint, and assert
+# the resumed summary is bit-identical to the uninterrupted one.
+#
+# Step 4 runs the quick fig5-style engine benchmark (columnar vs scalar),
 # refreshes BENCH_runtime.json + BENCH_history.json, and FAILS if the
 # columnar engine's quick sessions/sec regressed more than 2x against the
 # recorded baseline — overall or in any mode (sync, async and
 # carbon-aware are each gated separately). The bench also runs the
-# population_stress streaming-telemetry point and FAILS if its peak RSS
-# reaches 2 GB, if streaming falls more than 1.5x behind the
-# materialized twin, or on a >2x throughput cliff.
+# population_stress streaming-telemetry point (gated on peak RSS,
+# streaming parity and throughput) and the checkpoint_overhead point
+# (checkpointing every 50 windows must cost < 1.1x the plain wall).
 #
-# Step 4 runs the quick design-space sweep benchmark (lane-batched packs
+# Step 5 runs the quick design-space sweep benchmark (lane-batched packs
 # vs sweep(workers=1) serial; summaries must match seed-for-seed) and
 # FAILS on a >2x lane-throughput regression against the recorded
 # baseline under BENCH_runtime.json's "sweep" key.
@@ -33,10 +39,10 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== smoke 1/4: tier-1 test suite =="
+echo "== smoke 1/5: tier-1 test suite =="
 python -m pytest -x -q
 
-echo "== smoke 2/4: ExperimentSpec JSON dry-runs (with round-trip check) =="
+echo "== smoke 2/5: ExperimentSpec JSON dry-runs (with round-trip check) =="
 python -m repro.api examples/specs/charlm_sync_small.json \
     --roundtrip-check --quiet
 python -m repro.api examples/specs/charlm_async_small.json \
@@ -50,10 +56,40 @@ python -m repro.api examples/specs/charlm_faulty_bursts.json \
 python -m repro.api examples/specs/charlm_avail_churn.json \
     --roundtrip-check --quiet
 
-echo "== smoke 3/4: runtime benchmark (quick, per-mode 2x regression gate) =="
+echo "== smoke 3/5: crash-inject -> resume -> bit-identical summary =="
+python - <<'PY'
+import os
+import tempfile
+
+from repro.api import Experiment, ExperimentSpec
+from repro.core.snapshot import InjectedCrash
+
+spec = ExperimentSpec.load("examples/specs/charlm_avail_churn.json")
+base = Experiment(spec).run().summary()
+with tempfile.TemporaryDirectory() as td:
+    path = os.path.join(td, "smoke_ckpt.npz")
+    os.environ["REPRO_CRASH_ROUND"] = "60"
+    os.environ["REPRO_CRASH_KIND"] = "raise"
+    try:
+        Experiment(spec).run(checkpoint_path=path,
+                             checkpoint_every_rounds=25)
+        raise SystemExit("crash injector did not fire")
+    except InjectedCrash:
+        pass
+    finally:
+        del os.environ["REPRO_CRASH_ROUND"], os.environ["REPRO_CRASH_KIND"]
+    res = Experiment.resume(path, checkpoint_path=path)
+resumed = res.summary()
+assert resumed == base, (resumed, base)
+print(f"resume contract OK: killed at round 60, resumed run matches "
+      f"uninterrupted run exactly ({res.rounds} rounds, "
+      f"{res.log.n_sessions} sessions)")
+PY
+
+echo "== smoke 4/5: runtime benchmark (quick, per-mode 2x regression gate) =="
 python benchmarks/bench_runtime.py --quick --check
 
-echo "== smoke 4/4: sweep benchmark (quick, lane 2x regression gate) =="
+echo "== smoke 5/5: sweep benchmark (quick, lane 2x regression gate) =="
 python benchmarks/bench_sweep.py --quick --check
 
 echo "smoke OK"

@@ -63,16 +63,23 @@ class Result:
     smoothed_perplexity: float
     wall_s: float = 0.0
     aborted: bool = False   # starvation abort (sync graceful degradation)
+    # when the run checkpointed: {"saves": n, "save_wall_s": s} — what the
+    # snapshots cost this run (not part of summary(); summaries stay
+    # bit-comparable across checkpointed and plain runs)
+    checkpoint_stats: Optional[Dict[str, float]] = None
 
     @classmethod
     def from_task_result(cls, spec: ExperimentSpec, tr: TaskResult,
-                         wall_s: float = 0.0) -> "Result":
+                         wall_s: float = 0.0,
+                         checkpoint_stats: Optional[Dict[str, float]] = None
+                         ) -> "Result":
         return cls(spec=spec, log=tr.log, carbon=tr.carbon,
                    reached_target=tr.reached_target, rounds=tr.rounds,
                    duration_h=tr.duration_h,
                    final_perplexity=tr.final_perplexity,
                    smoothed_perplexity=tr.smoothed_perplexity,
-                   wall_s=wall_s, aborted=tr.aborted)
+                   wall_s=wall_s, aborted=tr.aborted,
+                   checkpoint_stats=checkpoint_stats)
 
     def summary(self) -> Dict[str, float]:
         """Same keys as the legacy TaskResult.summary() so downstream CSV
@@ -142,7 +149,26 @@ class Experiment:
 
     def run(self, on_round: Optional[RoundCallback] = None,
             on_start: Optional[StartCallback] = None,
-            on_complete: Optional[CompleteCallback] = None) -> Result:
+            on_complete: Optional[CompleteCallback] = None, *,
+            checkpoint_path: Optional[str] = None,
+            checkpoint_every_rounds: int = 0,
+            resume_from: Optional[str] = None) -> Result:
+        """Run the spec; optionally checkpoint and/or resume mid-run state.
+
+        Snapshot contract (see ``repro.core.snapshot``): with
+        ``checkpoint_path`` + ``checkpoint_every_rounds=N`` the engine
+        writes a versioned checkpoint every N rounds (sync) / server
+        versions (async), atomically. ``resume_from`` restores one and
+        continues; a resumed run's ``summary()`` AND session columns are
+        **bit-for-bit** identical to the uninterrupted run on every
+        strategy × telemetry × schedule combination — that is what the
+        counter-keyed randomness buys. NOT exact: ``wall_s`` (real time
+        actually spent), and any work done after the last checkpoint is
+        redone, not replayed. Snapshots cover the surrogate learner only
+        (the real JAX learner carries unserialized params); lane-batched
+        ``sweep(vectorize=True)`` packs resume at the sweep layer (retry/
+        salvage) rather than through engine snapshots.
+        """
         spec = self.spec
         cfg = self.model_config
         if self.learner is None or (self._consumed and not self._injected):
@@ -150,6 +176,8 @@ class Experiment:
         self._consumed = True
         strategy = get_strategy(spec.federated.mode)
         env = spec.environment
+        snap = self._snapshot_hook(checkpoint_path, checkpoint_every_rounds,
+                                   resume_from)
         if on_start is not None:
             on_start(spec)
         t0 = time.time()
@@ -158,11 +186,70 @@ class Experiment:
             seq_len=spec.seq_len,
             estimator=env.estimator(),
             sampler=env.sampler(cfg, spec.federated, spec.seq_len),
-            on_round=on_round)
-        result = Result.from_task_result(spec, tr, wall_s=time.time() - t0)
+            on_round=on_round, snap=snap)
+        stats = None
+        if snap is not None and snap.saves:
+            stats = {"saves": snap.saves,
+                     "save_wall_s": round(snap.save_wall_s, 6)}
+        result = Result.from_task_result(spec, tr, wall_s=time.time() - t0,
+                                         checkpoint_stats=stats)
         if on_complete is not None:
             on_complete(result)
         return result
+
+    def _snapshot_hook(self, checkpoint_path, checkpoint_every_rounds,
+                       resume_from):
+        from repro.core.snapshot import (SnapshotHook, _CrashInjector,
+                                         load_snapshot)
+        spec = self.spec
+        crash = _CrashInjector.from_env(seed=spec.federated.seed)
+        resume = None
+        if resume_from is not None:
+            resume = load_snapshot(resume_from)
+            want, found = spec.content_hash(), resume.spec_hash
+            if found != want:
+                raise ValueError(
+                    f"checkpoint {resume_from!r} was written by a "
+                    f"different spec: its spec hash is {found}, this "
+                    f"experiment's spec hash is {want} — refusing a "
+                    f"wrong-spec resume")
+        if (checkpoint_path or resume is not None) \
+                and spec.learner != "surrogate":
+            raise ValueError(
+                "engine snapshots support learner='surrogate' only; the "
+                "real JAX learner's parameters are not serialized")
+        if checkpoint_path and checkpoint_every_rounds <= 0 \
+                and resume is None:
+            raise ValueError(
+                "checkpoint_path requires checkpoint_every_rounds > 0")
+        if checkpoint_path is None and resume is None and crash is None:
+            return None
+        path = checkpoint_path or resume_from
+        every = checkpoint_every_rounds or (resume.every if resume else 0)
+        return SnapshotHook(path=path, every=every, spec=spec,
+                            mode=spec.federated.mode, crash=crash,
+                            resume=resume)
+
+    @classmethod
+    def resume(cls, path: str, *,
+               checkpoint_path: Optional[str] = None,
+               checkpoint_every_rounds: int = 0,
+               on_round: Optional[RoundCallback] = None,
+               on_start: Optional[StartCallback] = None,
+               on_complete: Optional[CompleteCallback] = None) -> Result:
+        """Resume a checkpointed run from its snapshot file and run it to
+        completion. The spec travels inside the checkpoint header, so the
+        caller needs nothing but the path. By default the resumed run
+        keeps checkpointing to the same file at the saved cadence;
+        override with ``checkpoint_path``/``checkpoint_every_rounds``."""
+        from repro.core.snapshot import load_snapshot
+        snap = load_snapshot(path)
+        exp = cls(snap.spec())
+        return exp.run(on_round=on_round, on_start=on_start,
+                       on_complete=on_complete,
+                       checkpoint_path=checkpoint_path or path,
+                       checkpoint_every_rounds=checkpoint_every_rounds,
+                       resume_from=path)
 
 
 def run_spec(spec: ExperimentSpec, **callbacks) -> Result:

@@ -11,6 +11,7 @@ reproduces the same `Result.summary()`.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from dataclasses import dataclass, field
 from typing import Any, Mapping, Optional
@@ -127,6 +128,15 @@ class ExperimentSpec:
 
     def to_json(self, indent: int = 1) -> str:
         return json.dumps(self.to_dict(), indent=indent)
+
+    def content_hash(self) -> str:
+        """Short sha256 of the canonical JSON form — what checkpoint
+        headers record, so a resume against a *different* spec (other
+        seed, other environment, other budgets) fails loudly instead of
+        silently continuing the wrong run."""
+        canon = json.dumps(self.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
 
     @classmethod
     def from_json(cls, text: str) -> "ExperimentSpec":

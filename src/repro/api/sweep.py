@@ -53,12 +53,15 @@ from __future__ import annotations
 import os
 import time
 from concurrent.futures import BrokenExecutor
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.api.experiment import Experiment, Result, run_spec
 from repro.api.spec import ExperimentSpec
 
 ResultCallback = Callable[[int, Result], None]
+# on_failure(spec_index, error, attempt) — fires once per failed attempt
+FailureCallback = Callable[[int, BaseException, int], None]
 
 _POOL_ERRORS = (ImportError, OSError, PermissionError, BrokenExecutor)
 
@@ -174,6 +177,8 @@ def _run_pack(specs: List[ExperimentSpec],
         except Exception as e:                   # noqa: BLE001
             where = f"sweep lane {lane}" if idxs is None \
                 else f"sweep lane {lane} (spec index {idxs[lane]})"
+            if idxs is not None:
+                e.spec_index = idxs[lane]   # culprit for pack salvage
             raise _annotate(e, where)
     try:
         trs = LaneRunner(specs[0].federated.mode).run(tasks)
@@ -190,7 +195,16 @@ def _run_job(kind: str, specs: List[ExperimentSpec],
              idxs: Optional[List[int]] = None) -> List[Result]:
     if kind == "pack":
         return _run_pack(specs, idxs)
-    return [run_spec(specs[0])]
+    try:
+        return [run_spec(specs[0])]
+    except Exception as e:                       # noqa: BLE001
+        # same index context as pack-lane failures, on BOTH the pool path
+        # and the serial(-fallback) rerun — a failing spec always names
+        # its sweep index
+        if idxs is not None:
+            e.spec_index = idxs[0]
+            raise _annotate(e, f"sweep spec index {idxs[0]}")
+        raise
 
 
 def _run_job_safe(kind: str, specs: List[ExperimentSpec],
@@ -202,22 +216,301 @@ def _run_job_safe(kind: str, specs: List[ExperimentSpec],
 
 
 # ---------------------------------------------------------------------------
+# Fault-tolerant execution: timeout / retry / worker death / pack salvage
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SpecReport:
+    """Per-spec accounting of a fault-tolerant sweep.
+
+    ``status``: "ok" (first attempt succeeded), "retried" (succeeded
+    after >= 1 failed attempt), "timeout" / "failed" (exhausted
+    ``retry_limit``; its ``results`` slot stays None). ``attempts``
+    counts every attempt that included this spec (pack or per-spec);
+    ``wall_s`` sums its amortized share of each attempt's wall clock;
+    ``error`` keeps the last failure's message."""
+
+    index: int
+    status: str = "pending"
+    attempts: int = 0
+    wall_s: float = 0.0
+    error: Optional[str] = None
+
+
+@dataclass
+class SweepReport:
+    """What a fault-tolerant ``sweep`` did, spec by spec."""
+
+    specs: List[SpecReport] = field(default_factory=list)
+
+    @property
+    def all_ok(self) -> bool:
+        return all(s.status in ("ok", "retried") for s in self.specs)
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for s in self.specs:
+            out[s.status] = out.get(s.status, 0) + 1
+        return out
+
+
+class _WorkerDied(RuntimeError):
+    """A sweep worker process exited without reporting a result."""
+
+
+class _WorkerTimeout(RuntimeError):
+    """A sweep worker exceeded ``timeout_s`` and was terminated."""
+
+
+@dataclass
+class _FTJob:
+    kind: str                 # "pack" | "spec"
+    idxs: List[int]
+    ready_at: float = 0.0     # monotonic clock gate (retry backoff)
+
+
+class _FTState:
+    """Retry/salvage bookkeeping shared by the process and serial
+    fault-tolerant schedulers: turns each job outcome into follow-up
+    jobs and keeps the ``SweepReport`` truthful."""
+
+    def __init__(self, n_specs: int, deliver, retry_limit: int,
+                 retry_backoff_s: float,
+                 on_failure: Optional[FailureCallback]):
+        self.reports = [SpecReport(i) for i in range(n_specs)]
+        self.deliver = deliver
+        self.retry_limit = int(retry_limit)
+        self.backoff = float(retry_backoff_s)
+        self.on_failure = on_failure
+
+    def start(self, job: _FTJob) -> None:
+        for i in job.idxs:
+            self.reports[i].attempts += 1
+
+    def finalized(self, i: int) -> bool:
+        return self.reports[i].status in ("ok", "retried", "timeout",
+                                          "failed")
+
+    def success(self, job: _FTJob, results: List[Result],
+                wall: float) -> None:
+        per = wall / max(len(job.idxs), 1)
+        for i in job.idxs:
+            rep = self.reports[i]
+            rep.wall_s += per
+            rep.status = "ok" if rep.attempts == 1 else "retried"
+        self.deliver(job.idxs, results)
+
+    def failure(self, job: _FTJob, error: BaseException, wall: float,
+                why: str) -> List[_FTJob]:
+        """Record one failed attempt; return the follow-up jobs. ``why``
+        is "error" (the job raised), "died" or "timeout"."""
+        per = wall / max(len(job.idxs), 1)
+        for i in job.idxs:
+            rep = self.reports[i]
+            rep.wall_s += per
+            rep.error = f"{type(error).__name__}: {error}"
+            if self.on_failure is not None:
+                self.on_failure(i, error, rep.attempts)
+        culprit = getattr(error, "spec_index", None) if why == "error" \
+            else None
+        if job.kind == "pack" and len(job.idxs) > 1:
+            if culprit in job.idxs:
+                # salvage: the crash names one guilty lane — re-chunk the
+                # surviving lanes into a fresh sub-pack (their work died
+                # with the worker but their specs are fine) and isolate
+                # the culprit under the retry budget
+                survivors = [i for i in job.idxs if i != culprit]
+                return [_FTJob("pack", survivors)] \
+                    + self._retry(_FTJob("spec", [culprit]), why)
+            # anonymous death/timeout: isolate every lane per-spec so one
+            # bad spec cannot take the pack down again
+            out: List[_FTJob] = []
+            for i in job.idxs:
+                out += self._retry(_FTJob("spec", [i]), why)
+            return out
+        return self._retry(job, why)
+
+    def _retry(self, job: _FTJob, why: str) -> List[_FTJob]:
+        tried = max(self.reports[i].attempts for i in job.idxs)
+        if tried > self.retry_limit:
+            final = "timeout" if why == "timeout" else "failed"
+            for i in job.idxs:
+                self.reports[i].status = final
+            return []
+        job.ready_at = time.monotonic() \
+            + self.backoff * (2.0 ** (tried - 1))
+        return [job]
+
+
+def _ft_worker(conn, kind: str, specs: List[ExperimentSpec],
+               idxs: List[int]) -> None:
+    try:
+        out = _run_job(kind, specs, idxs)
+        conn.send(("ok", out))
+    except BaseException as e:                   # noqa: BLE001
+        try:
+            conn.send(("err", e))
+        except Exception:                        # unpicklable exception
+            stub = RuntimeError(f"{type(e).__name__}: {e}")
+            stub.spec_index = getattr(e, "spec_index", None)
+            conn.send(("err", stub))
+    finally:
+        conn.close()
+
+
+def _sweep_ft_pool(jobs: List[_FTJob], specs: List[ExperimentSpec], n: int,
+                   st: _FTState, timeout_s: Optional[float]) -> None:
+    """Fault-tolerant scheduler: one ``multiprocessing.Process`` + pipe
+    per job (not a pool executor — per-job termination is the point).
+    Detects three failure shapes: the job raised (error travels back over
+    the pipe), the worker died silently (process exit without a result),
+    and the worker wedged (``timeout_s`` elapsed; terminated)."""
+    import multiprocessing as mp
+    ctx = mp.get_context()
+    pending = list(jobs)
+    running: List[Tuple[_FTJob, object, object, float]] = []
+    try:
+        while pending or running:
+            now = time.monotonic()
+            i = 0
+            while len(running) < n and i < len(pending):
+                job = pending[i]
+                if job.ready_at > now:
+                    i += 1
+                    continue
+                pending.pop(i)
+                parent, child = ctx.Pipe(duplex=False)
+                proc = ctx.Process(
+                    target=_ft_worker,
+                    args=(child, job.kind, [specs[j] for j in job.idxs],
+                          job.idxs),
+                    daemon=True)
+                st.start(job)
+                proc.start()     # _POOL_ERRORS here -> serial fallback
+                child.close()
+                running.append((job, proc, parent, time.monotonic()))
+            progressed = False
+            for item in list(running):
+                job, proc, conn, t0 = item
+                now = time.monotonic()
+                status = payload = None
+                if conn.poll(0):
+                    try:
+                        status, payload = conn.recv()
+                    except EOFError:
+                        status = None            # died mid-send
+                elif proc.is_alive():
+                    if timeout_s is not None and now - t0 > timeout_s:
+                        proc.terminate()
+                        proc.join()
+                        running.remove(item)
+                        conn.close()
+                        err = _WorkerTimeout(
+                            f"sweep worker exceeded timeout_s="
+                            f"{timeout_s} running spec indices "
+                            f"{job.idxs}")
+                        pending.extend(
+                            st.failure(job, err, now - t0, "timeout"))
+                        progressed = True
+                    continue
+                proc.join()
+                running.remove(item)
+                conn.close()
+                wall = time.monotonic() - t0
+                if status == "ok":
+                    st.success(job, payload, wall)
+                elif status == "err":
+                    pending.extend(st.failure(job, payload, wall, "error"))
+                else:
+                    err = _WorkerDied(
+                        f"sweep worker died (exit code {proc.exitcode}) "
+                        f"running spec indices {job.idxs}")
+                    pending.extend(st.failure(job, err, wall, "died"))
+                progressed = True
+            if not progressed:
+                time.sleep(0.005)
+    finally:
+        for _, proc, conn, _ in running:
+            proc.terminate()
+            proc.join()
+            conn.close()
+
+
+def _sweep_ft_serial(jobs: List[_FTJob], specs: List[ExperimentSpec],
+                     st: _FTState) -> None:
+    """In-process fault-tolerant fallback (restricted environments):
+    retries with backoff still work; ``timeout_s`` and worker-death
+    detection need process isolation and do not apply here."""
+    pending = list(jobs)
+    while pending:
+        now = time.monotonic()
+        ready = next((j for j in pending if j.ready_at <= now), None)
+        if ready is None:
+            time.sleep(max(0.0, min(j.ready_at for j in pending) - now))
+            continue
+        pending.remove(ready)
+        st.start(ready)
+        t0 = time.monotonic()
+        try:
+            rs = _run_job(ready.kind, [specs[i] for i in ready.idxs],
+                          ready.idxs)
+        except Exception as e:                   # noqa: BLE001
+            pending.extend(
+                st.failure(ready, e, time.monotonic() - t0, "error"))
+        else:
+            st.success(ready, rs, time.monotonic() - t0)
+
+
+# ---------------------------------------------------------------------------
 # The sweep entry point
 # ---------------------------------------------------------------------------
 
 def sweep(specs: Sequence[ExperimentSpec], workers: Optional[int] = None,
           on_result: Optional[ResultCallback] = None,
-          vectorize: bool = False) -> List[Result]:
+          vectorize: bool = False, *,
+          timeout_s: Optional[float] = None, retry_limit: int = 0,
+          retry_backoff_s: float = 0.5,
+          on_failure: Optional[FailureCallback] = None,
+          return_report: bool = False):
     """Run every spec; return Results in spec order.
 
     on_result(index, result) fires in completion order as workers finish
     (or after each run/pack when serial). ``vectorize=True`` lane-batches
     compatible specs into lockstep packs (see module docstring); the
     per-spec path is the degenerate one-spec-per-job case of the same
-    machinery."""
+    machinery.
+
+    Fault tolerance — armed by passing any of ``timeout_s`` /
+    ``retry_limit`` / ``on_failure`` / ``return_report``; without them
+    the legacy all-or-nothing semantics (first failure propagates) are
+    unchanged. In fault-tolerant mode every job runs in its own worker
+    process (isolation is the point — a crashing spec cannot take the
+    sweep down):
+
+    * ``timeout_s`` — per job (spec or pack): a worker exceeding it is
+      terminated and the job handled as a failure;
+    * worker death (segfault, ``os._exit``, OOM-kill) is detected via
+      the process exit code and handled as a failure;
+    * failed jobs retry with exponential backoff
+      (``retry_backoff_s * 2**(attempt-1)``) up to ``retry_limit``
+      retries per spec;
+    * a crashed *pack* whose error names a culprit lane is salvaged:
+      surviving lanes re-chunk into a fresh sub-pack, the culprit
+      retries alone; an anonymous pack death isolates every lane;
+    * exhausted specs leave ``None`` in their results slot (partial
+      results instead of all-or-nothing) with ``on_failure(index,
+      error, attempt)`` fired once per failed attempt.
+
+    With ``return_report=True`` returns ``(results, SweepReport)`` —
+    per-spec status ("ok" / "retried" / "timeout" / "failed"),
+    attempts, amortized wall seconds and last error (the schema is the
+    :class:`SpecReport` dataclass).
+    """
     specs = list(specs)
+    fault_tolerant = (timeout_s is not None or retry_limit > 0
+                      or on_failure is not None or return_report)
     if not specs:
-        return []
+        return ([], SweepReport()) if return_report else []
     if vectorize:
         jobs = _chunk_packs(_group_packs(specs),
                             _n_workers(len(specs), workers))
@@ -230,6 +523,28 @@ def sweep(specs: Sequence[ExperimentSpec], workers: Optional[int] = None,
             results[i] = r
             if on_result is not None:
                 on_result(i, r)
+
+    if fault_tolerant:
+        st = _FTState(len(specs), deliver, retry_limit, retry_backoff_s,
+                      on_failure)
+        ft_jobs = [_FTJob(kind, list(idxs)) for kind, idxs in jobs]
+        n = _n_workers(len(ft_jobs), workers)
+        try:
+            _sweep_ft_pool(ft_jobs, specs, n, st, timeout_s)
+        except _POOL_ERRORS as e:
+            import warnings
+            remaining = [
+                _FTJob(j.kind, [i for i in j.idxs if not st.finalized(i)])
+                for j in ft_jobs]
+            remaining = [j for j in remaining if j.idxs]
+            warnings.warn(
+                f"sweep: worker processes unavailable ({e!r}); running "
+                f"the remaining jobs in-process — timeout_s and "
+                f"worker-death detection are disabled, retries still "
+                f"apply", RuntimeWarning, stacklevel=2)
+            _sweep_ft_serial(remaining, specs, st)
+        report = SweepReport(st.reports)
+        return (results, report) if return_report else results
 
     n = _n_workers(len(jobs), workers)
     if n > 1 and len(jobs) > 1:

@@ -22,7 +22,7 @@ clock supply, the paper's point being that *client* fleets cannot.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -109,6 +109,31 @@ class ExactSum:
             return float(self._m << self._e)
         # CPython int/int true division is correctly rounded
         return self._m / (1 << -self._e)
+
+    # ------------------------------------------------------------ snapshots
+    _STATE_VERSION = 1
+
+    def state(self) -> dict:
+        """Version-tagged JSON-safe state. The mantissa is arbitrary
+        precision, so it travels as a hex string; the round-trip through
+        ``from_state`` is exact (same ``_m``/``_e``, hence the same
+        correctly-rounded ``value()`` and the same future merges)."""
+        return {"version": self._STATE_VERSION,
+                "m": format(self._m, "x") if self._m >= 0
+                else "-" + format(-self._m, "x"),
+                "e": self._e}
+
+    @classmethod
+    def from_state(cls, state: Mapping) -> "ExactSum":
+        v = state.get("version")
+        if v != cls._STATE_VERSION:
+            raise ValueError(
+                f"unsupported ExactSum state version {v!r}; this build "
+                f"reads version {cls._STATE_VERSION}")
+        s = cls()
+        s._m = int(state["m"], 16)
+        s._e = int(state["e"])
+        return s
 
 
 def exact_sum(x) -> float:

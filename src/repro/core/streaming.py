@@ -280,6 +280,50 @@ class StreamingAccumulator:
         """Global engine-order indices of the retained rows, sorted."""
         return np.sort(self._res_idx)
 
+    # ------------------------------------------------------------ snapshots
+    _SUM_NAMES = ("kg0", "kg1", "kg2", "kg_ok", "kg_salv", "kg_lost",
+                  "bytes_up", "bytes_down")
+
+    def _sums(self):
+        return dict(zip(self._SUM_NAMES,
+                        (*self._kg, self._kg_ok, self._kg_salv,
+                         self._kg_lost, self._bytes_up, self._bytes_down)))
+
+    def state(self) -> Tuple[dict, Dict[str, np.ndarray]]:
+        """Full fold state as ``(json_meta, arrays)``. ``load_state`` on a
+        same-config accumulator restores it exactly: the ExactSum states
+        round-trip bit-for-bit, counters are integers, and the grouped
+        table / reservoir come back as the identical float64/uint64
+        arrays — so a resumed fold continues as if never interrupted."""
+        meta = {"n": self._n, "stale_sum": self._stale_sum,
+                "sums": {k: s.state() for k, s in self._sums().items()}}
+        arrays = {"outcome_counts": self._outcome_counts,
+                  "res_idx": self._res_idx, "res_keys": self._res_keys,
+                  **{f"groups_{m}": self._groups[m] for m in _MEASURES},
+                  **{f"res_{f}": self._res_cols[f] for f in _ACC_DTYPES}}
+        return meta, arrays
+
+    def load_state(self, meta: dict, arrays: Dict[str, np.ndarray]) -> None:
+        from repro.core.estimator import ExactSum
+        self._n = int(meta["n"])
+        self._stale_sum = int(meta["stale_sum"])
+        sums = {k: ExactSum.from_state(s) for k, s in meta["sums"].items()}
+        self._kg = [sums["kg0"], sums["kg1"], sums["kg2"]]
+        self._kg_ok = sums["kg_ok"]
+        self._kg_salv = sums["kg_salv"]
+        self._kg_lost = sums["kg_lost"]
+        self._bytes_up = sums["bytes_up"]
+        self._bytes_down = sums["bytes_down"]
+        self._outcome_counts = np.asarray(arrays["outcome_counts"],
+                                          np.int64).copy()
+        for m in _MEASURES:
+            self._groups[m] = np.asarray(arrays[f"groups_{m}"],
+                                         np.float64).copy()
+        self._res_idx = np.asarray(arrays["res_idx"], np.int64).copy()
+        self._res_keys = np.asarray(arrays["res_keys"], np.uint64).copy()
+        self._res_cols = {f: np.asarray(arrays[f"res_{f}"], dt).copy()
+                          for f, dt in _ACC_DTYPES.items()}
+
 class StreamedLog(TaskLog):
     """``TaskLog`` whose session store is a ``StreamingAccumulator``:
     appends fold instead of materialize, summaries read the exact running
@@ -317,6 +361,16 @@ class StreamedLog(TaskLog):
         """``BatchAccumulator``-compatible sink surface — the async engine
         folds window pops straight into the log, no staging store."""
         self._acc.append(**cols)
+        self._n = self._acc._n
+        self._columns = self._sessions = None
+
+    # ------------------------------------------------------------ snapshots
+    def stream_state(self) -> Tuple[dict, "Dict[str, np.ndarray]"]:
+        """Accumulator fold state (see ``StreamingAccumulator.state``)."""
+        return self._acc.state()
+
+    def load_stream_state(self, meta: dict, arrays) -> None:
+        self._acc.load_state(meta, arrays)
         self._n = self._acc._n
         self._columns = self._sessions = None
 

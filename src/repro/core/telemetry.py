@@ -265,6 +265,38 @@ class BatchAccumulator:
             country_names=self.country_names,
             **{f: self._cols[f][:self._n] for f in _ACC_DTYPES})
 
+    def snapshot_rows(self, start: int
+                      ) -> Tuple[Tuple[str, ...], Tuple[str, ...],
+                                 Dict[str, np.ndarray]]:
+        """Row slices ``[start:n)`` of every SessionBatch column, read
+        off the consolidated buffers AND the still-pending blocks without
+        consolidating or freezing — O(new rows), and the store's own
+        exact-size consolidate-once pattern stays intact (a periodic
+        snapshot neither triggers copy-on-write nor forces growth by
+        doubling). Values are views or broadcast-casts valid until the
+        next ``append``: consume them immediately (the snapshot writer
+        serializes them on the spot)."""
+        cols = {f: np.empty(max(self._n - start, 0), dt)
+                for f, dt in _ACC_DTYPES.items()}
+        out = 0
+        if start < self._n_buf:
+            for f in cols:
+                cols[f][:self._n_buf - start] = \
+                    self._cols[f][start:self._n_buf]
+            out = self._n_buf - start
+        pos = self._n_buf
+        for block in self._pending:
+            nb = len(block["client_id"])
+            if pos + nb > start:
+                lo = max(0, start - pos)
+                for f in cols:
+                    v = block[f]     # slice assignment broadcasts scalars
+                    cols[f][out:out + nb - lo] = \
+                        v[lo:] if isinstance(v, np.ndarray) else v
+                out += nb - lo
+            pos += nb
+        return self.device_names, self.country_names, cols
+
 
 class LaneAccumulator(BatchAccumulator):
     """``BatchAccumulator`` with a per-row ``lane`` column: one shared
@@ -370,6 +402,33 @@ class TaskLog:
                 parts.append(SessionBatch.from_sessions(self._pending))
             self._columns = SessionBatch.concat(parts)
         return self._columns
+
+    def snapshot_rows(self, start: int
+                      ) -> Tuple[Tuple[str, ...], Tuple[str, ...],
+                                 Dict[str, np.ndarray]]:
+        """Copies of rows ``[start:n)`` of every column, walked off the
+        chunk list without consolidating — O(new rows), so periodic
+        engine snapshots don't pay O(all rows) per checkpoint."""
+        if self._pending:   # fold row-appends into the chunk list first
+            self._batches.append(SessionBatch.from_sessions(self._pending))
+            self._pending = []
+        dev: Tuple[str, ...] = ()
+        ctry: Tuple[str, ...] = ()
+        parts: Dict[str, List[np.ndarray]] = {f: [] for f in _ACC_DTYPES}
+        pos = 0
+        for b in self._batches:
+            if b.device_names:
+                dev, ctry = b.device_names, b.country_names
+            nb = len(b)
+            if pos + nb > start:
+                lo = max(0, start - pos)
+                for f in parts:
+                    parts[f].append(getattr(b, f)[lo:])
+            pos += nb
+        cols = {f: (np.concatenate(v) if v
+                    else np.zeros(0, _ACC_DTYPES[f]))
+                for f, v in parts.items()}
+        return dev, ctry, cols
 
     @property
     def sessions(self) -> Tuple[ClientSession, ...]:

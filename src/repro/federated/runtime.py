@@ -265,7 +265,8 @@ class Strategy:
             run: RunConfig, learner, *, seq_len: int = 64,
             estimator: Optional[CarbonEstimator] = None,
             sampler: Optional[SessionSampler] = None,
-            on_round: Optional[RoundCallback] = None) -> TaskResult:
+            on_round: Optional[RoundCallback] = None,
+            snap=None) -> TaskResult:
         sampler = sampler or SessionSampler(model_cfg, fed, seq_len)
         est = estimator or CarbonEstimator()
         # selection policies may read the environment's grid model (the
@@ -287,6 +288,16 @@ class Strategy:
             log = TaskLog()
             log.checkpoint_period_s = ckpt
         stop = _Stopper(run)
+        # engine snapshots (repro.core.snapshot): the hook rides on the
+        # instance so subclassed `_loop` signatures stay untouched; loops
+        # read it back with getattr. Resume restores the log / stopper /
+        # learner here (they are built above); the loop-local state is
+        # restored by `_loop` itself.
+        self._snap = snap
+        if snap is not None and snap.resume is not None:
+            snap.resume.restore_log(log)
+            snap.resume.restore_stopper(stop)
+            snap.resume.restore_learner(learner)
         t, rounds, ppl = self._loop(model_cfg, fed, learner, sampler, log,
                                     stop, on_round)
         return TaskResult(log, est.estimate(log), stop.reached, rounds,
@@ -327,6 +338,7 @@ class SyncStrategy(Strategy):
 
     def _loop(self, model_cfg, fed, learner, sampler, log, stop, on_round):
         assert fed.mode == "sync"
+        snap = getattr(self, "_snap", None)
         rng = np.random.default_rng(fed.seed + 1)
         t = 0.0
         rounds = 0
@@ -343,8 +355,22 @@ class SyncStrategy(Strategy):
         # consecutive starved rounds abort the task outright
         quorum = max(1, int(np.ceil(fed.min_report_fraction * goal)))
         streak = 0
+        if snap is not None and snap.engine_state is not None:
+            # resume at a round boundary: the saved RNG state was captured
+            # before the round's cohort draw, so selection replays exactly
+            es = snap.engine_state
+            t = float(es["t"])
+            rounds = int(es["rounds"])
+            ppl = float(es["ppl"])
+            streak = int(es["streak"])
+            rng.bit_generator.state = es["rng_state"]
 
         while True:
+            if snap is not None:
+                snap.tick(rounds, lambda: (
+                    dict(t=t, rounds=rounds, ppl=ppl, streak=streak,
+                         rng_state=rng.bit_generator.state), None),
+                    log, learner, stop)
             cohort = _select_cohort(rng, ndisp, population=_POPULATION)
             if sampler.has_faults or (sampler.has_avail
                                       and fed.retry_limit > 0):
@@ -726,6 +752,11 @@ class SyncStrategy(Strategy):
 _DEFERRED = ("cid", "ver", "start", "d", "c", "u", "bd", "bu",
              "dev", "ctry", "out")
 
+# canonical in-flight column order (what `_async_rows` returns) — the
+# engine-snapshot payload stores/restores the flight dict by these keys
+_FLIGHT_FIELDS = ("slot", "gen", "cid", "ver", "start", "end", "d", "c",
+                  "u", "bd", "bu", "dev", "ctry", "out", "ok", "att", "nrem")
+
 
 def _async_rows(slots: np.ndarray, gens: np.ndarray, version: int,
                 batch: SessionBatch, ok: np.ndarray,
@@ -870,36 +901,69 @@ class AsyncStrategy(Strategy):
         F, R = OUTCOME_CODE["failed"], OUTCOME_CODE["retried"]
         I = OUTCOME_CODE["interrupted"]
 
-        # initial cohort: batched plan/resolve with jittered starts, in
-        # bounded chunks at population scale (row-pure, so chunking is
-        # bit-identical); slot s starts out running cohort[s] at
-        # generation 0
-        cohort = _select_cohort(rng, conc, population=_POPULATION)
-        starts0 = rng.uniform(0, 5.0, size=conc)
-        flight: Optional[Dict[str, np.ndarray]] = None
-        for lo in range(0, conc, _DISPATCH_CHUNK):
-            sc = slice(lo, min(lo + _DISPATCH_CHUNK, conc))
-            pb0 = sampler.plan_batch(cohort[sc], version)
-            b0, ok0 = sampler.resolve_batch(pb0, version, starts0[sc])
-            nr0 = _retry_rem(b0.outcome, pb0.compute_s, b0.compute_s,
-                             np.ones(len(ok0)), fed.checkpoint_period_s) \
-                if salv_on else None
-            rows = _async_rows(np.arange(sc.start, sc.stop, dtype=np.int64),
-                               np.zeros(sc.stop - sc.start, np.int64),
-                               version, b0, ok0, nrem=nr0)
-            if flight is None and conc <= _DISPATCH_CHUNK:
-                flight = rows
-                break
-            if flight is None:
-                flight = {f: np.empty(conc, a.dtype)
-                          for f, a in rows.items()}
-            for f, a in rows.items():
-                flight[f][sc] = a
-        alive = np.ones(conc, bool)
+        snap = getattr(self, "_snap", None)
+        if snap is not None and snap.engine_state is not None:
+            # resume at a window boundary: the flight columns + scalars
+            # are the whole loop state (the init RNG below this point is
+            # never consumed again, and every later draw is counter-keyed)
+            es = snap.engine_state
+            t = float(es["t"])
+            version = int(es["version"])
+            ppl = float(es["ppl"])
+            alive = np.asarray(es["alive"], bool).copy()
+            flight = {f: np.asarray(es["flight_" + f]).copy()
+                      for f in _FLIGHT_FIELDS}
+            sb = snap.sink_batch()
+            if sb is not None and acc is not log:
+                # pre-checkpoint pops re-enter the staging sink (streaming
+                # folds were restored into the log itself by Strategy.run)
+                acc.append(client_id=sb.client_id, round_idx=sb.round_idx,
+                           device_idx=sb.device_idx,
+                           country_idx=sb.country_idx,
+                           download_s=sb.download_s, compute_s=sb.compute_s,
+                           upload_s=sb.upload_s, bytes_down=sb.bytes_down,
+                           bytes_up=sb.bytes_up, start_t=sb.start_t,
+                           end_t=sb.end_t, outcome=sb.outcome,
+                           staleness=sb.staleness)
+        else:
+            # initial cohort: batched plan/resolve with jittered starts, in
+            # bounded chunks at population scale (row-pure, so chunking is
+            # bit-identical); slot s starts out running cohort[s] at
+            # generation 0
+            cohort = _select_cohort(rng, conc, population=_POPULATION)
+            starts0 = rng.uniform(0, 5.0, size=conc)
+            flight: Optional[Dict[str, np.ndarray]] = None
+            for lo in range(0, conc, _DISPATCH_CHUNK):
+                sc = slice(lo, min(lo + _DISPATCH_CHUNK, conc))
+                pb0 = sampler.plan_batch(cohort[sc], version)
+                b0, ok0 = sampler.resolve_batch(pb0, version, starts0[sc])
+                nr0 = _retry_rem(b0.outcome, pb0.compute_s, b0.compute_s,
+                                 np.ones(len(ok0)), fed.checkpoint_period_s) \
+                    if salv_on else None
+                rows = _async_rows(
+                    np.arange(sc.start, sc.stop, dtype=np.int64),
+                    np.zeros(sc.stop - sc.start, np.int64),
+                    version, b0, ok0, nrem=nr0)
+                if flight is None and conc <= _DISPATCH_CHUNK:
+                    flight = rows
+                    break
+                if flight is None:
+                    flight = {f: np.empty(conc, a.dtype)
+                              for f, a in rows.items()}
+                for f, a in rows.items():
+                    flight[f][sc] = a
+            alive = np.ones(conc, bool)
 
         while True:
             if t >= max_t or version >= stop.run.max_rounds:
                 break
+            if snap is not None:
+                snap.tick(version, lambda: (
+                    dict(t=t, version=version, ppl=ppl, alive=alive,
+                         **{"flight_" + f: flight[f]
+                            for f in _FLIGHT_FIELDS}),
+                    None if acc is log else acc),
+                    log, learner, stop)
             t0 = t
             # ---- expansion phase: discover this window's arrivals -------
             # Chains are expanded against a cheap upper bound on the window

@@ -79,3 +79,17 @@ class SurrogateLearner:
         lo, hi = math.log(PPL_FLOOR), math.log(self._ppl0)
         prog = getattr(self, "_progress", 0.0)
         return math.exp(lo + (hi - lo) * math.exp(-prog))
+
+    # ------------------------------------------------------- snapshot state
+    def state(self) -> dict:
+        """The mutable training state (everything ``apply`` touches); the
+        quality surface itself is a pure function of the configs and is
+        rebuilt from the spec on resume."""
+        return {"updates": self.updates,
+                "staleness_ema": self._staleness_ema,
+                "progress": getattr(self, "_progress", 0.0)}
+
+    def load_state(self, state) -> None:
+        self.updates = int(state["updates"])
+        self._staleness_ema = float(state["staleness_ema"])
+        self._progress = float(state["progress"])

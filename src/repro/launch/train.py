@@ -74,8 +74,34 @@ def main(argv=None):
     p.add_argument("--save-spec", default="",
                    help="write the assembled ExperimentSpec JSON and exit")
     p.add_argument("--ckpt", default="")
+    p.add_argument("--checkpoint", default="",
+                   help="engine-snapshot path: checkpoint the mid-run "
+                        "engine state there (surrogate learner only)")
+    p.add_argument("--checkpoint-every", type=int, default=50,
+                   help="rounds between engine snapshots (with "
+                        "--checkpoint)")
+    p.add_argument("--resume", default="",
+                   help="resume from an engine snapshot (the spec "
+                        "travels inside it; other args are ignored)")
     p.add_argument("--json", default="")
     args = p.parse_args(argv)
+
+    if args.resume:
+        t0 = time.time()
+        res = Experiment.resume(
+            args.resume,
+            checkpoint_path=args.checkpoint or None,
+            checkpoint_every_rounds=args.checkpoint_every
+            if args.checkpoint else 0)
+        s = res.summary()
+        print(f"[train] resumed {args.resume} -> rounds={s['rounds']:.0f} "
+              f"ppl={s['perplexity']:.1f} "
+              f"carbon={s['carbon_total_kg']*1000:.2f} gCO2e "
+              f"(wall {time.time()-t0:.0f}s)")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(s, f, indent=1)
+        return 0
 
     spec = ExperimentSpec.load(args.spec) if args.spec else \
         spec_from_args(args)
@@ -89,7 +115,9 @@ def main(argv=None):
         print(f"[train] initial perplexity "
               f"{exp.build_learner().eval_perplexity():.1f}")
     t0 = time.time()
-    res = exp.run()
+    res = exp.run(checkpoint_path=args.checkpoint or None,
+                  checkpoint_every_rounds=args.checkpoint_every
+                  if args.checkpoint else 0)
     s = res.summary()
     arch = spec.model.arch or exp.model_config.name
     print(f"[train] {arch} {spec.federated.mode} rounds={s['rounds']:.0f} "
