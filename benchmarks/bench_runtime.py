@@ -55,6 +55,12 @@ workload so CI quick runs never clobber the full baseline:
   admission + exit-time scans per resolve), mid-session churn
   interruptions, checkpoint/resume salvage on the retry stream, and the
   salvaged/lost waste split — gated at 2x with its own history column.
+  ``carbon_aware_stress`` records the carbon-aware screening point
+  (PR 10): carbon-aware at goal == concurrency == 1000 (200 quick) with
+  BOTH diurnal grids live — time-resolved intensity schedules and
+  per-country eligibility curves — so every replacement dispatch pays
+  the full probe screen through the precompiled schedule-segment mask
+  tables; gated at 2x with its own history column.
   ``checkpoint_overhead`` records the engine-snapshot point (PR 9): the
   async fig5-scale run with ``checkpoint_every_rounds=50``; the
   ``overhead_ratio`` (checkpointed wall over the same run's wall minus
@@ -267,6 +273,42 @@ def _run_churn_stress(quick: bool) -> Dict:
             "salvaged_kg": c.salvaged_kg, "lost_kg": c.lost_kg}
 
 
+def _run_carbon_aware_stress(quick: bool) -> Dict:
+    """Columnar carbon-aware point with BOTH diurnal grids live at fig5
+    scale (PR 10): time-resolved intensity schedules on the clock AND
+    diurnal per-country eligibility curves, so every replacement
+    dispatch pays the full screen — probe stream, candidate country
+    draws, compiled segment-mask gather for the top-k intensity filter,
+    and the admission-uniform eligibility intersection. Gates the
+    precompiled schedule-segment screening in the hot loop."""
+    import dataclasses
+    from repro.core.availability import diurnal_availability
+    cfg = get_config("paper-charlm")
+    cfg.param_count()
+    conc = 200 if quick else 1000
+    fed = FederatedConfig(mode="carbon-aware", concurrency=conc,
+                          aggregation_goal=conc)
+    run = RunConfig(target_perplexity=175.0,
+                    max_rounds=80 if quick else 10_000)
+    env = Environment.preset("diurnal")
+    env = dataclasses.replace(env, availability=diurnal_availability(
+        tuple(env.country_mix)))
+    learner = SurrogateLearner(cfg, fed, run)
+    t0 = time.time()
+    res = get_strategy("carbon-aware").run(cfg, fed, run, learner,
+                                           sampler=env.sampler(cfg, fed, 64),
+                                           estimator=env.estimator())
+    wall = time.time() - t0
+    n = res.log.n_sessions
+    parts = res.log.participation()
+    return {"concurrency": conc, "aggregation_goal": conc,
+            "sessions": n, "wall_s": round(wall, 4),
+            "sessions_per_s": round(n / max(wall, 1e-9)),
+            "rounds": res.rounds,
+            "interrupted": parts.get("interrupted", 0),
+            "carbon_total_kg": res.carbon.total_kg}
+
+
 def _run_checkpoint_overhead(quick: bool) -> Dict:
     """Engine-snapshot cost (PR 9): the async fig5 point run through the
     `Experiment` surface with ``checkpoint_every_rounds=50``. A
@@ -418,6 +460,7 @@ def run_bench(quick: bool) -> Dict:
         "population_stress": population,
         "fault_stress": _run_fault_stress(quick),
         "churn_stress": _run_churn_stress(quick),
+        "carbon_aware_stress": _run_carbon_aware_stress(quick),
         "checkpoint_overhead": _run_checkpoint_overhead(quick),
     }
     # the engines must simulate the identical workload (seed-for-seed)
@@ -454,6 +497,11 @@ def check_regression(fresh: Dict, baseline: Dict) -> int:
         gates.append(("churn_stress",
                       baseline.get("churn_stress", {})
                       .get("sessions_per_s", 0), chn["sessions_per_s"]))
+    cas = fresh.get("carbon_aware_stress")
+    if cas:
+        gates.append(("carbon_aware_stress",
+                      baseline.get("carbon_aware_stress", {})
+                      .get("sessions_per_s", 0), cas["sessions_per_s"]))
     cko = fresh.get("checkpoint_overhead")
     if cko:
         if cko["overhead_ratio"] > CHECKPOINT_OVERHEAD_LIMIT:
@@ -553,6 +601,9 @@ def append_history(key: str, fresh: Dict, path: str) -> None:
     if "churn_stress" in fresh:
         row["churn_stress_sessions_per_s"] = \
             fresh["churn_stress"]["sessions_per_s"]
+    if "carbon_aware_stress" in fresh:
+        row["carbon_aware_stress_sessions_per_s"] = \
+            fresh["carbon_aware_stress"]["sessions_per_s"]
     if "checkpoint_overhead" in fresh:
         row["checkpoint_overhead_ratio"] = \
             fresh["checkpoint_overhead"]["overhead_ratio"]

@@ -25,10 +25,13 @@
 # refreshes BENCH_runtime.json + BENCH_history.json, and FAILS if the
 # columnar engine's quick sessions/sec regressed more than 2x against the
 # recorded baseline — overall or in any mode (sync, async and
-# carbon-aware are each gated separately). The bench also runs the
-# population_stress streaming-telemetry point (gated on peak RSS,
-# streaming parity and throughput) and the checkpoint_overhead point
-# (checkpointing every 50 windows must cost < 1.1x the plain wall).
+# carbon-aware are each gated separately, as are the fault_stress,
+# churn_stress and carbon_aware_stress points — the last one keeps the
+# precompiled schedule-segment screening honest with both diurnal grids
+# live). The bench also runs the population_stress streaming-telemetry
+# point (gated on peak RSS, streaming parity and throughput) and the
+# checkpoint_overhead point (checkpointing every 50 windows must cost
+# < 1.1x the plain wall).
 #
 # Step 5 runs the quick design-space sweep benchmark (lane-batched packs
 # vs sweep(workers=1) serial; summaries must match seed-for-seed) and

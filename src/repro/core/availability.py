@@ -68,11 +68,19 @@ def exit_times(tab: _VocabSchedule, idx, u, start) -> np.ndarray:
     """First task-clock time ``> start`` at which each row's eligibility
     curve falls to or below its admission draw ``u`` — the moment the
     device exits eligibility. Crossings only happen at schedule segment
-    boundaries (curves are piecewise constant), so this scans at most one
-    full cycle of boundaries; rows whose curve never dips to ``u``
-    (static rows with an admitted draw, or periodic curves that stay
-    above it) return ``+inf``. The scalar oracle calls this batch-of-1,
-    so serial, lane and oracle share the exact float sequence."""
+    boundaries (curves are piecewise constant), so the search space is
+    one cycle of boundaries ahead of ``start``; rows whose curve never
+    dips to ``u`` (static rows with an admitted draw, or periodic curves
+    that stay above it) return ``+inf``. The scan is a binary-lifting
+    descent over the table's compiled doubled-cycle min structure
+    (``exit_table``): from the current segment, greedily jump the widest
+    power-of-two span whose minimum stays above ``u`` — O(log nseg)
+    vectorized gathers instead of a Python loop over every segment. The
+    crossing *comparison* reads the stored segment values themselves, so
+    which boundary is hit is exactly the sequential scan's answer; each
+    row's result depends only on its own ``(idx, u, start)``, and the
+    scalar oracle calls this batch-of-1, so serial, lane and oracle
+    share the exact float sequence."""
     idx = np.asarray(idx, np.intp)
     u = np.asarray(u, np.float64)
     start = np.asarray(start, np.float64)
@@ -84,16 +92,21 @@ def exit_times(tab: _VocabSchedule, idx, u, start) -> np.ndarray:
     j0 = tab._segment(idx, r)
     seg = tab.seg_s[idx]
     nseg = tab.nseg[idx]
-    # absolute end of the current segment; += seg walks the boundaries
-    t_b = start + ((j0 + 1) * seg - r)
-    done = np.zeros(n, bool)
-    for k in range(1, int(tab.nseg.max()) + 1):
-        jk = (j0 + k) % nseg
-        v = tab.vals[idx, jk]
-        hit = ~done & (k <= nseg) & (v <= u)
-        out[hit] = t_b[hit]
-        done |= hit
-        t_b = t_b + seg
+    dv, st, m_levels = tab.exit_table()
+    w = dv.shape[1]
+    # pos = last boundary offset known crossing-free; search range is
+    # (j0, j0 + nseg] in doubled-cycle coordinates (k = nseg re-checks
+    # the starting segment one full day later)
+    end_pos = j0 + nseg
+    pos = j0.copy()
+    for m in range(m_levels - 1, -1, -1):
+        step = 1 << m
+        fits = pos + step <= end_pos
+        wmin = st[m][idx, np.minimum(pos + 1, w - 1)]
+        pos += np.where(fits & (wmin > u), step, 0)
+    k = pos + 1 - j0
+    hit = (k <= nseg) & (dv[idx, np.minimum(pos + 1, w - 1)] <= u)
+    out[hit] = (start + ((j0 + k) * seg - r))[hit]
     return out
 
 

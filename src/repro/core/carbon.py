@@ -111,6 +111,13 @@ class _VocabSchedule:
             [np.zeros((v, 1)), np.cumsum(self.vals, axis=1)],
             axis=1) * self.seg_s[:, None]
         self.cycle = self.prefix[np.arange(v), self.nseg]
+        # compiled screening tables, built lazily on first use:
+        #   _seg_cache  -> (breaks, vals_seg) global segment grid
+        #   _mask_cache -> k -> (S, V) "value <= k-th smallest" bool masks
+        #   _exit_cache -> binary-lifting min table for exit_times
+        self._seg_cache = None
+        self._mask_cache: Dict[int, np.ndarray] = {}
+        self._exit_cache = None
 
     def _segment(self, idx: np.ndarray, r: np.ndarray) -> np.ndarray:
         """Segment index for cycle-local seconds r in [0, 86400)."""
@@ -126,6 +133,87 @@ class _VocabSchedule:
         j = self._segment(idx, r)
         return np.where(self.dynamic[idx],
                         self.vals[idx, j], self.static[idx])
+
+    # ------------------------------------------------ compiled segment grid
+    def segment_table(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Global breakpoint grid over the 24 h cycle: ``(breaks,
+        vals_seg)`` where ``breaks`` is the sorted (S,) array of
+        cycle-local task-clock seconds at which ANY row's schedule
+        changes value (all rows' segment boundaries with their phase
+        offsets folded in, always including 0.0) and ``vals_seg`` is the
+        (S, V) matrix of every row's value on ``[breaks[s],
+        breaks[s+1])``. ``vals_seg`` is evaluated with ``at`` itself at
+        the breakpoints, so the table agrees with the per-row lookup by
+        construction; within a segment no row changes value, which is
+        what makes a single searchsorted a faithful stand-in for the
+        per-row mod/floor attribution."""
+        tab = self._seg_cache
+        if tab is None:
+            if self.any_dynamic:
+                pts = [np.mod(np.arange(int(self.nseg[i])) * self.seg_s[i]
+                              - self.phase_s[i], SECONDS_PER_DAY)
+                       for i in np.nonzero(self.dynamic)[0]]
+                breaks = np.unique(np.concatenate([[0.0], *pts]))
+            else:
+                breaks = np.zeros(1)
+            idx = np.arange(len(self.names), dtype=np.intp)
+            vals_seg = self.at(idx[None, :], breaks[:, None])
+            tab = self._seg_cache = (breaks, vals_seg)
+        return tab
+
+    def segment_at(self, t) -> np.ndarray:
+        """Global segment index for task-clock times ``t`` — one
+        searchsorted into the compiled breakpoint grid (O(log S) per
+        row) instead of per-row-per-country mod/floor work."""
+        breaks, _ = self.segment_table()
+        tl = np.mod(np.asarray(t, np.float64), SECONDS_PER_DAY)
+        # breaks[0] == 0.0 and tl >= 0, so the result is always >= 0
+        return np.searchsorted(breaks, tl, side="right") - 1
+
+    def allowed_masks(self, k: int) -> np.ndarray:
+        """(S, V) bool table: per global segment, which rows sit at or
+        below the segment's k-th smallest value. The threshold is the
+        VALUE ``partition(vals_seg[s], k-1)[k-1]`` — not an argpartition
+        rank — so tied values are all allowed, exactly like the direct
+        per-row ``intensity_at`` + partition screen; gathering a
+        precomputed row therefore reproduces the recomputed mask
+        bit-for-bit. Cached per k (the vocabulary is fixed per table,
+        and tables are cached per names tuple on the model)."""
+        m = self._mask_cache.get(k)
+        if m is None:
+            _, vals_seg = self.segment_table()
+            tau = np.partition(vals_seg, k - 1, axis=1)[:, k - 1:k]
+            m = self._mask_cache[k] = vals_seg <= tau
+        return m
+
+    def exit_table(self):
+        """Binary-lifting minimum table over the doubled per-row segment
+        values: ``(dv, st, M)`` where ``dv`` is (V, 2*kmax) with each
+        row's cycle written twice (pad +inf), ``st[m][i, p]`` is the min
+        of ``dv[i, p:p+2**m]`` and ``M = bit_length(max nseg)``. Lets
+        ``exit_times`` find each row's first boundary whose value dips
+        to its draw in O(log nseg) vectorized gathers instead of a
+        Python loop over every segment of the cycle."""
+        lut = self._exit_cache
+        if lut is None:
+            w = 2 * int(self.nseg.max())
+            v = len(self.names)
+            dv = np.full((v, w), np.inf)
+            for i in range(v):
+                ns = int(self.nseg[i])
+                dv[i, :ns] = self.vals[i, :ns]
+                dv[i, ns:2 * ns] = self.vals[i, :ns]
+            m_levels = int(self.nseg.max()).bit_length()
+            st = [dv]
+            h = 1
+            for _ in range(1, m_levels):
+                prev = st[-1]
+                cur = prev.copy()
+                cur[:, :w - h] = np.minimum(prev[:, :w - h], prev[:, h:])
+                st.append(cur)
+                h *= 2
+            lut = self._exit_cache = (dv, st, m_levels)
+        return lut
 
     def _cumulative(self, idx: np.ndarray, t: np.ndarray) -> np.ndarray:
         """∫_0^t intensity dt' for vocab rows idx (t in task-clock s)."""

@@ -1117,3 +1117,44 @@ class LaneSampler:
                                 + g * _U64(_GOLDEN))
         u_ = (h >> _U64(11)).astype(np.float64) * _INV53
         return (u_ * population).astype(np.int64)
+
+    def probe_uniforms(self, lane: np.ndarray, slots: np.ndarray,
+                       generations: np.ndarray, n: int) -> np.ndarray:
+        """Per-row-seed twin of the module-level ``probe_uniforms``."""
+        lane = np.asarray(lane, np.intp)
+        s = np.asarray(slots, dtype=np.uint64)
+        g = np.asarray(generations, dtype=np.uint64)
+        probe = np.arange(1, n + 1, dtype=np.uint64) * _U64(_PROBE_MIX)
+        with np.errstate(over="ignore"):
+            base0 = (self.seeds[lane] & _U64(0xFFFFFFFF)) \
+                * _U64(0x9E3779B9) + _U64(0x7F4A7C15)
+            base = base0 + s * _U64(_SLOT_MIX) + g * _U64(_GOLDEN)
+            h = _splitmix64_arr(base[:, None] + probe[None, :])
+        return (h >> _U64(11)).astype(np.float64) * _INV53
+
+    def country_draw(self, lane: np.ndarray,
+                     client_ids: Union[np.ndarray, Sequence[int]],
+                     round_idx: int) -> np.ndarray:
+        """Per-row-seed twin of ``SessionSampler.country_draw`` over the
+        pack's padded country-cumulative table (count-of-strictly-less ==
+        left searchsorted, pad 2.0 never counts)."""
+        lane = np.asarray(lane, np.intp)
+        cid = np.asarray(client_ids, np.int64).astype(np.uint64)
+        with np.errstate(over="ignore"):
+            base_r = ((self.seeds[lane] * _U64(1_000_003)
+                       + _U64(round_idx))
+                      & _U64(0xFFFFFFFF)) * _U64(2_654_435_761) \
+                + cid * _U64(97)
+            vals = _splitmix64_arr(base_r + _U64(_GOLDEN))
+        u1 = (vals >> _U64(11)).astype(np.float64) * _INV53
+        return (self._ccum2[lane] < u1[:, None]).sum(axis=1) \
+            .astype(np.int32)
+
+    def admission_uniforms(self, lane: np.ndarray,
+                           client_ids: Union[np.ndarray, Sequence[int]],
+                           round_idx: int) -> np.ndarray:
+        """Per-row-seed twin of ``SessionSampler.admission_uniforms``."""
+        lane = np.asarray(lane, np.intp)
+        cid = np.asarray(client_ids, np.int64)
+        return _uniforms_batch_rows(self.seeds[lane], cid,
+                                    round_idx + 3_000_000, 1)[:, 0]

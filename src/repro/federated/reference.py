@@ -84,7 +84,13 @@ def _carbon_pick(sampler: SessionSampler, est: CarbonEstimator,
     """Per-pop replacement picker for the carbon-aware oracle: delegates to
     the engine's own columnar ``carbon_pick_ids`` with a batch of one, so
     the oracle is keyed to the SAME probe draws / country screens and the
-    heap loop stays a pure event-order reference."""
+    heap loop stays a pure event-order reference. That call also shares
+    the engine's compiled schedule-segment tables
+    (``_VocabSchedule.segment_table``/``allowed_masks``), so the oracle's
+    batch-of-1 screen reads the exact float values the batched engine
+    gathers — pick identity holds by construction, not by luck. The
+    oracle never passes ``skip``: its retry rows are re-keyed before the
+    pick, so every row here is a live screen."""
     from repro.federated.runtime import carbon_pick_ids
 
     def pick(slot: int, gen: int, now: float, version: int) -> int:

@@ -58,6 +58,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Type
 import numpy as np
 
 from repro.configs.base import FederatedConfig, ModelConfig, RunConfig
+from repro.core.carbon import SECONDS_PER_DAY
 from repro.core.estimator import (CarbonBreakdown, CarbonEstimator,
                                   lane_carbon)
 from repro.core.streaming import StreamedLog
@@ -867,14 +868,21 @@ class AsyncStrategy(Strategy):
     # global arrival order — so the merge, the lane engine and the scalar
     # oracle keep replaying the same draws. The carbon-aware strategy
     # overrides these to screen candidates by grid intensity.
+    # ``skip`` marks rows whose ids the caller overwrites right after the
+    # call (the retry stream) — strategies with expensive screening use it
+    # to avoid paying for picks that are discarded. The cheap counter
+    # streams ignore it (masking would cost more than the draw).
     def _replacement_ids(self, sampler: SessionSampler, fed: FederatedConfig,
                          slots: np.ndarray, gens: np.ndarray,
-                         starts: np.ndarray, version: int) -> np.ndarray:
+                         starts: np.ndarray, version: int,
+                         skip: Optional[np.ndarray] = None) -> np.ndarray:
         return slot_stream_ids(fed.seed, slots, gens, _POPULATION)
 
     def _lane_replacement_ids(self, pack: "_LanePack", lane: np.ndarray,
                               slots: np.ndarray, gens: np.ndarray,
-                              starts: np.ndarray, version: int) -> np.ndarray:
+                              starts: np.ndarray, version: int,
+                              skip: Optional[np.ndarray] = None
+                              ) -> np.ndarray:
         return pack.lanes.slot_stream_ids(lane, slots, gens, _POPULATION)
 
     def _loop(self, model_cfg, fed, learner, sampler, log, stop, on_round):
@@ -1010,8 +1018,9 @@ class AsyncStrategy(Strategy):
                         rf, fed.retry_backoff_s * 2.0 ** prev_att, 0.0)
                 else:
                     att_n = np.zeros(len(need), np.int64)
-                ids_n = self._replacement_ids(sampler, fed, slots_n, gens_n,
-                                              starts_n, version)
+                ids_n = self._replacement_ids(
+                    sampler, fed, slots_n, gens_n, starts_n, version,
+                    skip=rf if retry_on else None)
                 if retry_on and rf.any():
                     ids_n[rf] = retry_stream_ids(fed.seed, slots_n[rf],
                                                  gens_n[rf], _POPULATION)
@@ -1332,8 +1341,9 @@ class AsyncStrategy(Strategy):
                         rf, retry_bo[lanes_n] * 2.0 ** prev_att, 0.0)
                 else:
                     att_n = np.zeros(len(need), np.int64)
-                ids_n = self._lane_replacement_ids(pack, lanes_n, slots_n,
-                                                   gens_n, starts_n, k)
+                ids_n = self._lane_replacement_ids(
+                    pack, lanes_n, slots_n, gens_n, starts_n, k,
+                    skip=rf if retry_on else None)
                 if retry_on and rf.any():
                     ids_n[rf] = lanes.retry_stream_ids(
                         lanes_n[rf], slots_n[rf], gens_n[rf], _POPULATION)
@@ -1518,7 +1528,8 @@ _CARBON_PROBES = 8   # candidate ids screened per dispatch
 
 def carbon_pick_ids(sampler: SessionSampler, intensity, fed: FederatedConfig,
                     slots: np.ndarray, gens: np.ndarray,
-                    starts, version: int) -> np.ndarray:
+                    starts, version: int,
+                    skip: Optional[np.ndarray] = None) -> np.ndarray:
     """Carbon-aware replacement ids, columnar: for each (slot, generation)
     dispatch, walk that slot's probe stream (``events.probe_uniforms``) and
     pick the first candidate whose deterministic country draw lands in the
@@ -1533,10 +1544,26 @@ def carbon_pick_ids(sampler: SessionSampler, intensity, fed: FederatedConfig,
     admissible low-carbon candidate fall back to the first admissible
     probe, then to the unscreened first probe.
 
+    Diurnal screening runs off the schedule's COMPILED segment grid
+    (``_VocabSchedule.segment_table``/``allowed_masks``): one searchsorted
+    per row plus a precomputed (segment, country) mask gather, instead of
+    evaluating all V countries' intensities per row and re-partitioning.
+    The precompute cannot change picks: the grid's segments are exactly
+    the maximal clock spans on which no country's schedule changes value,
+    the per-segment mask stores the same "value <= k-th smallest" screen
+    (a value threshold, never an argpartition rank, so tied intensities
+    resolve identically), and both admission uniforms and candidate
+    country draws stay untouched counter streams — so the compiled gather
+    answers with the very mask the direct per-row recompute would build.
+
     Every output is a pure per-row function of (seed, slot, generation,
     start clock, version) and the environment — never of batch grouping or
     global arrival order — so the serial loop, the lane-batched engine and
-    the scalar oracle replay identical picks, row for row."""
+    the scalar oracle replay identical picks, row for row. ``skip`` marks
+    rows whose result the caller will overwrite (the retry stream): they
+    take the unscreened first probe without paying for screening, which
+    is pick-identical because screening is row-local and their pick is
+    discarded anyway."""
     slots = np.asarray(slots, np.int64)
     gens = np.asarray(gens, np.int64)
     n = len(slots)
@@ -1546,11 +1573,22 @@ def carbon_pick_ids(sampler: SessionSampler, intensity, fed: FederatedConfig,
     k = min(int(fed.carbon_topk), len(names))
     if k >= len(names) and not sampler.has_avail:
         return cand[:, 0]
+    # exploration rows take the unscreened first probe regardless — skip
+    # their country/admission probe work up front (pick-identical)
+    live = u[:, 0] >= fed.carbon_explore
+    if skip is not None:
+        live &= ~skip
+    out = cand[:, 0].copy()
+    if not live.any():
+        return out
     starts = np.broadcast_to(np.asarray(starts, np.float64), (n,))
-    ctry = sampler.country_draw(cand.reshape(-1), version) \
-        .reshape(n, _CARBON_PROBES)
+    cd = cand[live]
+    stl = starts[live]
+    m = len(cd)
+    ctry = sampler.country_draw(cd.reshape(-1), version) \
+        .reshape(m, _CARBON_PROBES)
     if k >= len(names):
-        allowed = np.ones((n, _CARBON_PROBES), bool)
+        allowed = np.ones((m, _CARBON_PROBES), bool)
     else:
         # the allowed set is "intensity <= the k-th smallest" — a value
         # threshold, not an argpartition rank, so ties resolve identically
@@ -1564,23 +1602,166 @@ def carbon_pick_ids(sampler: SessionSampler, intensity, fed: FederatedConfig,
                                                      k - 1)[k - 1]
             allowed = allowed_row[ctry]
         else:
-            ci = intensity.intensity_at(names, starts[:, None])   # (n, V)
-            tau = np.partition(ci, k - 1, axis=1)[:, k - 1:k]
-            allowed = (ci <= tau)[np.arange(n)[:, None], ctry]
+            seg = tab.segment_at(stl)                    # (m,) grid rows
+            allowed = tab.allowed_masks(k)[seg[:, None], ctry]
     if sampler.has_avail:
-        ua = sampler.admission_uniforms(cand.reshape(-1), version) \
-            .reshape(n, _CARBON_PROBES)
-        e = sampler._avail_tab.at(ctry.reshape(-1),
-                                  np.repeat(starts, _CARBON_PROBES)) \
-            .reshape(n, _CARBON_PROBES)
+        ua = sampler.admission_uniforms(cd.reshape(-1), version) \
+            .reshape(m, _CARBON_PROBES)
+        av = sampler._avail_tab
+        if av.any_dynamic:
+            _, evals = av.segment_table()
+            e = evals[av.segment_at(stl)[:, None], ctry]
+        else:
+            e = av.static[ctry]
         adm = ua < e
         both = allowed & adm
         j = np.where(both.any(axis=1), np.argmax(both, axis=1),
                      np.where(adm.any(axis=1), np.argmax(adm, axis=1), 0))
     else:
         j = np.where(allowed.any(axis=1), np.argmax(allowed, axis=1), 0)
-    j[u[:, 0] < fed.carbon_explore] = 0
-    return cand[np.arange(n), j]
+    out[live] = cd[np.arange(m), j]
+    return out
+
+
+def _pad3(mats: List[np.ndarray], vmax: int, fill, dtype) -> np.ndarray:
+    """Stack ragged per-lane (S_i, V_i) tables into one padded
+    (L, S_max, V_max) block (the 2-D analogue of ``events._pad2``).
+    Pads are never gathered: segment indices stay < S_i and country
+    draws stay < V_i for each lane."""
+    smax = max(t.shape[0] for t in mats)
+    out = np.full((len(mats), smax, vmax), fill, dtype)
+    for i, t in enumerate(mats):
+        out[i, :t.shape[0], :t.shape[1]] = t
+    return out
+
+
+def _group_grids(breaks_list) -> Tuple[np.ndarray, List[np.ndarray]]:
+    """Group per-lane breakpoint grids by content so the per-wave segment
+    lookup runs one searchsorted per DISTINCT grid (sweep packs usually
+    share one or two environments), not one per lane. Lanes with no grid
+    (clock-independent screens) get group -1 / segment 0."""
+    grids: List[np.ndarray] = []
+    grp = np.full(len(breaks_list), -1, np.int64)
+    for i, b in enumerate(breaks_list):
+        if b is None:
+            continue
+        for g, e in enumerate(grids):
+            if e is b or np.array_equal(e, b):
+                grp[i] = g
+                break
+        else:
+            grids.append(b)
+            grp[i] = len(grids) - 1
+    return grp, grids
+
+
+class _LaneCarbonScreen:
+    """Pack-wide compiled carbon screen: per-lane explore floors and top-k
+    widths plus padded (lane, segment, country) allowed-mask and
+    eligibility tables, mirroring ``LaneSampler``'s padded fleet/country
+    tables — so one batched gather screens a whole multi-lane dispatch
+    wave instead of a Python loop of per-lane ``carbon_pick_ids`` calls.
+    Per lane the math is identical to ``carbon_pick_ids``: same
+    counter-keyed probe/country/admission draws (per-row-seed twins),
+    same compiled segment grids, same value-threshold masks. Non-avail
+    lanes screen admission against +inf eligibility — ``ua < inf`` is
+    always true, which collapses the shared formula to the
+    no-availability pick, row for row."""
+
+    def __init__(self, pack: "_LanePack"):
+        lanes = pack.lanes
+        ss = lanes.samplers
+        feds = pack.feds
+        ints = [t.estimator.intensity for t in pack.tasks]
+        n_lanes = pack.n_lanes
+        self.lanes = lanes
+        self.explore = np.asarray([f.carbon_explore for f in feds])
+        nv = np.asarray([len(s.country_names) for s in ss], np.int64)
+        self.kk = np.asarray([min(int(f.carbon_topk), int(v))
+                              for f, v in zip(feds, nv)], np.int64)
+        avail = np.asarray([s.has_avail for s in ss], bool)
+        # k covers the whole vocabulary and nothing gates admission:
+        # every pick is the unscreened first probe (the serial early-out)
+        self.trivial = (self.kk >= nv) & ~avail
+        amasks: List[np.ndarray] = []
+        abreaks: List[Optional[np.ndarray]] = []
+        for i in range(n_lanes):
+            tab = ints[i].vocab_schedule(ss[i].country_names)
+            k = int(self.kk[i])
+            if k >= int(nv[i]):
+                amasks.append(np.ones((1, int(nv[i])), bool))
+                abreaks.append(None)
+            elif not tab.any_dynamic:
+                row = tab.static <= np.partition(tab.static, k - 1)[k - 1]
+                amasks.append(row[None, :])
+                abreaks.append(None)
+            else:
+                amasks.append(tab.allowed_masks(k))
+                abreaks.append(tab.segment_table()[0])
+        evals: List[np.ndarray] = []
+        ebreaks: List[Optional[np.ndarray]] = []
+        for i in range(n_lanes):
+            if not avail[i]:
+                evals.append(np.full((1, int(nv[i])), np.inf))
+                ebreaks.append(None)
+            elif ss[i]._avail_tab.any_dynamic:
+                brk, ev = ss[i]._avail_tab.segment_table()
+                evals.append(ev)
+                ebreaks.append(brk)
+            else:
+                evals.append(ss[i]._avail_tab.static[None, :])
+                ebreaks.append(None)
+        vmax = int(nv.max())
+        self.amask = _pad3(amasks, vmax, False, bool)
+        self.evals = _pad3(evals, vmax, np.inf, np.float64)
+        self.agrp, self.agrids = _group_grids(abreaks)
+        self.egrp, self.egrids = _group_grids(ebreaks)
+
+    def _segments(self, grp: np.ndarray, grids: List[np.ndarray],
+                  li: np.ndarray, tl: np.ndarray) -> np.ndarray:
+        seg = np.zeros(len(li), np.int64)
+        g_of = grp[li]
+        for g, brk in enumerate(grids):
+            rows = g_of == g
+            if rows.any():
+                seg[rows] = np.searchsorted(brk, tl[rows],
+                                            side="right") - 1
+        return seg
+
+    def pick(self, lane: np.ndarray, slots: np.ndarray, gens: np.ndarray,
+             starts, version: int,
+             skip: Optional[np.ndarray] = None) -> np.ndarray:
+        """Batched ``carbon_pick_ids`` across lanes (see class doc)."""
+        lanes = self.lanes
+        lane = np.asarray(lane, np.intp)
+        n = len(lane)
+        u = lanes.probe_uniforms(lane, slots, gens, _CARBON_PROBES + 1)
+        cand = (u[:, 1:] * _POPULATION).astype(np.int64)
+        out = cand[:, 0].copy()
+        live = (u[:, 0] >= self.explore[lane]) & ~self.trivial[lane]
+        if skip is not None:
+            live &= ~skip
+        if not live.any():
+            return out
+        starts = np.broadcast_to(np.asarray(starts, np.float64), (n,))
+        li = lane[live]
+        cd = cand[live]
+        m = len(li)
+        lrep = np.repeat(li, _CARBON_PROBES)
+        ctry = lanes.country_draw(lrep, cd.reshape(-1), version) \
+            .reshape(m, _CARBON_PROBES)
+        tl = np.mod(starts[live], SECONDS_PER_DAY)
+        sa = self._segments(self.agrp, self.agrids, li, tl)
+        allowed = self.amask[li[:, None], sa[:, None], ctry]
+        ua = lanes.admission_uniforms(lrep, cd.reshape(-1), version) \
+            .reshape(m, _CARBON_PROBES)
+        se = self._segments(self.egrp, self.egrids, li, tl)
+        adm = ua < self.evals[li[:, None], se[:, None], ctry]
+        both = allowed & adm
+        j = np.where(both.any(axis=1), np.argmax(both, axis=1),
+                     np.where(adm.any(axis=1), np.argmax(adm, axis=1), 0))
+        out[live] = cd[np.arange(m), j]
+        return out
 
 
 @register_strategy("carbon-aware")
@@ -1605,26 +1786,22 @@ class CarbonAwareStrategy(AsyncStrategy):
     (``reference.run_scalar``) and to its own lanes under
     ``sweep(vectorize=True)``."""
 
-    def _replacement_ids(self, sampler, fed, slots, gens, starts, version):
+    def _replacement_ids(self, sampler, fed, slots, gens, starts, version,
+                         skip=None):
         return carbon_pick_ids(sampler, self._estimator.intensity, fed,
-                               slots, gens, starts, version)
+                               slots, gens, starts, version, skip=skip)
 
     def _lane_replacement_ids(self, pack, lane, slots, gens, starts,
-                              version):
-        # per-lane sub-calls: each lane has its own seed, environment,
-        # country vocabulary and filter knobs. Picks are row-local, so
-        # slicing by lane cannot change any row's result.
-        lane = np.asarray(lane, np.intp)
-        starts = np.broadcast_to(np.asarray(starts, np.float64),
-                                 (len(lane),))
-        ids = np.empty(len(lane), np.int64)
-        for i in np.unique(lane):
-            m = lane == i
-            ids[m] = carbon_pick_ids(pack.lanes.samplers[i],
-                                     pack.tasks[i].estimator.intensity,
-                                     pack.feds[i], slots[m], gens[m],
-                                     starts[m], version)
-        return ids
+                              version, skip=None):
+        # one batched screen per dispatch wave over the pack's compiled
+        # per-lane mask tables (built once per run, cached on the pack).
+        # Picks are row-local — each row reads only its own lane's seed,
+        # grids and knobs — so batching across lanes cannot change any
+        # row's result vs a per-lane carbon_pick_ids call.
+        screen = pack.carbon_screen
+        if screen is None:
+            screen = pack.carbon_screen = _LaneCarbonScreen(pack)
+        return screen.pick(lane, slots, gens, starts, version, skip=skip)
 
     # explicit lane-pack opt-in (sweep._pack_key requires lane_loop in
     # cls.__dict__): the parent's lockstep loop dispatched through THIS
@@ -1715,6 +1892,8 @@ class _LanePack:
         self.ppl = np.asarray([float(t.model_cfg.vocab_size) for t in tasks])
         self.active = np.ones(self.n_lanes, bool)
         self.n_logged = np.zeros(self.n_lanes, np.int64)
+        # compiled carbon screen (built lazily by CarbonAwareStrategy)
+        self.carbon_screen: Optional["_LaneCarbonScreen"] = None
 
     def close_round(self, i: int, round_idx: int, mode: str,
                     starved: bool = False) -> None:

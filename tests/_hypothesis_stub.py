@@ -4,7 +4,8 @@ The CI image does not ship hypothesis; rather than skip the property
 tests we run each one against a deterministic pseudo-random sample of the
 declared strategy space. Only the subset the suite uses is implemented:
 ``given``, ``settings(max_examples=, deadline=)`` and the ``integers``,
-``floats`` and ``lists`` strategies. conftest.py registers this module as
+``floats``, ``lists``, ``booleans``, ``sampled_from``, ``composite`` and
+interactive ``data`` strategies. conftest.py registers this module as
 ``hypothesis`` in sys.modules only when the real package is missing, so
 installing hypothesis transparently upgrades the suite back to real
 property testing.
@@ -49,6 +50,39 @@ def lists(elements: _Strategy, min_size: int = 0,
     return _Strategy(
         lambda r: [elements.draw(r)
                    for _ in range(r.randint(min_size, max_size))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda r: r.choice(pool))
+
+
+def composite(fn):
+    """hypothesis' @composite: fn(draw, *args) -> value becomes a
+    strategy factory; ``draw`` pulls from other strategies inline."""
+    def factory(*args, **kwargs):
+        return _Strategy(
+            lambda r: fn(lambda s: s.draw(r), *args, **kwargs))
+    factory.__name__ = fn.__name__
+    return factory
+
+
+class _Data:
+    """Interactive draw object produced by st.data()."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.draw(self._rnd)
+
+
+def data() -> _Strategy:
+    return _Strategy(lambda r: _Data(r))
 
 
 def given(*strategies: _Strategy):
@@ -100,6 +134,10 @@ def install() -> None:
     st.integers = integers
     st.floats = floats
     st.lists = lists
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.composite = composite
+    st.data = data
     mod.given = given
     mod.settings = settings
     mod.strategies = st

@@ -1,0 +1,258 @@
+"""Precompiled schedule-segment screening (PR 10).
+
+The carbon-aware screen and the availability machinery now run off
+compiled per-schedule segment tables (``_VocabSchedule.segment_table`` /
+``allowed_masks`` / ``exit_table``) instead of per-row per-country
+recomputation. Invariants under test:
+
+* the global breakpoint grid + per-segment value matrix reproduce the
+  direct ``at``/``intensity_at`` lookup exactly on random schedules,
+  phases and clocks — including cycle-wrap boundaries (hypothesis);
+* the per-k allowed masks equal the direct "value <= k-th smallest"
+  partition screen, tied intensities included (hypothesis);
+* the vectorized ``exit_times`` descent finds exactly the boundary the
+  sequential segment scan finds (hypothesis);
+* ``carbon_pick_ids`` is bit-identical to the pre-compile per-row
+  screen (a literal reimplementation of the old path), and the ``skip``
+  mask only blanks the rows it names;
+* static-schedule and ``k >= len(names)`` runs keep their fast paths —
+  the segment machinery is never invoked (spied) and summaries stay
+  bit-for-bit.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.api import Environment, Experiment, ExperimentSpec, ModelRef
+from repro.configs import FederatedConfig, RunConfig
+from repro.core.availability import AvailabilityModel, exit_times
+from repro.core.carbon import (CARBON_INTENSITY, SECONDS_PER_DAY,
+                               IntensityModel, _VocabSchedule)
+from repro.federated.events import probe_uniforms
+from repro.federated.runtime import (_CARBON_PROBES, _POPULATION,
+                                     carbon_pick_ids)
+
+# nseg values whose segment length 86400/nseg is an exact integer, and
+# quarter-hour phases: with integer (or half-integer) clocks all the
+# mod/floor attribution arithmetic below is float-exact, so the compiled
+# grid and the direct lookup must agree to the bit, boundaries included
+_NSEGS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 96, 288)
+# small value pool so tied intensities are common (the screen's value
+# threshold must treat ties identically on both paths)
+_VALS = (45.0, 100.0, 200.0, 200.0, 300.0, 300.0, 475.0)
+_NAMES = tuple(list(CARBON_INTENSITY)[1:9])
+
+
+@st.composite
+def _schedules(draw):
+    scheds = {}
+    phases = {}
+    for c in _NAMES:
+        if draw(st.booleans()):
+            n = draw(st.sampled_from(_NSEGS))
+            scheds[c] = tuple(
+                draw(st.sampled_from(_VALS)) for _ in range(n))
+            phases[c] = draw(st.integers(-48, 56)) * 0.25   # quarter hours
+    return IntensityModel(schedule=scheds, phase_h=phases)
+
+
+@st.composite
+def _clocks(draw, model):
+    tab = model.vocab_schedule(_NAMES)
+    breaks, _ = tab.segment_table()
+    base = draw(st.lists(st.integers(0, 5 * 86400), min_size=1,
+                         max_size=40))
+    t = np.asarray(base, np.float64)
+    if draw(st.booleans()):
+        t = t + 0.5
+    # always exercise exact breakpoints and the cycle-wrap edge
+    day = draw(st.integers(0, 4)) * SECONDS_PER_DAY
+    return np.concatenate([t, breaks + day, [0.0, SECONDS_PER_DAY]])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_segment_table_matches_direct_lookup_property(data):
+    model = data.draw(_schedules())
+    t = data.draw(_clocks(model))
+    tab = model.vocab_schedule(_NAMES)
+    breaks, vals_seg = tab.segment_table()
+    assert breaks[0] == 0.0 and np.all(np.diff(breaks) > 0)
+    direct = model.intensity_at(_NAMES, t[:, None])          # (n, V)
+    gathered = vals_seg[tab.segment_at(t)]
+    assert np.array_equal(direct, gathered)
+    k = data.draw(st.integers(1, len(_NAMES)))
+    tau = np.partition(direct, k - 1, axis=1)[:, k - 1:k]
+    assert np.array_equal(direct <= tau,
+                          tab.allowed_masks(k)[tab.segment_at(t)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_exit_times_descent_matches_sequential_scan_property(data):
+    model = data.draw(_schedules())
+    tab = model.vocab_schedule(_NAMES)
+    n = data.draw(st.integers(1, 60))
+    seed = data.draw(st.integers(0, 2**31))
+    rng = np.random.default_rng(seed)
+    # the engine only queries dynamic rows (static rows are masked out
+    # before the call) — match that contract
+    dyn = np.nonzero(tab.dynamic)[0]
+    if len(dyn) == 0:
+        return
+    idx = rng.choice(dyn, n)
+    # eligibility-style draws, biased into the value pool so exact
+    # <=-at-a-tie crossings are exercised too
+    u = np.where(rng.random(n) < 0.3,
+                 rng.choice(np.asarray(_VALS), n), rng.uniform(0, 500, n))
+    start = rng.integers(0, 4 * 86400, n).astype(np.float64)
+    got = exit_times(tab, idx, u, start)
+
+    # sequential reference: walk every boundary of one full cycle
+    r = np.mod(start + tab.phase_s[idx], SECONDS_PER_DAY)
+    j0 = tab._segment(idx, r)
+    seg = tab.seg_s[idx]
+    nseg = tab.nseg[idx]
+    ref = np.full(n, np.inf)
+    for i in range(n):
+        for k in range(1, int(nseg[i]) + 1):
+            if tab.vals[idx[i], (j0[i] + k) % nseg[i]] <= u[i]:
+                ref[i] = start[i] + ((j0[i] + k) * seg[i] - r[i])
+                break
+    assert np.array_equal(np.isinf(ref), np.isinf(got))
+    fin = np.isfinite(ref)
+    assert np.array_equal(ref[fin], got[fin])
+
+
+# --------------------------------------------------------- pick identity
+class _Sampler:
+    """Minimal stand-in for the pick path: deterministic country draw,
+    no availability (the screen's availability leg is covered by the
+    engine-level tests in test_availability.py)."""
+    country_names = _NAMES
+    has_avail = False
+
+    def country_draw(self, ids, version):
+        return (np.asarray(ids) % len(_NAMES)).astype(np.int32)
+
+
+def _legacy_pick_ids(sampler, intensity, fed, slots, gens, starts, version):
+    """The pre-compile per-row screen, verbatim: (n, V) intensity_at +
+    partition per row."""
+    slots = np.asarray(slots, np.int64)
+    gens = np.asarray(gens, np.int64)
+    n = len(slots)
+    u = probe_uniforms(fed.seed, slots, gens, _CARBON_PROBES + 1)
+    cand = (u[:, 1:] * _POPULATION).astype(np.int64)
+    names = sampler.country_names
+    k = min(int(fed.carbon_topk), len(names))
+    starts = np.broadcast_to(np.asarray(starts, np.float64), (n,))
+    ctry = sampler.country_draw(cand.reshape(-1), version) \
+        .reshape(n, _CARBON_PROBES)
+    ci = intensity.intensity_at(names, starts[:, None])
+    tau = np.partition(ci, k - 1, axis=1)[:, k - 1:k]
+    allowed = (ci <= tau)[np.arange(n)[:, None], ctry]
+    j = np.where(allowed.any(axis=1), np.argmax(allowed, axis=1), 0)
+    j[u[:, 0] < fed.carbon_explore] = 0
+    return cand[np.arange(n), j]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_compiled_pick_matches_legacy_per_row_screen_property(data):
+    model = data.draw(_schedules())
+    fed = FederatedConfig(mode="carbon-aware",
+                          carbon_topk=data.draw(st.integers(1, 7)),
+                          carbon_explore=data.draw(
+                              st.sampled_from([0.0, 0.1, 0.5])),
+                          seed=data.draw(st.integers(0, 10_000)))
+    n = data.draw(st.integers(1, 50))
+    rng = np.random.default_rng(fed.seed + 1)
+    slots = rng.integers(0, 512, n)
+    gens = rng.integers(1, 40, n)
+    starts = rng.integers(0, 3 * 86400, n).astype(np.float64) \
+        + data.draw(st.sampled_from([0.0, 0.5]))
+    s = _Sampler()
+    new = carbon_pick_ids(s, model, fed, slots, gens, starts, 3)
+    old = _legacy_pick_ids(s, model, fed, slots, gens, starts, 3)
+    assert np.array_equal(new, old)
+    # skip only blanks the rows it names (they take the first probe);
+    # every other row is untouched — batch composition never leaks
+    skip = rng.random(n) < 0.4
+    skipped = carbon_pick_ids(s, model, fed, slots, gens, starts, 3,
+                              skip=skip)
+    assert np.array_equal(skipped[~skip], new[~skip])
+    u = probe_uniforms(fed.seed, np.asarray(slots, np.int64),
+                       np.asarray(gens, np.int64), _CARBON_PROBES + 1)
+    first = (u[:, 1:] * _POPULATION).astype(np.int64)[:, 0]
+    assert np.array_equal(skipped[skip], first[skip])
+
+
+# ------------------------------------------------------ fast-path spies
+def _spec(env, topk=3, seed=7):
+    return ExperimentSpec(
+        model=ModelRef("paper-charlm"),
+        federated=FederatedConfig(mode="carbon-aware", concurrency=40,
+                                  aggregation_goal=30, seed=seed,
+                                  carbon_topk=topk),
+        run=RunConfig(target_perplexity=175.0, max_rounds=10),
+        environment=env, learner="surrogate")
+
+
+def _count_calls(monkeypatch, cls, names):
+    counts = {m: 0 for m in names}
+    for m in names:
+        orig = getattr(cls, m)
+
+        def spy(self, *a, _m=m, _orig=orig, **kw):
+            counts[_m] += 1
+            return _orig(self, *a, **kw)
+
+        monkeypatch.setattr(cls, m, spy)
+    return counts
+
+
+def test_static_schedule_keeps_fast_path_and_stays_bit_identical(
+        monkeypatch):
+    base = Experiment(_spec(Environment())).run().summary()
+    counts = _count_calls(monkeypatch, _VocabSchedule,
+                          ["segment_table", "segment_at", "allowed_masks"])
+    spied = Experiment(_spec(Environment())).run().summary()
+    assert spied == base
+    assert counts == {"segment_table": 0, "segment_at": 0,
+                      "allowed_masks": 0}
+
+
+def test_diurnal_schedule_does_use_the_segment_tables(monkeypatch):
+    counts = _count_calls(monkeypatch, _VocabSchedule,
+                          ["segment_at", "allowed_masks"])
+    Experiment(_spec(Environment.preset("diurnal"))).run()
+    assert counts["segment_at"] > 0 and counts["allowed_masks"] > 0
+
+
+def test_topk_covering_vocab_skips_screening_entirely(monkeypatch):
+    env = Environment.preset("diurnal")
+    # topk == the full country vocabulary: nothing to screen
+    spec = _spec(env, topk=len(env.country_mix))
+    base = Experiment(spec).run().summary()
+    from repro.federated.events import SessionSampler
+    counts = _count_calls(monkeypatch, SessionSampler,
+                          ["country_draw", "admission_uniforms"])
+    seg_counts = _count_calls(monkeypatch, _VocabSchedule, ["segment_at"])
+    spied = Experiment(spec).run().summary()
+    assert spied == base
+    assert counts == {"country_draw": 0, "admission_uniforms": 0}
+    assert seg_counts == {"segment_at": 0}
+
+
+def test_eligibility_segment_gather_matches_at():
+    av = AvailabilityModel(
+        eligibility_schedule={c: (0.95, 0.9, 0.5, 0.3, 0.4, 0.6, 0.8, 0.9)
+                              for c in _NAMES[:5]},
+        eligibility_phase_h={c: i * 0.5
+                             for i, c in enumerate(_NAMES[:5])})
+    tab = av.eligibility_table(_NAMES)
+    rng = np.random.default_rng(3)
+    t = rng.integers(0, 5 * 86400, 2000).astype(np.float64)
+    ctry = rng.integers(0, len(_NAMES), 2000)
+    _, evals = tab.segment_table()
+    assert np.array_equal(tab.at(ctry, t), evals[tab.segment_at(t), ctry])
